@@ -1,0 +1,70 @@
+"""Shared benchmark fixtures: one small trained model + calibration context,
+built once per process."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STATE = {}
+
+
+def timed(fn, *args, reps=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6, out   # us
+
+
+def trained_model(steps: int = 60, seq: int = 64, batch: int = 8):
+    """Train the reduced llama3.1 config on synthetic data (cached)."""
+    key = ("trained", steps, seq, batch)
+    if key not in _STATE:
+        from repro.launch.train import train
+        params, cfg, data_cfg, hist, final = train(
+            arch="llama31_8b", use_reduced=True, steps=steps, batch=batch,
+            seq=seq, lr=3e-3, log=lambda *a: None)
+        _STATE[key] = (params, cfg, data_cfg, hist, final)
+    return _STATE[key]
+
+
+def calib_context():
+    if "ctx" not in _STATE:
+        from repro.core import calibration
+        from repro.data import SyntheticLM
+        params, cfg, data_cfg, _, _ = trained_model()
+        calib = SyntheticLM(dataclasses.replace(data_cfg, global_batch=4)
+                            ).batch(991)
+        batch = {"tokens": jnp.asarray(calib)}
+        _STATE["ctx"] = (calibration.build_context(params, cfg, batch),
+                         batch)
+    return _STATE["ctx"]
+
+
+def eval_metrics(params, cfg, data_cfg, per_depth_sp=None):
+    """Held-out PPL + KL + top-1 agreement vs dense."""
+    from repro.core import sparse_linear as sl
+    from repro.core import unstacked as U
+    from repro.data import eval_batch
+    toks = jnp.asarray(eval_batch(data_cfg, n=4))
+    mode = "mask" if per_depth_sp is not None else "off"
+    with sl.sparsity_mode(mode):
+        logits, _ = U.forward_unstacked(params, cfg, toks,
+                                        per_depth_sp=per_depth_sp)
+    dense_logits, _ = U.forward_unstacked(params, cfg, toks)
+    lg = logits[:, :-1].astype(jnp.float32)
+    lab = toks[:, 1:]
+    lse = jax.nn.logsumexp(lg, -1)
+    pick = jnp.take_along_axis(lg, lab[..., None], -1)[..., 0]
+    ppl = float(jnp.exp(jnp.mean(lse - pick)))
+    pd = jax.nn.log_softmax(dense_logits.astype(jnp.float32), -1)
+    ps = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    kl = float(jnp.mean(jnp.sum(jnp.exp(pd) * (pd - ps), -1)))
+    agree = float((jnp.argmax(logits, -1) == jnp.argmax(dense_logits, -1))
+                  .mean())
+    return {"ppl": ppl, "kl": kl, "top1_agree": agree}

@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (stdout) per the repo contract.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2]
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table1_accuracy",
+    "benchmarks.table2_ablation",
+    "benchmarks.fig3_sensitivity",
+    "benchmarks.fig4_efficiency",
+    "benchmarks.fig6_alpha",
+    "benchmarks.roofline_report",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    import importlib
+    all_rows = []
+    failed = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        print(f"# === {mod_name} ===", file=sys.stderr, flush=True)
+        try:
+            mod = importlib.import_module(mod_name)
+            rows = mod.run(log=lambda *a: print(*a, file=sys.stderr,
+                                                flush=True))
+            all_rows.extend(rows)
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod_name)
+    print("name,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

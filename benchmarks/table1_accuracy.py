@@ -1,0 +1,53 @@
+"""Paper Table 1 (proxy): accuracy-retention vs sparsity for the
+training-free methods, on the in-repo trained small LM.
+
+Methods: activation-only (TEAL-style |x| criterion), WINA-style (|x|*g,
+alpha=1, uniform), full WiSparse (searched alpha + mixed-granularity
+allocation).  Metric: held-out PPL and top-1 agreement with the dense
+model — the offline analogue of the paper's task-accuracy retention.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import calib_context, eval_metrics, trained_model
+from repro.core import pipeline
+from repro.core.allocation import EvoConfig
+
+
+def run(log=print):
+    params, cfg, data_cfg, _, _ = trained_model()
+    ctx, batch = calib_context()
+    rows = []
+    dense = eval_metrics(params, cfg, data_cfg, None)
+    log(f"dense: ppl={dense['ppl']:.3f}")
+    rows.append(("table1/dense/ppl", 0.0, f"{dense['ppl']:.4f}"))
+
+    evo = EvoConfig(generations=4, offspring=8, eps=0.1, seed=0)
+    for sparsity in (0.3, 0.4, 0.5):
+        t0 = time.time()
+        plans = {
+            "teal_act_only": pipeline.activation_only_plan(
+                params, cfg, batch, sparsity, ctx=ctx),
+            "wina_alpha1": pipeline.run_pipeline(
+                params, cfg, batch, sparsity, skip_coarse=True,
+                skip_fine=True, skip_alpha=True, alpha_default=1.0, ctx=ctx),
+            "wisparse_full": pipeline.run_pipeline(
+                params, cfg, batch, sparsity, evo=evo, delta=0.25,
+                coord_passes=0, ctx=ctx),
+        }
+        us = (time.time() - t0) * 1e6
+        for name, plan in plans.items():
+            m = eval_metrics(params, cfg, data_cfg, plan.per_depth_sp)
+            retention = dense["ppl"] / m["ppl"]
+            log(f"p={sparsity:.0%} {name:16s} ppl={m['ppl']:.3f} "
+                f"kl={m['kl']:.4f} agree={m['top1_agree']:.3f} "
+                f"retention={retention:.3f}")
+            rows.append((f"table1/{name}/p{int(sparsity*100)}", us,
+                         f"ppl={m['ppl']:.4f};kl={m['kl']:.5f};"
+                         f"agree={m['top1_agree']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    LayerKind,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    reduced,
+    runnable_cells,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "LayerKind",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "reduced",
+    "runnable_cells",
+]

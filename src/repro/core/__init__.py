@@ -1,0 +1,5 @@
+"""WiSparse core: the paper's contribution (scoring, alpha search,
+mixed-granularity allocation, calibration, sparse projection dispatch)."""
+from repro.core import sparse_linear
+
+__all__ = ["sparse_linear"]

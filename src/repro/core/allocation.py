@@ -1,0 +1,142 @@
+"""Mixed-granularity sparsity allocation (paper §4.3).
+
+Coarse (Alg. 3): evolutionary search over *block-level* prune ratios under a
+global average constraint; fitness is the token-level KL divergence between
+dense and sparse model outputs on the calibration set (Eq. 8).  Mutation is
+localized (a small fraction of blocks, fixed step eps), offspring-only, no
+crossover — per the paper's EvoPress-style setup.
+
+Fine (Alg. 4): within each block, a greedy loop adds sparsity increments to
+whichever linear layer increases the block's output reconstruction error
+the least, until the block meets its budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.calibration import CalibContext, Key
+
+
+@dataclasses.dataclass(frozen=True)
+class EvoConfig:
+    generations: int = 400          # paper §5.1
+    offspring: int = 64
+    eps: float = 0.005              # 0.5% mutation step
+    mutate_frac: float = 0.1        # 10% of blocks per mutation
+    max_sparsity: float = 0.95
+    seed: int = 0
+    elitist: bool = True
+
+
+def weighted_average(ctx: CalibContext, p: np.ndarray) -> float:
+    w = np.array([ctx.block_weight(d) for d in range(ctx.num_blocks)])
+    return float(np.sum(p * w) / np.sum(w))
+
+
+def _ratios_uniform_block(ctx: CalibContext, p: np.ndarray) -> Dict[Key, float]:
+    """All linears in block d share keep ratio 1-p[d] (coarse-stage view)."""
+    ratios = {}
+    for d in range(ctx.num_blocks):
+        for path in ctx.keys_by_depth[d]:
+            ratios[(d, path)] = 1.0 - float(p[d])
+    return ratios
+
+
+def block_level_allocation(ctx: CalibContext, p_target: float,
+                           cfg: EvoConfig = EvoConfig(),
+                           alphas: Optional[Dict[Key, float]] = None,
+                           log=None) -> np.ndarray:
+    """Alg. 3.  Returns per-block prune ratios p (averaging to p_target)."""
+    N = ctx.num_blocks
+    rng = np.random.default_rng(cfg.seed)
+    alphas = alphas or {}
+
+    def fitness(p):
+        sp = ctx.make_sp(alphas, _ratios_uniform_block(ctx, p))
+        return ctx.fitness(sp)
+
+    p = np.full(N, p_target, np.float64)
+    best_fit = fitness(p)
+    if log:
+        log(f"gen 0 uniform KL={best_fit:.6f}")
+
+    for gen in range(1, cfg.generations + 1):
+        offspring = []
+        for _ in range(cfg.offspring):
+            q = p.copy()
+            flips = max(1, int(round(N * cfg.mutate_frac)))
+            for b in rng.choice(N, flips, replace=False):
+                q[b] = min(q[b] + cfg.eps, cfg.max_sparsity)
+            guard = 0
+            while weighted_average(ctx, q) > p_target + 1e-9 and guard < 10000:
+                b = rng.integers(N)
+                q[b] = max(q[b] - cfg.eps, 0.0)
+                guard += 1
+            offspring.append(q)
+        fits = [fitness(q) for q in offspring]
+        i = int(np.argmin(fits))
+        if not cfg.elitist or fits[i] < best_fit:
+            p, best_fit = offspring[i], fits[i]
+        if log and (gen % max(1, cfg.generations // 10) == 0):
+            log(f"gen {gen} KL={best_fit:.6f} "
+                f"spread=[{p.min():.3f},{p.max():.3f}]")
+    return p
+
+
+def intra_block_allocation(ctx: CalibContext, depth: int, p_block: float,
+                           delta: float = 0.05,
+                           alphas: Optional[Dict[Key, float]] = None,
+                           max_sparsity: float = 0.95) -> Dict[Key, float]:
+    """Alg. 4.  Returns per-linear prune ratios for block `depth` whose
+    size-weighted average meets p_block."""
+    alphas = alphas or {}
+    paths = ctx.keys_by_depth[depth]
+    if not paths:
+        return {}
+    keys = [(depth, p) for p in paths]
+    sizes = np.array([ctx.sizes[k] for k in keys])
+    p = {k: 0.0 for k in keys}
+
+    def effective():
+        vals = np.array([p[k] for k in keys])
+        return float(np.sum(vals * sizes) / np.sum(sizes))
+
+    def block_err(trial):
+        from repro.core.alpha_search import _sp_for_block
+        ratios = {k: 1.0 - v for k, v in trial.items()}
+        sp = _sp_for_block(ctx, ctx.layers[depth], alphas, ratios)
+        return ctx.block_mse(depth, sp)
+
+    guard = 0
+    while effective() < p_block - 1e-9 and guard < 10000:
+        best_err, best_key = np.inf, None
+        for k in keys:
+            if p[k] + delta > max_sparsity:
+                continue
+            trial = dict(p)
+            trial[k] = p[k] + delta
+            err = block_err(trial)
+            if err < best_err:
+                best_err, best_key = err, k
+        if best_key is None:
+            break
+        p[best_key] += delta
+        guard += 1
+    return p
+
+
+def allocate(ctx: CalibContext, p_target: float,
+             evo: EvoConfig = EvoConfig(), delta: float = 0.05,
+             alphas: Optional[Dict[Key, float]] = None, log=None):
+    """Coarse-to-fine: returns (block_ratios p, per-linear prune ratios)."""
+    p = block_level_allocation(ctx, p_target, evo, alphas, log)
+    per_linear: Dict[Key, float] = {}
+    for d in range(ctx.num_blocks):
+        per_linear.update(intra_block_allocation(ctx, d, float(p[d]), delta,
+                                                 alphas))
+        if log:
+            log(f"block {d} fine allocation done (p_B={p[d]:.3f})")
+    return p, per_linear

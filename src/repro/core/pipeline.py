@@ -1,0 +1,140 @@
+"""Alg. 1 — the full WiSparse pipeline.
+
+    p_block  <- evolutionary block-level allocation        (Alg. 3)
+    p_layer  <- greedy intra-block allocation              (Alg. 4)
+    alpha    <- block-wise grid search                     (Alg. 2)
+    tau_l    <- Eq. 7 quantile at the final (alpha, ratio)
+
+Returns a ``SparsePlan`` holding per-depth sp dicts (calibration/eval form)
+plus the re-stacked sp tree the scanned production model consumes, and
+serialization helpers so a plan calibrated offline ships to the serving
+fleet as plain arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import alpha_search, allocation, unstacked as U
+from repro.core.calibration import CalibContext, Key, build_context
+from repro.core.allocation import EvoConfig
+
+
+@dataclasses.dataclass
+class SparsePlan:
+    cfg: ModelConfig
+    p_target: float
+    block_ratios: np.ndarray                  # per-block prune ratios
+    layer_ratios: Dict[Key, float]            # per-linear prune ratios
+    alphas: Dict[Key, float]
+    taus: Dict[Key, float]
+    per_depth_sp: list                        # calibration/unstacked form
+    stacked_sp: list                          # scan-model form
+
+    def summary(self) -> dict:
+        return {
+            "p_target": self.p_target,
+            "block_ratios": [round(float(x), 4) for x in self.block_ratios],
+            "mean_alpha": round(float(np.mean(list(self.alphas.values()))), 4)
+            if self.alphas else 0.0,
+        }
+
+    def save(self, path: str):
+        blob = {
+            "p_target": self.p_target,
+            "block_ratios": np.asarray(self.block_ratios).tolist(),
+            "layer_ratios": {f"{d}|{p}": v for (d, p), v
+                             in self.layer_ratios.items()},
+            "alphas": {f"{d}|{p}": v for (d, p), v in self.alphas.items()},
+            "taus": {f"{d}|{p}": v for (d, p), v in self.taus.items()},
+        }
+        with open(path, "w") as f:
+            json.dump(blob, f)
+
+    @staticmethod
+    def load_ratios(path: str):
+        with open(path) as f:
+            blob = json.load(f)
+        parse = lambda d: {(int(k.split("|")[0]), k.split("|")[1]): v
+                           for k, v in d.items()}
+        return (blob["p_target"], np.array(blob["block_ratios"]),
+                parse(blob["layer_ratios"]), parse(blob["alphas"]),
+                parse(blob["taus"]))
+
+
+def run_pipeline(params, cfg: ModelConfig, calib_batch, p_target: float,
+                 evo: EvoConfig = EvoConfig(), delta: float = 0.05,
+                 alpha_default: float = 1.0, coord_passes: int = 1,
+                 skip_coarse: bool = False, skip_fine: bool = False,
+                 skip_alpha: bool = False, log=None,
+                 ctx: Optional[CalibContext] = None) -> SparsePlan:
+    """Full WiSparse calibration.  The skip_* flags reproduce the paper's
+    Table-2 ablation rows (activation-only / +weight / +coarse / +fine)."""
+    log = log or (lambda *_: None)
+    if ctx is None:
+        log("building calibration context ...")
+        ctx = build_context(params, cfg, calib_batch)
+
+    # default alphas during allocation: the plain |x|*g rule (alpha=1, WINA
+    # -like) unless ablating weight-awareness entirely (alpha=0).
+    base_alpha = {(d, p): alpha_default for d in range(ctx.num_blocks)
+                  for p in ctx.keys_by_depth[d]}
+
+    if skip_coarse:
+        p_block = np.full(ctx.num_blocks, p_target)
+    else:
+        log("coarse search: evolutionary block-level allocation (Alg. 3)")
+        p_block = allocation.block_level_allocation(ctx, p_target, evo,
+                                                    base_alpha, log)
+
+    layer_ratios: Dict[Key, float] = {}
+    if skip_fine:
+        for d in range(ctx.num_blocks):
+            for p in ctx.keys_by_depth[d]:
+                layer_ratios[(d, p)] = float(p_block[d])
+    else:
+        log("fine search: greedy intra-block allocation (Alg. 4)")
+        for d in range(ctx.num_blocks):
+            layer_ratios.update(allocation.intra_block_allocation(
+                ctx, d, float(p_block[d]), delta, base_alpha))
+
+    keep_ratios = {k: 1.0 - v for k, v in layer_ratios.items()}
+
+    if skip_alpha:
+        alphas = dict(base_alpha)
+    else:
+        log("alpha search: block-wise grid (Alg. 2)")
+        alphas = alpha_search.search_all_alphas(
+            ctx, keep_ratios, coord_passes=coord_passes,
+            progress=lambda d, n: log(f"  alpha block {d + 1}/{n}"))
+
+    taus = {k: ctx.tau_for(k, alphas.get(k, 0.0), keep_ratios[k])
+            for k in layer_ratios}
+    per_depth_sp = ctx.make_sp(alphas, keep_ratios)
+    stacked_sp = U.restack_sp(cfg, per_depth_sp)
+    return SparsePlan(cfg, p_target, p_block, layer_ratios, alphas, taus,
+                      per_depth_sp, stacked_sp)
+
+
+def activation_only_plan(params, cfg: ModelConfig, calib_batch,
+                         p_target: float,
+                         ctx: Optional[CalibContext] = None) -> SparsePlan:
+    """TEAL-style baseline: alpha=0 (activation-only), uniform allocation.
+    The paper's 'Activation only' ablation row."""
+    if ctx is None:
+        ctx = build_context(params, cfg, calib_batch)
+    ratios = {(d, p): 1.0 - p_target for d in range(ctx.num_blocks)
+              for p in ctx.keys_by_depth[d]}
+    alphas = {k: 0.0 for k in ratios}
+    taus = {k: ctx.tau_for(k, 0.0, ratios[k]) for k in ratios}
+    per_depth_sp = ctx.make_sp(alphas, ratios)
+    return SparsePlan(cfg, p_target,
+                      np.full(ctx.num_blocks, p_target),
+                      {k: p_target for k in ratios}, alphas, taus,
+                      per_depth_sp, U.restack_sp(cfg, per_depth_sp))

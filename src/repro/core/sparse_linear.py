@@ -1,0 +1,219 @@
+"""WiSparse sparse-projection dispatch.
+
+``project(x, w, sp)`` is the single choke point through which every linear
+layer in the model zoo runs.  ``sp`` carries the per-layer WiSparse
+parameters (all traced arrays so they can ride through ``lax.scan`` over a
+stacked layer group):
+
+    g          (n_in,)  precomputed weight-column L2 norms  (paper Eq. 4)
+    alpha      ()       layer exponent alpha_l               (paper Eq. 4)
+    tau        ()       inference threshold tau_l            (paper Eq. 5)
+    keep_frac  ()       keep ratio 1 - p_l (gather backends)
+
+The *static* execution mode lives in a context var (set by the serving /
+calibration drivers), because backends differ in lowering:
+
+    off          dense matmul (baseline)
+    mask         per-token threshold mask, dense compute (paper-exact
+                 numerics; the calibration/eval path)
+    topk_shared  batched-serving gather path (DESIGN.md SS3.3): one
+                 weight-aware channel set per layer per step, shared across
+                 the batch; FLOPs and weight bytes shrink with sparsity and
+                 the op stays XLA-partitionable.
+    topk_block   like topk_shared but whole 128-channel blocks (the TPU
+                 block-granular scheme the Pallas kernel implements).
+    pallas       Pallas block-gather kernel (TPU target; interpret on CPU).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityMode:
+    mode: str = "off"            # off|mask|topk_shared|topk_block|pallas
+    k_max_frac: float = 1.0      # static upper bound on kept fraction
+    block: int = 128             # channel-block size (TPU lane width)
+    interpret: bool = True       # Pallas interpret mode (CPU container)
+
+
+_STATE = threading.local()
+
+
+def current_mode() -> SparsityMode:
+    return getattr(_STATE, "mode", None) or SparsityMode()
+
+
+@contextlib.contextmanager
+def sparsity_mode(mode: str = "mask", k_max_frac: float = 1.0,
+                  block: int = 128, interpret: bool = True):
+    prev = getattr(_STATE, "mode", None)
+    _STATE.mode = SparsityMode(mode, k_max_frac, block, interpret)
+    try:
+        yield _STATE.mode
+    finally:
+        _STATE.mode = prev
+
+
+@contextlib.contextmanager
+def capture_inputs():
+    """Calibration hook: record (id(w), x) for every projection executed
+    eagerly inside this context.  Used by repro.core.calibration to gather
+    per-linear input activations without instrumenting the models."""
+    prev = getattr(_STATE, "capture", None)
+    _STATE.capture = []
+    try:
+        yield _STATE.capture
+    finally:
+        _STATE.capture = prev
+
+
+def capture_active() -> bool:
+    return getattr(_STATE, "capture", None) is not None
+
+
+def record(w, x):
+    cap = getattr(_STATE, "capture", None)
+    if cap is not None and not isinstance(x, jax.core.Tracer):
+        cap.append((id(w), x))
+
+
+def _matmul(x, w):
+    """x (..., n_in) @ w (n_in, *out).
+
+    Output dtype == input dtype: a f32 preferred_element_type makes XLA
+    hoist the bf16 convert past the row-parallel all-reduce, doubling every
+    TP activation psum on the wire (EXPERIMENTS.md SSPerf iteration B2).
+    The MXU accumulates in f32 internally either way."""
+    return jax.lax.dot_general(
+        x.reshape(-1, x.shape[-1]), w.reshape(w.shape[0], -1),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype,
+    ).reshape(x.shape[:-1] + w.shape[1:])
+
+
+def scores(x, g, alpha):
+    """Weight-aware importance score  s_i = |x_i| * g_i^alpha  (Eq. 4)."""
+    gf = jnp.maximum(g.astype(jnp.float32), 1e-12)
+    return jnp.abs(x.astype(jnp.float32)) * jnp.power(gf, alpha)
+
+
+def project(x, w, sp: Optional[dict] = None, row_parallel: bool = False):
+    """row_parallel: statically marks weights whose *input* dim is
+    model-sharded (o_proj/down_proj/out_proj).  The top-k gather backends
+    then select a balanced per-shard channel budget so the gather stays
+    local instead of lowering to a cross-shard masked-gather + all-reduce
+    (DESIGN.md SS3 / EXPERIMENTS.md SSPerf iteration A3)."""
+    record(w, x)
+    mode = current_mode()
+    if sp is None or mode.mode == "off":
+        return _matmul(x, w)
+    if mode.mode == "mask":
+        s = scores(x, sp["g"], sp["alpha"])
+        m = (s >= sp["tau"]).astype(x.dtype)           # Eq. 5
+        return _matmul(x * m, w)
+    if mode.mode in ("topk_shared", "topk_block"):
+        groups = 1
+        if row_parallel:
+            from repro.distributed.sharding import current_ctx
+            ctx = current_ctx()
+            if ctx is not None:
+                sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+                g = sizes.get("model", 1)
+                if w.shape[0] % g == 0:
+                    groups = g
+        return _topk_gather(x, w, sp, mode, groups)
+    if mode.mode == "pallas":
+        from repro.kernels import ops as kops
+        return kops.wisparse_project(x, w, sp, block=mode.block,
+                                     interpret=mode.interpret)
+    raise ValueError(f"unknown sparsity mode {mode.mode}")
+
+
+def _topk_gather(x, w, sp, mode: SparsityMode, groups: int = 1):
+    """Shared-mask gather path: aggregate weight-aware scores over all
+    tokens in the call, keep the top k_max channels (static), mask ranks
+    beyond the layer's own traced keep_frac, gather the corresponding
+    weight rows and run a compact matmul.  FLOPs ~ k/n of dense.
+
+    groups > 1: balanced per-shard selection for row-parallel weights —
+    the channel budget is split evenly across `groups` contiguous input
+    slices (= the weight's model shards) so every gather is shard-local."""
+    if groups > 1:
+        return _topk_gather_grouped(x, w, sp, mode, groups)
+    n_in = w.shape[0]
+    xf = x.reshape(-1, n_in)
+    sal = scores(xf, sp["g"], sp["alpha"]).mean(axis=0)          # (n_in,)
+    if mode.mode == "topk_block":
+        b = mode.block
+        nb = max(n_in // b, 1)
+        if n_in % b:
+            pad = nb * b + b - n_in
+            sal = jnp.pad(sal, (0, pad))
+            nb += 1
+        blk = sal.reshape(nb, -1).sum(axis=1)
+        kb_max = max(1, round(nb * mode.k_max_frac))
+        _, bidx = jax.lax.top_k(blk, kb_max)
+        idx = (bidx[:, None] * b + jnp.arange(b)[None, :]).reshape(-1)
+        idx = jnp.minimum(idx, n_in - 1)
+        k_l = jnp.round(sp["keep_frac"] * nb).astype(jnp.int32)
+        rank_ok = (jnp.arange(kb_max) < k_l)
+        rank_ok = jnp.repeat(rank_ok, b)
+    else:
+        k_max = max(1, round(n_in * mode.k_max_frac))
+        _, idx = jax.lax.top_k(sal, k_max)
+        k_l = jnp.round(sp["keep_frac"] * n_in).astype(jnp.int32)
+        rank_ok = jnp.arange(k_max) < k_l
+    ws = jnp.take(w.reshape(n_in, -1), idx, axis=0)              # (k, m)
+    xs = jnp.take(xf, idx, axis=1) * rank_ok.astype(x.dtype)
+    y = jax.lax.dot_general(xs, ws, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return y.astype(x.dtype).reshape(x.shape[:-1] + w.shape[1:])
+
+
+def _topk_gather_grouped(x, w, sp, mode: SparsityMode, groups: int):
+    """Balanced grouped selection: reshape the input-channel dim into
+    (groups, n/groups), pick top-(k/groups) per group, gather within each
+    group (shard-local for model-sharded weight rows), contract per group
+    and sum.  Keeps the same global budget; selection is per-shard-balanced
+    (accuracy delta measured in benchmarks/table1)."""
+    n_in = w.shape[0]
+    G = groups
+    ng = n_in // G
+    xf = x.reshape(-1, n_in)
+    sal = scores(xf, sp["g"], sp["alpha"]).mean(axis=0).reshape(G, ng)
+    k_max = max(1, round(ng * mode.k_max_frac))
+    _, idx = jax.lax.top_k(sal, k_max)                    # (G, k)
+    k_l = jnp.round(sp["keep_frac"] * ng).astype(jnp.int32)
+    rank_ok = (jnp.arange(k_max) < k_l)[None, :]          # (1, k)
+    from repro.distributed.sharding import constrain
+    wg = constrain(w.reshape(G, ng, -1), "grouped_in", None, None)
+    ws = jnp.take_along_axis(wg, idx[:, :, None], axis=1)  # (G, k, m)
+    xg = xf.reshape(-1, G, ng)
+    xs = jnp.take_along_axis(xg, idx[None], axis=2)        # (B, G, k)
+    xs = xs * rank_ok[None].astype(xs.dtype)
+    y = jnp.einsum("bgk,gkm->bm", xs, ws,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype).reshape(x.shape[:-1] + w.shape[1:])
+
+
+def column_norms(w) -> jnp.ndarray:
+    """g_i = ||W[:, i]||_2 over all output dims; w: (n_in, *out)."""
+    wf = w.reshape(w.shape[0], -1).astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(wf * wf, axis=1))
+
+
+def default_sp(w) -> dict:
+    """Dense-equivalent sparsity params (alpha=0, tau=-inf, keep=1)."""
+    return {
+        "g": column_norms(w),
+        "alpha": jnp.zeros((), jnp.float32),
+        "tau": jnp.full((), -jnp.inf, jnp.float32),
+        "keep_frac": jnp.ones((), jnp.float32),
+    }

@@ -1,0 +1,149 @@
+"""Unstacked (per-depth python loop) model execution for calibration and
+search.  The scanned production model is great for compile time but opaque
+to per-block instrumentation; calibration instead unstacks the layer groups
+into a list of per-depth layers and reuses the exact same ``layer_apply``,
+so numerics are identical.
+
+Only used on calibration-scale models (the paper's offline stage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+# weight-leaf names WiSparse sparsifies (DESIGN.md SS5)
+SPARSIFIABLE = {
+    "wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wi",
+    "in_z", "in_x", "in_B", "in_C", "in_dt", "out_proj",
+}
+
+
+@dataclasses.dataclass
+class DepthLayer:
+    depth: int
+    kind: Tuple[str, str]            # (mixer, ffn)
+    group: int
+    rep: int
+    pos: int
+    params: dict
+
+
+def unstack_layers(cfg: ModelConfig, params) -> List[DepthLayer]:
+    layers, depth = [], 0
+    for gi, (pattern, reps) in enumerate(cfg.layer_groups()):
+        gp = params["groups"][gi]
+        for r in range(reps):
+            for j, kind in enumerate(pattern):
+                lp = jax.tree_util.tree_map(lambda a, r=r: a[r], gp[f"l{j}"])
+                layers.append(DepthLayer(depth, kind, gi, r, j, lp))
+                depth += 1
+    return layers
+
+
+def restack_sp(cfg: ModelConfig, per_depth_sp: List[Optional[dict]]):
+    """Per-depth sparsity dicts -> stacked group sp tree for the scan model."""
+    out, d = [], 0
+    for pattern, reps in cfg.layer_groups():
+        slots = [[] for _ in pattern]
+        for r in range(reps):
+            for j in range(len(pattern)):
+                slots[j].append(per_depth_sp[d])
+                d += 1
+        group = {}
+        for j in range(len(pattern)):
+            group[f"l{j}"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *slots[j])
+        out.append(group)
+    return out
+
+
+def sparsifiable_leaves(layer_params: dict, prefix: str = ""):
+    """Yield (path, weight) for sparsifiable linears within one layer."""
+    for k, v in sorted(layer_params.items()):
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            yield from sparsifiable_leaves(v, path + "/")
+        elif k in SPARSIFIABLE and v.ndim >= 2:
+            yield path, v
+
+
+def default_layer_sp(layer_params: dict):
+    """Dense-equivalent sp dict (alpha=0, tau=-inf, keep=1) mirroring the
+    sparsifiable subtree of one layer's params."""
+    from repro.core import sparse_linear as sl
+
+    def rec(d):
+        out = {}
+        for k, v in d.items():
+            if isinstance(v, dict):
+                sub = rec(v)
+                if sub:
+                    out[k] = sub
+            elif k in SPARSIFIABLE and v.ndim >= 2:
+                if v.ndim == 3:          # MoE (E, n_in, n_out): per-expert g
+                    g = jax.vmap(sl.column_norms)(v)
+                else:
+                    g = sl.column_norms(v)
+                out[k] = {"g": g,
+                          "alpha": jnp.zeros((), jnp.float32),
+                          "tau": jnp.full((), -jnp.inf, jnp.float32),
+                          "keep_frac": jnp.ones((), jnp.float32)}
+        return out
+
+    return rec(layer_params)
+
+
+def set_sp_leaf(sp: dict, path: str, key: str, value):
+    node = sp
+    parts = path.split("/")
+    for p in parts[:-1]:
+        node = node[p]
+    node[parts[-1]] = dict(node[parts[-1]])
+    node[parts[-1]][key] = jnp.asarray(value, jnp.float32)
+
+
+def get_sp_leaf(sp: dict, path: str) -> dict:
+    node = sp
+    for p in path.split("/"):
+        node = node[p]
+    return node
+
+
+def forward_unstacked(params, cfg: ModelConfig, tokens, *, layers=None,
+                      per_depth_sp=None, patch_embeds=None, frames=None,
+                      collect_block_inputs=False):
+    """Full forward via the python-loop layer list.  Returns
+    (logits, block_inputs or None)."""
+    layers = layers or unstack_layers(cfg, params)
+    enc_out = None
+    if cfg.family == "encdec" and frames is not None:
+        enc_out = M.encode(params, frames, cfg)
+    x = M.embed_tokens(params, tokens, cfg)
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    if cfg.family == "encdec":
+        from repro.models.layers import sinusoidal_positions
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model
+                                     ).astype(x.dtype)[None]
+    block_inputs = [] if collect_block_inputs else None
+    for dl in layers:
+        if collect_block_inputs:
+            block_inputs.append(x)
+        sp = per_depth_sp[dl.depth] if per_depth_sp is not None else None
+        x, _ = M.layer_apply(dl.params, x, cfg, dl.kind, sp, None, None,
+                             "train", enc_out)
+    x = M.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return M.lm_logits(params, x, cfg), block_inputs
+
+
+def block_forward(dl: DepthLayer, x, cfg: ModelConfig, sp=None, enc_out=None):
+    """One transformer block (paper's unit of sensitivity analysis)."""
+    out, _ = M.layer_apply(dl.params, x, cfg, dl.kind, sp, None, None,
+                           "train", enc_out)
+    return out

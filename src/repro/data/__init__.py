@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, SyntheticLM, eval_batch
+
+__all__ = ["DataConfig", "SyntheticLM", "eval_batch"]

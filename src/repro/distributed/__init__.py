@@ -1,0 +1,23 @@
+from repro.distributed.sharding import (
+    LOGICAL_RULES_SERVE,
+    LOGICAL_RULES_TRAIN,
+    ShardingCtx,
+    constrain,
+    current_ctx,
+    mesh_axes_for,
+    named_sharding,
+    param_shardings,
+    sharding_context,
+)
+
+__all__ = [
+    "LOGICAL_RULES_SERVE",
+    "LOGICAL_RULES_TRAIN",
+    "ShardingCtx",
+    "constrain",
+    "current_ctx",
+    "mesh_axes_for",
+    "named_sharding",
+    "param_shardings",
+    "sharding_context",
+]

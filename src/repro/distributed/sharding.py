@@ -1,0 +1,147 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Params and activations carry *logical* axis names (``"embed"``, ``"heads"``,
+``"mlp"``, ``"vocab"``, ``"experts"``, ``"batch"``, ``"kv_seq"``, ...).  A
+rules table maps each logical name to an ordered list of candidate mesh-axis
+tuples; the first candidate whose size divides the dim *and* whose mesh axes
+are not already taken by another dim of the same array wins.  An empty-tuple
+candidate means "replicate", which is the universal fallback — this is what
+lets every assigned architecture lower on the same production mesh (e.g.
+8 q-heads cannot shard over model=16 and silently fall back to replication
+while the MLP stays sharded).
+
+Rule sets differ by mode:
+  * TRAIN: FSDP-style — the ``embed`` (d_model) dim of weights additionally
+    shards over ``data`` so params/grads/optimizer state scale with the pod.
+  * SERVE: weights replicated over ``data`` for latency; KV-cache sequence
+    shards over spare axes (flash-decoding style).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Candidates = Tuple[Tuple[str, ...], ...]
+
+# logical axis -> ordered candidates (each a tuple of mesh axes)
+LOGICAL_RULES_TRAIN: Dict[str, Candidates] = {
+    "batch":      (("pod", "data"), ("data",), ()),
+    "vocab":      (("model",), ()),
+    "heads":      (("model",), ()),
+    "kv_heads":   (("model",), ()),
+    "heads_flat": (("model",), ()),      # fused H*hd dim of wq/wo
+    "kv_flat":    (("model",), ()),      # fused KV*hd dim of wk/wv
+    "mlp":        (("model",), ()),
+    "experts":    (("model",), ()),
+    "expert_mlp": (("model",), ()),       # used when num_experts % model != 0
+    "moe_capacity": (("model",), ()),     # dispatch token-slots (E indivisible)
+    "grouped_in": (("model",), ()),       # per-shard channel groups (sparse)
+    "embed":      (("data",), ()),        # FSDP dim in train mode
+    "embed_act":  ((),),                  # activations' d_model: replicated
+    "seq":        ((),),
+    "kv_seq":     ((),),
+    "ssm_heads":  (("model",), ()),
+    "layers":     ((),),
+}
+
+LOGICAL_RULES_SERVE: Dict[str, Candidates] = {
+    **LOGICAL_RULES_TRAIN,
+    "embed":  ((),),                      # replicate weights across data
+    # flash-decoding: shard the KV-cache sequence over whatever is spare
+    "kv_seq": (("data", "model"), ("model",), ("data",), ()),
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: Dict[str, Candidates]
+    overrides: Dict[str, Candidates] = dataclasses.field(default_factory=dict)
+
+    def candidates(self, name: str) -> Candidates:
+        if name in self.overrides:
+            return self.overrides[name]
+        return self.rules.get(name, ((),))
+
+
+_STATE = threading.local()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules=None, overrides=None):
+    prev = current_ctx()
+    rules = rules if rules is not None else LOGICAL_RULES_TRAIN
+    _STATE.ctx = ShardingCtx(mesh, dict(rules), dict(overrides or {}))
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def mesh_axes_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+                  ctx: Optional[ShardingCtx] = None) -> P:
+    """Resolve logical axes -> PartitionSpec with divisibility fallback."""
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        return P(*([None] * len(shape)))
+    mesh_sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    used = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        chosen = None
+        if name is not None:
+            for cand in ctx.candidates(name):
+                cand = tuple(a for a in cand if a in mesh_sizes)
+                if any(a in used for a in cand):
+                    continue
+                size = int(np.prod([mesh_sizes[a] for a in cand])) if cand else 1
+                if cand and dim % size != 0:
+                    continue
+                chosen = cand or None
+                break
+        if chosen:
+            used.update(chosen)
+            out.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def named_sharding(axes, shape, ctx=None) -> Optional[NamedSharding]:
+    ctx = ctx or current_ctx()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, mesh_axes_for(axes, shape, ctx))
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axes; no-op outside a context."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = mesh_axes_for(axes, x.shape, ctx)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def param_shardings(schema_axes, abstract, ctx=None):
+    """Map a logical-axes pytree + abstract pytree -> NamedSharding pytree."""
+    ctx = ctx or current_ctx()
+
+    def f(axes, aval):
+        return named_sharding(axes, aval.shape, ctx)
+
+    return jax.tree_util.tree_map(
+        f, schema_axes, abstract,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x),
+    )

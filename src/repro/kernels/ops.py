@@ -1,0 +1,52 @@
+"""Jit'd end-to-end WiSparse projection built on the Pallas kernels.
+
+This is the ``mode="pallas"`` backend of ``repro.core.sparse_linear``:
+  1. fused scoring + per-channel threshold mask (Eq. 4/5) + per-block
+     aggregate scores (score_mask kernel),
+  2. static-budget top-k block selection (k from the mode's k_max_frac;
+     ranks beyond the layer's traced keep_frac get their x zeroed, so the
+     per-layer allocation still binds),
+  3. block-gather matmul over exactly the kept blocks (sparse_matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import sparse_matmul as K
+
+
+def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = None,
+                     interpret: bool = True, per_seq: bool = False):
+    """x: (..., n); w: (n, *out).  Returns x W with WiSparse block sparsity."""
+    from repro.core.sparse_linear import current_mode
+    n = w.shape[0]
+    w2 = w.reshape(n, -1)
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, n)
+    blk = min(block, n)
+    while n % blk:
+        blk -= 1
+    nb = n // blk
+    kf = k_frac if k_frac is not None else current_mode().k_max_frac
+    kb = max(1, min(nb, round(nb * kf)))
+
+    xm, bs = K.score_mask(xf, sp["g"], sp["alpha"], sp["tau"], blk=blk,
+                          interpret=interpret)
+    _, idx = jax.lax.top_k(bs, kb)
+    # per-layer budget: zero blocks ranked past keep_frac*nb
+    kb_l = jnp.round(sp["keep_frac"] * nb).astype(jnp.int32)
+    rank_ok = jnp.arange(kb) < kb_l
+    keep_blocks = jnp.zeros((nb,), bool).at[idx].set(rank_ok)
+    xm = xm * jnp.repeat(keep_blocks, blk)[None].astype(xm.dtype)
+    # entries ranked past the budget keep their own (now-zeroed) block ids,
+    # so their kernel contribution is exactly zero
+
+    if per_seq:
+        y = K.sparse_matmul_per_seq(xm, w2, jnp.tile(idx, (xf.shape[0], 1)),
+                                    blk=blk, interpret=interpret)
+    else:
+        y = K.sparse_matmul_shared(xm, w2, idx, blk=blk, interpret=interpret)
+    return y.astype(x.dtype).reshape(lead + w.shape[1:])

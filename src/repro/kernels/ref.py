@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_sparse_matmul_shared(x, w, block_idx, blk: int):
+    """y = sum over kept blocks of x[:, blk_i] @ w[blk_i, :] in f32.
+    NOTE duplicate block ids contribute multiple times (pad contract: pad
+    entries must point at zeroed-x blocks)."""
+    B, n = x.shape
+    m = w.shape[1]
+    y = jnp.zeros((B, m), jnp.float32)
+    for i in range(block_idx.shape[0]):
+        b = block_idx[i]
+        xs = jax.lax.dynamic_slice(x, (0, b * blk), (B, blk))
+        ws = jax.lax.dynamic_slice(w, (b * blk, 0), (blk, m))
+        y = y + xs.astype(jnp.float32) @ ws.astype(jnp.float32)
+    return y
+
+
+def ref_sparse_matmul_per_seq(x, w, block_idx, blk: int):
+    def one(xb, idx):
+        return ref_sparse_matmul_shared(xb[None], w, idx, blk)[0]
+    return jax.vmap(one)(x, block_idx)
+
+
+def ref_score_mask(x, g, alpha, tau, blk: int):
+    gf = jnp.maximum(g.astype(jnp.float32), 1e-12)
+    s = jnp.abs(x.astype(jnp.float32)) * jnp.power(gf, alpha)
+    keep = s >= tau
+    xm = jnp.where(keep, x, jnp.zeros_like(x))
+    nb = x.shape[1] // blk
+    bs = jnp.where(keep, s, 0.0).sum(0).reshape(nb, blk).sum(-1)
+    return xm, bs
+
+
+def ref_wisparse_project(x, w, sp, k_blocks: int, blk: int):
+    """Full-op oracle: score -> mask -> top-k blocks (rank-limited by the
+    layer's keep_frac) -> gathered matmul."""
+    xm, bs = ref_score_mask(x, sp["g"], sp["alpha"], sp["tau"], blk)
+    _, idx = jax.lax.top_k(bs, k_blocks)
+    nb = x.shape[1] // blk
+    kb_l = jnp.round(sp["keep_frac"] * nb).astype(jnp.int32)
+    rank_ok = jnp.arange(k_blocks) < kb_l
+    keep_blocks = jnp.zeros((nb,), bool).at[idx].set(rank_ok)
+    xm = xm * jnp.repeat(keep_blocks, blk)[None].astype(xm.dtype)
+    return ref_sparse_matmul_shared(xm, w, idx, blk)

@@ -1,0 +1,167 @@
+"""Pallas TPU block-gather sparse matmul — the WiSparse decode kernel.
+
+TPU adaptation of the paper's TEAL-derived CUDA gather kernels (DESIGN.md
+SS3): input channels are grouped into blocks of `blk` (>=128, the lane
+width); a scalar-prefetch array lists the kept block ids and the grid
+iterates only over those, with ``BlockSpec.index_map`` remapping each grid
+step to the kept block's tile of W.  HBM->VMEM DMA traffic and MXU FLOPs
+both shrink by (kept blocks / total blocks).  Per-channel WiSparse masks
+are applied to x *before* the kernel (elementwise, free on the VPU), so
+numerics match the paper's Eq. 5 exactly while skipping stays
+block-granular.
+
+Two variants:
+  * shared  — one kept-block set for the whole batch (batched serving mode)
+  * per_seq — per-sequence block sets (the paper's per-token masks); W tiles
+    are re-fetched per sequence, which is exactly the batching cost the
+    paper's limitation section describes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLK = 128      # channel-block (lane) size
+DEFAULT_MT = 256       # output tile
+DEFAULT_BT = 8         # batch tile
+
+
+def _acc_kernel(idx_ref, x_ref, w_ref, o_ref):
+    """One (batch-tile, out-tile) x kept-block accumulation step."""
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def sparse_matmul_shared(x, w, block_idx, *, blk: int = DEFAULT_BLK,
+                         mt: int = DEFAULT_MT, bt: int = DEFAULT_BT,
+                         interpret: bool = True):
+    """y[b, :] = sum_{kept blocks i} x[b, blk_i] @ w[blk_i, :].
+
+    x: (B, n) already per-channel masked; w: (n, m); block_idx: (kb,) int32
+    kept channel-block ids (entries may repeat-pad with 0 iff the padded
+    lanes of x were zeroed).  Returns (B, m) float32.
+    """
+    B, n = x.shape
+    m = w.shape[1]
+    kb = block_idx.shape[0]
+    blk = min(blk, n)
+    assert n % blk == 0, (n, blk)
+    mt = min(mt, m)
+    while m % mt:
+        mt -= 1
+    bt = min(bt, B)
+    while B % bt:
+        bt -= 1
+
+    grid = (B // bt, m // mt, kb)
+    return pl.pallas_call(
+        _acc_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bt, blk), lambda b, j, i, idx: (b, idx[i])),
+                pl.BlockSpec((blk, mt), lambda b, j, i, idx: (idx[i], j)),
+            ],
+            out_specs=pl.BlockSpec((bt, mt), lambda b, j, i, idx: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, m), jnp.float32),
+        interpret=interpret,
+    )(block_idx, x, w)
+
+
+def _acc_kernel_perseq(idx_ref, x_ref, w_ref, o_ref):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def sparse_matmul_per_seq(x, w, block_idx, *, blk: int = DEFAULT_BLK,
+                          mt: int = DEFAULT_MT, interpret: bool = True):
+    """Per-sequence kept-block sets (paper's per-token masks).
+
+    x: (B, n) masked; w: (n, m); block_idx: (B, kb) int32.  Returns (B, m).
+    """
+    B, n = x.shape
+    m = w.shape[1]
+    kb = block_idx.shape[1]
+    blk = min(blk, n)
+    assert n % blk == 0
+    mt = min(mt, m)
+    while m % mt:
+        mt -= 1
+
+    grid = (B, m // mt, kb)
+    return pl.pallas_call(
+        _acc_kernel_perseq,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, blk), lambda b, j, i, idx: (b, idx[b, i])),
+                pl.BlockSpec((blk, mt), lambda b, j, i, idx: (idx[b, i], j)),
+            ],
+            out_specs=pl.BlockSpec((1, mt), lambda b, j, i, idx: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, m), jnp.float32),
+        interpret=interpret,
+    )(block_idx, x, w)
+
+
+def _score_mask_kernel(ab_ref, x_ref, g_ref, xm_ref, bs_ref):
+    """Fused WiSparse scoring: s=|x|*g^alpha, m=s>=tau, xm=x*m and the
+    per-channel-block aggregate score (for block selection)."""
+    alpha = ab_ref[0]
+    tau = ab_ref[1]
+    x = x_ref[...]
+    g = jnp.maximum(g_ref[...], 1e-12).astype(jnp.float32)
+    s = jnp.abs(x.astype(jnp.float32)) * jnp.power(g, alpha)
+    keep = s >= tau
+    xm_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+    bs_ref[0, 0] = jnp.sum(jnp.where(keep, s, 0.0))
+
+
+def score_mask(x, g, alpha, tau, *, blk: int = DEFAULT_BLK,
+               interpret: bool = True):
+    """Returns (x_masked (B,n), block_scores (n//blk,)) — Eq. 4/5 fused."""
+    B, n = x.shape
+    blk = min(blk, n)
+    assert n % blk == 0
+    nb = n // blk
+    ab = jnp.stack([jnp.asarray(alpha, jnp.float32),
+                    jnp.asarray(tau, jnp.float32)])
+    xm, bs = pl.pallas_call(
+        _score_mask_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((B, blk), lambda j, ab: (0, j)),
+                pl.BlockSpec((blk,), lambda j, ab: (j,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((B, blk), lambda j, ab: (0, j)),
+                pl.BlockSpec((1, 1), lambda j, ab: (j, 0)),
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((B, n), x.dtype),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(ab, x, g)
+    return xm, bs[:, 0]

@@ -1,0 +1,326 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits every computation exactly once, so a
+``lax.scan`` over 95 layers contributes one body's FLOPs (verified
+empirically — see EXPERIMENTS.md SSDry-run).  The optimized HLO, however,
+annotates every while loop with ``known_trip_count``, so we recover exact
+totals by walking the computation graph:
+
+  * multiplier(ENTRY) = 1; while body/condition inherit caller x trip_count;
+    fusion/to_apply/branch computations inherit the caller's multiplier.
+  * FLOPs: dot ops (2 x result x contracted dims) wherever they appear,
+    scaled by their computation's multiplier.
+  * bytes: HloCostAnalysis-style operand+output bytes per *top-level* op of
+    each computation (fusions are one op; internal traffic is free), with
+    gather/dynamic-slice reading only the touched elements, and
+    dynamic-update-slice writing only the update.  Control ops (while,
+    tuple, parameter, ...) move no bytes themselves.
+  * collectives: result bytes per op x multiplier (all-reduce counted 2x
+    at the wire, see roofline.wire_bytes).
+
+Validated against cost_analysis on scan-free modules (tests/test_roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*))\s+([\w-]+)")
+_CALLREF_RE = re.compile(r"(calls|to_apply|body|condition|branch_computations)="
+                         r"({[^}]*}|%[\w.-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":?\s*[{]\\?"n\\?":?\\?"(\d+)\\?"')
+_TRIP_RE2 = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "while",
+    "conditional", "call", "after-all", "bitcast", "partition-id",
+    "replica-id", "custom-call", "copy-start", "copy-done", "rng",
+    "iota", "get-dimension-size",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes over all shapes appearing in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+    fusion_callee: Optional[str] = None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    # edges: (callee_name, kind, trip)
+    calls: List[Tuple[str, str, int]]
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        # computation header:  %name (args) -> type {   /  ENTRY %name ...
+        if stripped.endswith("{") and ("(" in stripped) and "=" not in stripped.split("(")[0]:
+            header = stripped.split("(")[0].strip()
+            is_entry = header.startswith("ENTRY")
+            name = header.replace("ENTRY", "").strip().lstrip("%")
+            cur = Computation(name, [], [])
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        mo = _OPCODE_RE.match(rhs)
+        if not mo:
+            continue
+        result_type, opcode = mo.groups()
+        # strip trailing ".N" numeric suffixes fused into opcode tokens
+        op = Op(name, opcode, result_type, stripped)
+        cur.ops.append(op)
+        for ref in _CALLREF_RE.finditer(stripped):
+            kind, val = ref.groups()
+            callees = [c.strip().lstrip("%")
+                       for c in val.strip("{}").split(",")]
+            trip = 1
+            if opcode == "while" and kind == "body":
+                tm = _TRIP_RE.search(stripped) or _TRIP_RE2.search(stripped)
+                trip = int(tm.group(1)) if tm else 1
+            for c in callees:
+                if c:
+                    cur.calls.append((c, kind, trip))
+                    if kind == "calls":
+                        op.fusion_callee = c
+    if entry and entry != "__ENTRY__":
+        comps["__ENTRY__"] = comps[entry]
+    return comps
+
+
+def multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    entry = comps.get("__ENTRY__")
+    mult = {c: 0.0 for c in comps}
+    if entry is None:
+        # fall back: treat every computation once
+        return {c: 1.0 for c in comps}
+    mult[entry.name] = 1.0
+    # propagate along call edges (HLO computation graph is a DAG)
+    changed = True
+    iters = 0
+    while changed and iters < 10000:
+        changed = False
+        iters += 1
+        for c in comps.values():
+            if c.name == "__ENTRY__" or mult.get(c.name, 0.0) <= 0.0:
+                continue
+            m = mult[c.name]
+            for callee, kind, trip in c.calls:
+                if callee not in mult:
+                    continue
+                add = m * (trip if kind == "body" else 1.0)
+                if add > mult[callee]:
+                    mult[callee] = add
+                    changed = True
+    return mult
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    result_bytes_dims = _SHAPE_RE.findall(op.result_type)
+    if not result_bytes_dims:
+        return 0.0
+    _, dims = result_bytes_dims[0]
+    out_elems = 1
+    for d in dims.split(","):
+        if d:
+            out_elems *= int(d)
+    # contracted size from lhs shape + lhs_contracting_dims
+    opnds = re.search(r"\b" + re.escape(op.opcode) + r"\(([^)]*)\)", op.line)
+    mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    contract = 1
+    if opnds and mcd:
+        first = opnds.group(1).split(",")[0].strip().lstrip("%")
+        lhs_type = shapes.get(first, "")
+        sh = _SHAPE_RE.findall(lhs_type)
+        if sh:
+            lhs_dims = [int(d) for d in sh[0][1].split(",") if d]
+            for ci in mcd.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    contract *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+_PASSTHROUGH = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+
+def _sliced_param_bytes(callee: "Computation", param_idx: int) -> Optional[float]:
+    """If fusion parameter `param_idx` is only consumed (possibly through
+    elementwise pass-through ops) by dynamic-slice/gather reads or as the
+    in-place destination of dynamic-update-slice, return the touched bytes
+    (sum of slice outputs); else None (count the full operand)."""
+    pname = None
+    for o in callee.ops:
+        if o.opcode == "parameter" and re.search(
+                rf"parameter\({param_idx}\)", o.line):
+            pname = o.name
+            break
+    if pname is None:
+        return None
+    names = {pname}
+    touched = 0.0
+    # ops are in dependency order; one forward pass suffices
+    for o in callee.ops:
+        if o.name in names:
+            continue
+        rhs = o.line.split("=", 1)[-1]
+        used = any(re.search(rf"%{re.escape(n)}\b", rhs) for n in names)
+        if not used:
+            continue
+        if o.opcode in _PASSTHROUGH:
+            names.add(o.name)
+        elif o.opcode in ("dynamic-slice", "gather", "slice"):
+            touched += _shape_bytes(o.result_type)
+        elif o.opcode == "dynamic-update-slice":
+            m = re.search(r"dynamic-update-slice\(([^)]*)\)", o.line)
+            refs = [r.strip().lstrip("%").split(" ")[0]
+                    for r in m.group(1).split(",")] if m else []
+            if refs and refs[0] in names:
+                names.add(o.name)            # aliased in-place destination
+            else:
+                return None                  # param is the update itself
+        else:
+            return None
+    return touched
+
+
+def _op_bytes(op: Op, shapes: Dict[str, str],
+              comps: Optional[Dict[str, "Computation"]] = None) -> float:
+    if op.opcode in _NO_BYTES:
+        return 0.0
+    out_b = _shape_bytes(op.result_type)
+    opnds = re.search(r"\b" + re.escape(op.opcode) + r"\(([^)]*)\)", op.line)
+    refs = []
+    if opnds:
+        refs = [r.strip().lstrip("%").split(" ")[0]
+                for r in opnds.group(1).split(",") if r.strip()]
+    callee = comps.get(op.fusion_callee) if (comps and op.fusion_callee) else None
+    in_b = 0.0
+    for i, ref in enumerate(refs):
+        t = shapes.get(ref)
+        if not t:
+            continue
+        b = _shape_bytes(t)
+        if callee is not None:
+            sliced = _sliced_param_bytes(callee, i)
+            if sliced is not None:
+                b = min(b, sliced)
+        in_b += b
+    if op.opcode in ("gather", "dynamic-slice", "slice"):
+        in_b = min(in_b, 2 * out_b)            # touched elements only
+    if op.opcode == "dynamic-update-slice":
+        upd = _shape_bytes(shapes[refs[1]]) if len(refs) >= 2 and refs[1] in shapes else 0
+        return 2.0 * upd                        # read+write the update only
+    if callee is not None:
+        # in-place DUS fusions: output bytes = update written, not the array
+        root_dus = [o for o in callee.ops if o.opcode == "dynamic-update-slice"]
+        if root_dus and _shape_bytes(root_dus[-1].result_type) >= out_b:
+            upd_b = 0.0
+            for o in callee.ops:
+                if o.opcode == "dynamic-update-slice":
+                    m = re.search(r"dynamic-update-slice\(([^)]*)\)", o.line)
+                    if m:
+                        rs = [r.strip().lstrip("%").split(" ")[0]
+                              for r in m.group(1).split(",")]
+                        local = {x.name: x.result_type for x in callee.ops}
+                        if len(rs) >= 2 and rs[1] in local:
+                            upd_b += _shape_bytes(local[rs[1]])
+            if upd_b:
+                out_b = min(out_b, upd_b)
+    return float(in_b + out_b)
+
+
+def _is_pure_convert(callee: Computation) -> bool:
+    """Fusions that only cast dtypes are free on TPU (folded into consumers;
+    the CPU backend materializes f32 copies of bf16 weights, which would
+    otherwise inflate the memory term — see DESIGN.md SS6)."""
+    for o in callee.ops:
+        if o.opcode not in ("parameter", "convert", "bitcast", "copy",
+                            "transpose", "reshape"):
+            return False
+    return True
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_module(hlo)
+    mult = multipliers(comps)
+    # computations reached via fusion `calls=` / reducer `to_apply=` are
+    # internal: their data movement is accounted at the call site
+    internal = set()
+    for c in comps.values():
+        for callee, kind, _ in c.calls:
+            if kind in ("calls", "to_apply"):
+                internal.add(callee)
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    for key, c in comps.items():
+        if key == "__ENTRY__":        # alias of the entry computation
+            continue
+        m = mult.get(c.name, 0.0)
+        if m <= 0:
+            continue
+        count_bytes = c.name not in internal
+        shapes = {op.name: op.result_type for op in c.ops}
+        for op in c.ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, shapes)
+            if op.opcode in _COLLECTIVES or any(
+                    op.opcode.startswith(k) for k in _COLLECTIVES):
+                base = next(k for k in _COLLECTIVES if op.opcode.startswith(k))
+                coll[base] += m * _shape_bytes(op.result_type)
+                if count_bytes:
+                    bytes_accessed += m * 2 * _shape_bytes(op.result_type)
+                continue
+            if not count_bytes:
+                continue
+            if op.fusion_callee and op.fusion_callee in comps and \
+                    _is_pure_convert(comps[op.fusion_callee]):
+                continue
+            bytes_accessed += m * _op_bytes(op, shapes, comps)
+    return {"flops": flops, "bytes": bytes_accessed, "collectives": coll}

@@ -1,0 +1,113 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama31_8b --reduced \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+On CPU this trains the reduced config end-to-end (the quickstart path); on
+a real cluster the same driver runs the full config under the production
+mesh (--mesh single|multi).  Fault tolerance comes from TrainingRunner
+(checkpoint/restart, straggler flagging, deterministic data).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, SyntheticLM, eval_batch
+from repro.distributed.fault_tolerance import (FailureInjector, RunnerConfig,
+                                               TrainingRunner)
+from repro.distributed.sharding import (LOGICAL_RULES_TRAIN, sharding_context)
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import api
+from repro.optim import adamw
+
+
+def train(arch: str = "llama31_8b", use_reduced: bool = True,
+          steps: int = 100, batch: int = 8, seq: int = 128,
+          lr: float = 1e-3, ckpt_dir: str = None, ckpt_every: int = 50,
+          remat: str = "none", accum: int = 1, seed: int = 0,
+          compress_grads: bool = False, fail_at: tuple = (),
+          mesh=None, log=print):
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg)
+    opt_cfg = adamw.AdamWConfig(lr_peak=lr, warmup_steps=max(steps // 20, 5),
+                                decay_steps=steps,
+                                compress_grads=compress_grads)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                          global_batch=batch, seed=seed)
+    ds = SyntheticLM(data_cfg)
+
+    params = api.init_model(cfg, seed)
+    opt_state = adamw.init(params, opt_cfg)
+    step_fn_raw = api.make_train_step(cfg, opt_cfg, remat=remat,
+                                      accum_steps=accum)
+    jstep = jax.jit(step_fn_raw, donate_argnums=(0, 1))
+
+    metrics_hist = []
+
+    def step_fn(state, batch_tokens):
+        params, opt_state = state
+        params, opt_state, metrics = jstep(params, opt_state,
+                                           {"tokens": batch_tokens})
+        metrics_hist.append({k: float(v) for k, v in metrics.items()})
+        return (params, opt_state), metrics
+
+    def batch_fn(step):
+        return jnp.asarray(ds.batch(step))
+
+    if ckpt_dir:
+        ckpt = CheckpointManager(ckpt_dir, keep=2, async_save=True)
+        runner = TrainingRunner(
+            RunnerConfig(total_steps=steps, checkpoint_every=ckpt_every),
+            ckpt, injector=FailureInjector(fail_at) if fail_at else None,
+            log=log)
+        state = runner.run((params, opt_state), step_fn, batch_fn,
+                           metadata={"arch": arch})
+        params, opt_state = state
+    else:
+        state = (params, opt_state)
+        for s in range(steps):
+            state, m = step_fn(state, batch_fn(s))
+            if s % max(steps // 10, 1) == 0:
+                log(f"step {s} loss={float(m['loss']):.4f}")
+        params, opt_state = state
+
+    # held-out eval
+    ev = jnp.asarray(eval_batch(data_cfg))
+    loss_fn = jax.jit(api.make_loss_fn(cfg))
+    final = float(loss_fn(params, {"tokens": ev}))
+    log(f"final held-out loss: {final:.4f} "
+        f"(init ~{np.log(cfg.vocab_size):.2f})")
+    return params, cfg, data_cfg, metrics_hist, final
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama31_8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, args.reduced, args.steps, args.batch, args.seq,
+          args.lr, args.ckpt_dir, args.ckpt_every, args.remat, args.accum,
+          compress_grads=args.compress_grads)
+
+
+if __name__ == "__main__":
+    main()

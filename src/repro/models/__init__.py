@@ -1,0 +1,3 @@
+from repro.models import api, attention, layers, mlp, model, moe, params, ssm
+
+__all__ = ["api", "attention", "layers", "mlp", "model", "moe", "params", "ssm"]

@@ -1,0 +1,224 @@
+"""Public model API: cache schemas, input specs, loss and step factories.
+
+Everything is expressed over the same ``ParamSpec`` schema machinery as the
+weights, so abstract lowering (dry-run), initialization (tests) and sharding
+(rules table) all derive from one source of truth.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models import params as P
+from repro.optim import adamw
+
+INT = "int32"
+
+
+# ---------------------------------------------------------------------------
+# Cache schema
+# ---------------------------------------------------------------------------
+
+def cache_schema(cfg: ModelConfig, batch: int, cache_len: int):
+    """Pytree of ParamSpec mirroring the cache structure run_groups expects:
+    list over groups -> tuple over pattern positions -> {"self"|"ssm"|"cross"}."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def kv_pair(reps, T):
+        # decode layouts: K (B,KV,hd,T), V (B,KV,T,hd) — the dot-ready
+        # orientations, so decode never materializes transposed copies
+        return {
+            "k": P.ParamSpec((reps, batch, KV, hd, T),
+                             ("layers", "batch", "kv_heads", None, "kv_seq"),
+                             init="zeros"),
+            "v": P.ParamSpec((reps, batch, KV, T, hd),
+                             ("layers", "batch", "kv_heads", "kv_seq", None),
+                             init="zeros"),
+        }
+
+    groups = []
+    for pattern, reps in cfg.layer_groups():
+        entries = []
+        for (mixer, ffn) in pattern:
+            e = {}
+            if mixer in ("attn", "global", "attn_bidir"):
+                e["self"] = kv_pair(reps, cache_len)
+            elif mixer == "local":
+                e["self"] = kv_pair(reps, min(cfg.sliding_window, cache_len))
+            elif mixer == "mamba":
+                w, di, n = cfg.ssm_conv, cfg.d_inner, cfg.ssm_state
+                H, Pd = cfg.ssm_nheads, cfg.ssm_head_dim
+                e["ssm"] = {
+                    "conv_x": P.ParamSpec((reps, batch, w - 1, di),
+                                          ("layers", "batch", None, "mlp"),
+                                          init="zeros"),
+                    "conv_B": P.ParamSpec((reps, batch, w - 1, n),
+                                          ("layers", "batch", None, None),
+                                          init="zeros"),
+                    "conv_C": P.ParamSpec((reps, batch, w - 1, n),
+                                          ("layers", "batch", None, None),
+                                          init="zeros"),
+                    "ssm": P.ParamSpec((reps, batch, H, Pd, n),
+                                       ("layers", "batch", "ssm_heads", None, None),
+                                       init="zeros", dtype="float32"),
+                }
+            if cfg.family == "encdec":
+                e["cross"] = kv_pair(reps, cfg.encoder_frames)
+            entries.append(e)
+        groups.append(tuple(entries))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype: Optional[str] = None):
+    """Abstract inputs for a (arch x shape) cell.  For decode shapes this is
+    the serve_step signature (one new token + a KV cache of seq_len)."""
+    dt = dtype or cfg.dtype
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    if shape.mode in ("train", "prefill"):
+        specs = {}
+        if cfg.family == "vlm":
+            Ptok = cfg.vision_prefix
+            specs["patch_embeds"] = sds((B, Ptok, cfg.d_model), jnp.dtype(dt))
+            specs["tokens"] = sds((B, S - Ptok), jnp.dtype(INT))
+        elif cfg.family == "encdec":
+            specs["frames"] = sds((B, cfg.encoder_frames, cfg.d_model),
+                                  jnp.dtype(dt))
+            specs["tokens"] = sds((B, S), jnp.dtype(INT))
+        else:
+            specs["tokens"] = sds((B, S), jnp.dtype(INT))
+        return specs
+
+    caches = P.abstract_params(cache_schema(cfg, B, S), dt)
+    return {
+        "tokens": sds((B,), jnp.dtype(INT)),
+        "positions": sds((B,), jnp.dtype(INT)),
+        "caches": caches,
+    }
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeConfig):
+    """Logical axes pytree matching input_specs (for in_shardings)."""
+    if shape.mode in ("train", "prefill"):
+        axes = {"tokens": ("batch", "seq")}
+        if cfg.family == "vlm":
+            axes["patch_embeds"] = ("batch", "seq", "embed_act")
+        elif cfg.family == "encdec":
+            axes["frames"] = ("batch", "seq", "embed_act")
+        return axes
+    return {
+        "tokens": ("batch",),
+        "positions": ("batch",),
+        "caches": P.logical_axes(cache_schema(cfg, shape.global_batch,
+                                              shape.seq_len)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Loss / steps
+# ---------------------------------------------------------------------------
+
+def token_loss(cfg: ModelConfig, logits, tokens, text_start: int = 0):
+    """Next-token CE in f32.  logits: (B,S,V) over [prefix+]text positions."""
+    lg = logits[:, text_start: -1].astype(jnp.float32) if logits.shape[1] > 1 \
+        else logits.astype(jnp.float32)
+    labels = tokens[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def make_loss_fn(cfg: ModelConfig, remat: str = "none"):
+    def loss_fn(params, batch, sp=None):
+        kwargs = {}
+        text_start = 0
+        if cfg.family == "vlm":
+            kwargs["patch_embeds"] = batch["patch_embeds"]
+            text_start = cfg.vision_prefix
+        elif cfg.family == "encdec":
+            kwargs["frames"] = batch["frames"]
+        logits, _ = M.forward(params, cfg, tokens=batch["tokens"],
+                              mode="train", sp=sp, remat=remat, **kwargs)
+        return token_loss(cfg, logits, batch["tokens"], text_start)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    remat: str = "none", accum_steps: int = 1):
+    loss_fn = make_loss_fn(cfg, remat)
+
+    def train_step(params, opt_state, batch, sp=None):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, sp)
+        else:
+            def micro(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb, sp)
+                return (acc[0] + l, jax.tree_util.tree_map(jnp.add, acc[1], g)), None
+            z = (jnp.zeros(()),
+                 jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                        params))
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(micro, z, mbs)
+            loss = loss / accum_steps
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+        new_params, new_opt, metrics = adamw.update(grads, opt_state, params,
+                                                    opt_cfg)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, sp=None):
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["patch_embeds"] = batch["patch_embeds"]
+        elif cfg.family == "encdec":
+            kwargs["frames"] = batch["frames"]
+        logits, caches = M.forward(params, cfg, tokens=batch["tokens"],
+                                   mode="prefill", sp=sp, **kwargs)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch, sp=None):
+        logits, caches = M.forward(
+            params, cfg, tokens=batch["tokens"], mode="decode",
+            caches=batch["caches"], positions=batch["positions"], sp=sp)
+        return logits, caches
+    return decode_step
+
+
+def step_for_shape(cfg: ModelConfig, shape: ShapeConfig,
+                   opt_cfg: Optional[adamw.AdamWConfig] = None,
+                   remat: str = "none"):
+    """The jit-able callable a dry-run cell lowers, plus its input maker."""
+    if shape.mode == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        step = make_train_step(cfg, opt_cfg, remat=remat)
+        return step, "train"
+    if shape.mode == "prefill":
+        return make_prefill_step(cfg), "prefill"
+    return make_decode_step(cfg), "decode"
+
+
+def abstract_model(cfg: ModelConfig):
+    schema = M.model_schema(cfg)
+    return (P.abstract_params(schema, cfg.dtype), P.logical_axes(schema), schema)
+
+
+def init_model(cfg: ModelConfig, seed: int = 0):
+    schema = M.model_schema(cfg)
+    return P.init_params(schema, jax.random.PRNGKey(seed), cfg.dtype)

@@ -1,0 +1,213 @@
+"""Attention: flash-style chunked prefill/train attention (online softmax,
+GQA, sliding window, logit softcap) and single-query decode attention over
+a (possibly sequence-sharded) KV cache.
+
+Pure jnp + lax.scan so XLA SPMD can partition it; the sequence-sharded
+decode path is flash-decoding realized by the partitioner (softmax
+reductions over the sharded KV axis become all-reduces).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def _chunk(n: int, want: int) -> int:
+    """Largest chunk <= want that divides n."""
+    c = min(want, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    attn_softcap: float = 0.0, q_offset: int = 0,
+                    q_chunk: int = 512, kv_chunk: int = 1024):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd) -> (B,S,H,hd).
+
+    window > 0 limits attention to the last `window` positions (inclusive
+    of self) and computes only the sliced KV span per query chunk, so local
+    layers cost O(S*window) rather than O(S*T).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qc = _chunk(S, q_chunk)
+    nq = S // qc
+    qr = q.reshape(B, nq, qc, KV, G, hd)
+
+    if window and window < T:
+        return _local_attention(qr, k, v, window=window, softcap=attn_softcap,
+                                q_offset=q_offset, scale=scale).reshape(B, S, H, hd)
+
+    kc = _chunk(T, kv_chunk)
+    nk = T // kc
+    kr = k.reshape(B, nk, kc, KV, hd)
+    vr = v.reshape(B, nk, kc, KV, hd)
+
+    def q_block(qi, qb):
+        # qb: (B,qc,KV,G,hd)
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, kb, vb = inputs
+            kvpos = kj * kc + jnp.arange(kc)
+            s = jnp.einsum("bqKGd,bkKd->bKGqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if attn_softcap:
+                s = attn_softcap * jnp.tanh(s / attn_softcap)
+            if causal:
+                mask = kvpos[None, :] <= qpos[:, None]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bKGqk,bkKd->bKGqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, qc), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, qc), jnp.float32),
+                jnp.zeros((B, KV, G, qc, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)                       # (B,qc,KV,G,hd)
+
+    def scan_q(_, inputs):
+        qi, qb = inputs
+        return None, q_block(qi, qb)
+
+    _, out = jax.lax.scan(scan_q, None,
+                          (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1)                             # (B,nq,qc,KV,G,hd)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _local_attention(qr, k, v, *, window: int, softcap: float,
+                     q_offset: int, scale: float):
+    """Sliding-window attention: per q-chunk, slice exactly the
+    [start-window, start+qc) KV span.  qr: (B,nq,qc,KV,G,hd)."""
+    B, nq, qc, KV, G, hd = qr.shape
+    T = k.shape[1]
+    span = window + qc
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+    def q_block(_, inputs):
+        qi, qb = inputs
+        start = qi * qc                                     # span starts at abs pos start-window
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        qpos = q_offset + start + jnp.arange(qc)
+        kvpos = q_offset + start - window + jnp.arange(span)
+        s = jnp.einsum("bqKGd,bkKd->bKGqk", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = ((kvpos[None, :] <= qpos[:, None])
+                & (kvpos[None, :] > qpos[:, None] - window)
+                & (kvpos[None, :] >= q_offset))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bKGqk,bkKd->bqKGd", p.astype(vb.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        return None, out
+
+    _, out = jax.lax.scan(q_block, None,
+                          (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).astype(qr.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, positions, k_new=None, v_new=None,
+                     *, rolling: bool = False, attn_softcap: float = 0.0):
+    """Single new query vs a *pre-transposed* cache plus an explicit
+    new-token term.
+
+    q: (B,H,hd); k_cache: (B,KV,hd,T); v_cache: (B,KV,T,hd) — the layouts
+    the decode dots want, so XLA never materializes a transposed copy of
+    the cache (EXPERIMENTS.md SSPerf iteration A4).  k_new/v_new (B,KV,hd)
+    carry the current token, which is attended explicitly and written to
+    the cache independently (so the cache write can be an update-only DUS
+    into the carried stack).  Cache slots at `positions` and beyond are
+    masked.  rolling=True: slot p%T holds position p (local windows).
+    """
+    B, H, hd = q.shape
+    KV, T = k_cache.shape[1], k_cache.shape[3]
+    G = H // KV
+    scale = hd ** -0.5
+    qr = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bKGd,bKdt->bKGt", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    slot = jnp.arange(T)
+    if rolling:
+        # slots hold positions pos-T .. pos-1; exclude the stale slot
+        # (pos % T holds pos-T, outside the window) once wrapped
+        valid = jnp.where(positions[:, None] < T,
+                          slot[None, :] < positions[:, None],
+                          slot[None, :] != (positions % T)[:, None])
+    else:
+        valid = slot[None, :] < positions[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    # explicit online softmax over [cache, new token] — no concat along the
+    # (possibly sharded) T dim
+    if k_new is not None:
+        s_new = jnp.einsum("bKGd,bKd->bKG", qr, k_new,
+                           preferred_element_type=jnp.float32) * scale
+        if attn_softcap:
+            s_new = attn_softcap * jnp.tanh(s_new / attn_softcap)
+        m = jnp.maximum(s.max(-1), s_new)
+        e = jnp.exp(s - m[..., None])
+        e_new = jnp.exp(s_new - m)
+        l = e.sum(-1) + e_new
+        out = jnp.einsum("bKGt,bKtd->bKGd", e.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+        out = out + e_new[..., None] * v_new[:, :, None, :].astype(jnp.float32)
+        out = out / l[..., None]
+    else:                                   # cross-attention: cache only
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bKGt,bKtd->bKGd", p.astype(v_cache.dtype), v_cache,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def cache_write_kv(k_cache, v_cache, k_new, v_new, positions, *,
+                   rolling: bool = False, aligned: bool = False):
+    """Write one token into a layer's caches.
+
+    k_cache: (B,KV,hd,T); v_cache: (B,KV,T,hd); k/v_new: (B,KV,hd).
+    aligned=True (all sequences decode the same position) collapses to a
+    single update-only dynamic_update_slice per cache; otherwise a vmapped
+    per-sequence write."""
+    T = k_cache.shape[-1]
+    pos = positions % T if rolling else positions
+    kn = k_new.astype(k_cache.dtype)
+    vn = v_new.astype(v_cache.dtype)
+    if aligned:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, kn[..., None], (0, 0, 0, pos[0]))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, vn[:, :, None, :], (0, 0, pos[0], 0))
+        return k_cache, v_cache
+
+    def upd_k(c, n, p):                          # c: (KV,hd,T)
+        return jax.lax.dynamic_update_slice(c, n[..., None], (0, 0, p))
+
+    def upd_v(c, n, p):                          # c: (KV,T,hd)
+        return jax.lax.dynamic_update_slice(c, n[:, None, :], (0, p, 0))
+
+    return jax.vmap(upd_k)(k_cache, kn, pos), jax.vmap(upd_v)(v_cache, vn, pos)

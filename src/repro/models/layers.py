@@ -1,0 +1,88 @@
+"""Shared primitive layers: the sparsity-aware dense projection, norms,
+rotary embeddings, activations.
+
+Every linear projection in the model zoo routes through ``dense()`` — the
+single integration point for WiSparse (repro.core.sparse_linear decides
+whether/how to sparsify based on the per-layer sparsity params ``sp`` and
+the active sparsity mode context).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear
+
+
+def dense(x, w, sp=None, row_parallel: bool = False):
+    """y = x @ W, optionally channel-sparsified per WiSparse.
+
+    x: (..., n_in); w: (n_in, *out_dims); sp: per-layer sparsity params
+    ({"g","alpha","tau","keep_frac"}) or None.  row_parallel statically
+    marks o_proj/down_proj-style weights whose input dim is model-sharded.
+    """
+    return sparse_linear.project(x, w, sp, row_parallel=row_parallel)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+ACT = {"gelu": gelu, "silu": silu}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (...,) int -> cos,sin of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., P, n_heads, head_dim); cos/sin: (..., P, head_dim//2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(dt)
+
+
+def sinusoidal_at(positions, dim: int):
+    """Sinusoidal absolute position embedding at given positions (..., dim)."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoidal_positions(length: int, dim: int):
+    """Whisper-style sinusoidal absolute position embedding (length, dim)."""
+    return sinusoidal_at(jnp.arange(length), dim)

@@ -1,0 +1,45 @@
+"""Gated MLP (SwiGLU / GeGLU) and plain GELU MLP (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, gelu, silu
+from repro.models.params import ParamSpec
+from repro.distributed.sharding import constrain
+
+
+def mlp_schema(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamSpec((d, f), ("embed", "mlp")),
+            "wi_up": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x, cfg, sp=None, mode: str = "train"):
+    sp = sp or {}
+    if cfg.mlp_activation in ("swiglu", "geglu"):
+        act = silu if cfg.mlp_activation == "swiglu" else gelu
+        from repro.core.sparse_linear import capture_active
+        if mode == "train" and not sp and not capture_active():
+            # fused gate/up: one dx all-reduce in backward instead of two
+            # (EXPERIMENTS.md SSPerf iteration B3); the concat reshards in
+            # serve modes, and WiSparse/calibration need separate matmuls.
+            f = p["wi_gate"].shape[1]
+            gu = dense(x, jnp.concatenate([p["wi_gate"], p["wi_up"]], axis=1))
+            g, u = gu[..., :f], gu[..., f:]
+        else:
+            g = dense(x, p["wi_gate"], sp.get("wi_gate"))
+            u = dense(x, p["wi_up"], sp.get("wi_up"))
+        h = act(g) * u
+    else:
+        h = gelu(dense(x, p["wi"], sp.get("wi")))
+    h = constrain(h, "batch", None, "mlp")
+    return dense(h, p["wo"], sp.get("wo"), row_parallel=True)

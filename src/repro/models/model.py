@@ -1,0 +1,379 @@
+"""Model assembly: schema + apply for every assigned architecture family.
+
+One generic decoder stack covers dense / MoE / SSM / hybrid archs via the
+config's ``layer_pattern`` (a period of (mixer, ffn) kinds); homogeneous
+periods are stacked and scanned (``lax.scan``) so HLO size and compile time
+stay bounded at 95 layers.  Whisper adds an encoder stack + cross-attention;
+InternVL prepends precomputed patch embeddings (frontend stub).
+
+Modes: "train" (full seq, no cache), "prefill" (full seq, emits caches),
+"decode" (one token per sequence against caches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models.layers import apply_rope, dense, rmsnorm, rope_angles, softcap
+from repro.models.mlp import mlp_apply, mlp_schema
+from repro.models.moe import moe_apply, moe_schema
+from repro.models.params import ParamSpec, stacked
+from repro.models.ssm import mamba_apply, mamba_schema
+
+ATTN_KINDS = ("attn", "local", "global", "attn_bidir")
+
+# static serving-mode flag: aligned batched decode (all sequences at the
+# same position) lets cache writes collapse to one dynamic_update_slice
+_ALIGNED = __import__("threading").local()
+
+
+def decode_is_aligned() -> bool:
+    return getattr(_ALIGNED, "on", False)
+
+
+@__import__("contextlib").contextmanager
+def aligned_decode(on: bool = True):
+    prev = getattr(_ALIGNED, "on", False)
+    _ALIGNED.on = on
+    try:
+        yield
+    finally:
+        _ALIGNED.on = prev
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, H * hd), ("embed", "heads_flat")),
+        "wk": ParamSpec((d, KV * hd), ("embed", "kv_flat")),
+        "wv": ParamSpec((d, KV * hd), ("embed", "kv_flat")),
+        "wo": ParamSpec((H * hd, d), ("heads_flat", "embed")),
+    }
+
+
+def layer_schema(cfg: ModelConfig, kind, cross: bool = False):
+    mixer, ffn = kind
+    s = {}
+    if mixer in ATTN_KINDS:
+        s["ln1"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        s["attn"] = attn_schema(cfg)
+    elif mixer == "mamba":
+        s["ln1"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        s["mamba"] = mamba_schema(cfg)
+    if cross:
+        s["ln_cross"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        s["cross"] = attn_schema(cfg)
+    if ffn == "dense":
+        s["ln2"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        s["mlp"] = mlp_schema(cfg)
+    elif ffn == "moe":
+        s["ln2"] = ParamSpec((cfg.d_model,), (None,), init="zeros")
+        s["moe"] = moe_schema(cfg)
+    return s
+
+
+def group_schemas(cfg: ModelConfig, cross: bool = False):
+    out = []
+    for pattern, reps in cfg.layer_groups():
+        g = {f"l{j}": layer_schema(cfg, kind, cross)
+             for j, kind in enumerate(pattern)}
+        out.append(stacked(g, reps, "layers"))
+    return out
+
+
+def model_schema(cfg: ModelConfig):
+    V, D = cfg.vocab_size, cfg.d_model
+    s = {
+        "embed": ParamSpec((V, D), ("vocab", "embed")),
+        "final_norm": ParamSpec((D,), (None,), init="zeros"),
+        "groups": group_schemas(cfg, cross=(cfg.family == "encdec")),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((D, V), ("embed", "vocab"))
+    if cfg.family == "encdec":
+        enc_pattern = (("attn_bidir", "dense"),)
+        g = {f"l{j}": layer_schema(cfg, kind)
+             for j, kind in enumerate(enc_pattern)}
+        s["encoder"] = {
+            "groups": [stacked(g, cfg.encoder_layers, "layers")],
+            "final_norm": ParamSpec((D,), (None,), init="zeros"),
+        }
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
+               positions=None, mode: str = "train", kv_override=None):
+    """Self- or cross-attention.  kv_override: (enc_out) for cross-attn."""
+    sp = sp or {}
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    win = cfg.sliding_window if kind == "local" else 0
+
+    from repro.core.sparse_linear import capture_active as _cap
+    # fused qkv only pays in training (merges backward dx psums); in serve
+    # modes the concat of differently-sharded weight dims costs an
+    # all-to-all reshard (EXPERIMENTS.md SSPerf B3 follow-up)
+    fuse = (mode == "train" and not sp and not _cap()
+            and kv_override is None)
+    if not fuse:
+        q = dense(x, p["wq"], sp.get("wq")).reshape(B, S, H, hd)
+    if kv_override is not None:                      # cross-attention
+        if mode == "decode":                         # static pre-transposed KV
+            kc, vc = cache["k"], cache["v"]
+            F = kc.shape[-1]
+            out = attn_lib.decode_attention(
+                q[:, 0], kc, vc, jnp.full((B,), F, jnp.int32))
+            out = out[:, None]
+        else:
+            F = kv_override.shape[1]
+            k = dense(kv_override, p["wk"], sp.get("wk")).reshape(B, F, KV, hd)
+            v = dense(kv_override, p["wv"], sp.get("wv")).reshape(B, F, KV, hd)
+            q = constrain(q, "batch", None, "heads", None)
+            out = attn_lib.flash_attention(q, k, v, causal=False)
+        y = dense(out.reshape(B, S, H * hd), p["wo"], sp.get("wo"),
+              row_parallel=True)
+        return y, None
+
+    if fuse:
+        # fused qkv: one matmul -> backward emits ONE dx all-reduce instead
+        # of three (EXPERIMENTS.md SSPerf iteration B3).  WiSparse needs
+        # per-projection masks (and calibration needs per-projection input
+        # capture), so those paths keep separate matmuls.
+        w_cat = jnp.concatenate([p["wq"], p["wk"], p["wv"]], axis=1)
+        qkv = dense(x, w_cat)
+        q = qkv[..., : H * hd].reshape(B, S, H, hd)
+        k = qkv[..., H * hd: (H + KV) * hd].reshape(B, S, KV, hd)
+        v = qkv[..., (H + KV) * hd:].reshape(B, S, KV, hd)
+    else:
+        k = dense(x, p["wk"], sp.get("wk")).reshape(B, S, KV, hd)
+        v = dense(x, p["wv"], sp.get("wv")).reshape(B, S, KV, hd)
+
+    if cfg.rope_theta:
+        if mode == "decode":
+            cos, sin = rope_angles(positions[:, None], hd, cfg.rope_theta)
+        else:
+            cos, sin = rope_angles(jnp.arange(S)[None], hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", None, "heads", None)
+
+    if mode == "decode":
+        kc, vc = cache["k"], cache["v"]
+        T = kc.shape[-1]
+        rolling = bool(win) and win == T
+        k_new, v_new = k[:, 0], v[:, 0]               # (B,KV,hd)
+        out = attn_lib.decode_attention(
+            q[:, 0], kc, vc, positions, k_new, v_new,
+            rolling=rolling, attn_softcap=cfg.attn_softcap)
+        out = out[:, None]
+        nk, nv = attn_lib.cache_write_kv(
+            kc, vc, k_new, v_new, positions,
+            rolling=rolling, aligned=decode_is_aligned())
+        new_cache = {"k": nk, "v": nv}
+    else:
+        causal = kind != "attn_bidir"
+        out = attn_lib.flash_attention(
+            q, k, v, causal=causal, window=win, attn_softcap=cfg.attn_softcap)
+        new_cache = None
+        if mode == "prefill":
+            if win and win < S:                      # rolling window cache
+                ck, cv = k[:, -win:], v[:, -win:]
+                # slot j of k[:, -win:] holds abs position S-win+j; roll right
+                # by S%win so slot (pos % win) holds position pos
+                shift = S % win
+                ck = jnp.roll(ck, shift, axis=1)
+                cv = jnp.roll(cv, shift, axis=1)
+            else:
+                ck, cv = k, v
+            # decode-layout caches: K as (B,KV,hd,T), V as (B,KV,T,hd)
+            new_cache = {
+                "k": constrain(ck.transpose(0, 2, 3, 1),
+                               "batch", "kv_heads", None, "kv_seq"),
+                "v": constrain(cv.transpose(0, 2, 1, 3),
+                               "batch", "kv_heads", "kv_seq", None)}
+    y = dense(out.reshape(B, S, H * hd), p["wo"], sp.get("wo"),
+              row_parallel=True)
+    return y, new_cache
+
+
+def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
+                positions=None, mode: str = "train", enc_out=None):
+    """cache: per-layer dict (train/prefill) or, in decode mode,
+    {"stack": <layer-stacked group cache entry>, "idx": layer-in-stack} —
+    decode caches ride the scan *carry* and are updated in place with
+    update-only writes (EXPERIMENTS.md SSPerf iteration A4)."""
+    mixer, ffn = kind
+    sp = sp or {}
+    cache = cache or {}
+    decode = mode == "decode"
+    new_cache = dict(cache) if decode else {}
+    if mixer in ATTN_KINDS:
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        h, nc = attn_apply(p["attn"], h, cfg, mixer, sp.get("attn"),
+                           cache.get("self"), positions, mode)
+        if nc is not None:
+            new_cache["self"] = nc
+        x = x + h
+    elif mixer == "mamba":
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        h, nc = mamba_apply(p["mamba"], h, cfg, sp.get("mamba"),
+                            cache.get("ssm"), mode)
+        if nc is not None:
+            new_cache["ssm"] = nc
+        x = x + h
+    if "cross" in p:
+        h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        h, nc = attn_apply(p["cross"], h, cfg, "attn_bidir", sp.get("cross"),
+                           cache.get("cross") if decode else None,
+                           positions, mode,
+                           kv_override=enc_out if enc_out is not None else x)
+        if mode == "prefill" and enc_out is not None:
+            # stash static cross KV for decode (decode layouts)
+            F = enc_out.shape[1]
+            B = x.shape[0]
+            KV, hd = cfg.num_kv_heads, cfg.head_dim
+            ck = dense(enc_out, p["cross"]["wk"]).reshape(B, F, KV, hd)
+            cv = dense(enc_out, p["cross"]["wv"]).reshape(B, F, KV, hd)
+            new_cache["cross"] = {"k": ck.transpose(0, 2, 3, 1),
+                                  "v": cv.transpose(0, 2, 1, 3)}
+        x = x + h
+    if ffn == "dense":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h, cfg, sp.get("mlp"), mode)
+    elif ffn == "moe":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + moe_apply(p["moe"], h, cfg, sp.get("moe"))
+    x = constrain(x, "batch", None, "embed_act")
+    return x, (new_cache or None)
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)   # "full": save nothing
+
+
+def run_groups(groups, x, cfg: ModelConfig, patterns, *, mode="train",
+               caches=None, positions=None, sp=None, enc_out=None,
+               remat: str = "none"):
+    """Scan each stacked layer group.  Returns (x, new_caches).
+
+    Decode mode carries the layer-stacked caches through the scan *carry*
+    (update-only in-place writes, donation-friendly); train/prefill slice
+    per-layer state via xs and emit fresh caches via ys."""
+    new_caches = []
+    for gi, (gp, (pattern, reps)) in enumerate(zip(groups, patterns)):
+        gc = caches[gi] if caches is not None else None
+        gsp = sp[gi] if sp is not None else None
+
+        # NOTE (EXPERIMENTS.md SSPerf A4/A5): carrying decode caches through
+        # the scan carry, or unrolling the layer loop over a stacked donated
+        # buffer, both force XLA to defensively copy the full stack per
+        # layer (measured 10-600x memory-term regressions) — decode caches
+        # therefore flow through xs/ys like prefill, with update-only
+        # writes inside each per-layer slice.
+
+        def body(xc, xs, pattern=pattern):
+            p_i, c_i, sp_i = xs
+            ncs = []
+            for j, kind in enumerate(pattern):
+                cj = c_i[j] if c_i is not None else None
+                spj = sp_i[f"l{j}"] if sp_i is not None else None
+                xc, nc = layer_apply(p_i[f"l{j}"], xc, cfg, kind, spj, cj,
+                                     positions, mode, enc_out)
+                ncs.append(nc)
+            ys = tuple(ncs) if any(n is not None for n in ncs) else None
+            return xc, ys
+
+        wrapped = _remat_wrap(body, remat if mode == "train" else "none")
+        x, ys = jax.lax.scan(wrapped, x, (gp, gc, gsp))
+        new_caches.append(ys)
+    return x, new_caches
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embed:
+        e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
+    return e
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = softcap(logits, cfg.logit_softcap)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def encode(params, frames, cfg: ModelConfig, sp=None, remat="none"):
+    """Whisper encoder over precomputed conv-frontend frame embeddings."""
+    from repro.models.layers import sinusoidal_positions
+    enc = params["encoder"]
+    x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model
+                                      ).astype(frames.dtype)[None]
+    patterns = [((("attn_bidir", "dense"),), cfg.encoder_layers)]
+    x, _ = run_groups(enc["groups"], x, cfg, patterns, mode="train",
+                      sp=sp, remat=remat)
+    return rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
+            patch_embeds=None, mode="train", caches=None, positions=None,
+            sp=None, sp_enc=None, remat="none"):
+    """Unified forward.
+
+    train/prefill: tokens (B,S[-P]) [+ frames (B,F,D) | patch_embeds (B,P,D)]
+    decode:        tokens (B,), positions (B,), caches required.
+    Returns (logits, new_caches):
+      train  -> logits (B,S,V), caches None
+      prefill-> logits (B,V) last position, caches filled
+      decode -> logits (B,V), caches updated
+    """
+    enc_out = None
+    if cfg.family == "encdec" and frames is not None:
+        enc_out = encode(params, frames, cfg, sp=sp_enc, remat=remat)
+
+    if mode == "decode":
+        x = embed_tokens(params, tokens[:, None], cfg)
+        if cfg.family == "encdec" and cfg.rope_theta == 0.0:
+            from repro.models.layers import sinusoidal_at
+            x = x + sinusoidal_at(positions, cfg.d_model)[:, None].astype(x.dtype)
+        x, new_caches = run_groups(
+            params["groups"], x, cfg, cfg.layer_groups(), mode="decode",
+            caches=caches, positions=positions, sp=sp, enc_out=enc_out)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return lm_logits(params, x, cfg)[:, 0], new_caches
+
+    x = embed_tokens(params, tokens, cfg)
+    if patch_embeds is not None:                      # VLM stub frontend
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    if cfg.family == "encdec":
+        from repro.models.layers import sinusoidal_positions
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model
+                                     ).astype(x.dtype)[None]
+    x = constrain(x, "batch", None, "embed_act")
+    x, new_caches = run_groups(
+        params["groups"], x, cfg, cfg.layer_groups(), mode=mode,
+        caches=None, positions=None, sp=sp, enc_out=enc_out, remat=remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if mode == "prefill":
+        return lm_logits(params, x[:, -1:], cfg)[:, 0], new_caches
+    return lm_logits(params, x, cfg), None

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with capacity-bounded gather dispatch.
+
+Shardable formulation (DESIGN.md SS2): tokens stay batch-sharded over
+``data`` while the expert dim shards over ``model``; because activations
+are replicated across ``model``, dispatch gathers are local and the combine
+scatter reduces over ``model`` exactly like a row-parallel matmul — no
+token all-to-all is required.  When num_experts doesn't divide the model
+axis the per-expert hidden dim shards instead (rules-table fallback).
+
+Dispatch avoids the GShard (S,E,C) one-hot blowup: a sort by expert id
+yields each assignment's position-in-expert; assignments beyond capacity
+are dropped (standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, gelu, silu
+from repro.models.params import ParamSpec
+from repro.distributed.sharding import constrain
+
+
+def moe_schema(cfg):
+    # E padded to the TP width: pad experts carry -inf router logits and
+    # are never routed to, so the expert dim always shards over `model`
+    # (EXPERIMENTS.md SSPerf iteration C3)
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.num_experts_padded
+    return {
+        "router": ParamSpec((d, e), ("embed", None), scale=0.02),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    c = int(tokens_per_group * cfg.num_experts_per_tok / cfg.num_experts
+            * cfg.capacity_factor) + 1
+    return max(c, 1)
+
+
+def moe_apply(p, x, cfg, sp=None):
+    """x: (B, S, D) -> (B, S, D).  Groups = batch dim."""
+    sp = sp or {}
+    B, S, D = x.shape
+    E, K = cfg.num_experts_padded, cfg.num_experts_per_tok
+    C = _capacity(S, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"],
+                        preferred_element_type=jnp.float32)
+    if E != cfg.num_experts:                # mask pad experts (never routed)
+        pad = jnp.full((E - cfg.num_experts,), -jnp.inf, logits.dtype)
+        logits = logits.at[..., cfg.num_experts:].set(pad)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, topk = jax.lax.top_k(probs, K)                  # (B,S,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_group(xg, topk_g, gate_g):
+        # xg: (S,D); topk/gate: (S,K)
+        A = S * K
+        exp_id = topk_g.reshape(A)
+        tok_id = jnp.repeat(jnp.arange(S), K)
+        gates = gate_g.reshape(A)
+        order = jnp.argsort(exp_id, stable=True)
+        exp_s = exp_id[order]
+        tok_s = tok_id[order]
+        gate_s = gates[order]
+        counts = jnp.zeros((E,), jnp.int32).at[exp_s].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(A) - starts[exp_s]               # position in expert
+        keep = pos < C
+        # scatter token ids into the (E, C) dispatch table (S = pad row)
+        disp = jnp.full((E, C), S, jnp.int32)
+        disp = disp.at[exp_s, jnp.where(keep, pos, 0)].set(
+            jnp.where(keep, tok_s, S), mode="drop")
+        xg_pad = jnp.concatenate([xg, jnp.zeros((1, D), xg.dtype)], 0)
+        xe = xg_pad[disp]                                  # (E,C,D)
+        return xe, (exp_s, pos, tok_s, gate_s, keep)
+
+    xe, meta = jax.vmap(dispatch_group)(x, topk, gate)     # xe: (B,E,C,D)
+    xe = constrain(xe, "batch", "experts", None, None)
+
+    def ff(name):
+        w = p[name]                                        # (E,D,F) or (E,F,D)
+        s = sp.get(name)
+        if s is None:
+            def apply_dense(h):
+                from repro.core import sparse_linear
+                sparse_linear.record(w, h)                 # calibration hook
+                return jnp.einsum("becd,edf->becf", h, w)
+            return apply_dense
+        # per-expert WiSparse: vmap the sparse projection over experts
+        def apply(h):                                      # h: (B,E,C,din)
+            hm = jnp.moveaxis(h, 1, 0)                     # (E,B,C,din)
+            out = jax.vmap(lambda he, we, ge: dense(
+                he, we, {**s, "g": ge}))(hm, w, s["g"])
+            return jnp.moveaxis(out, 0, 1)
+        return apply
+
+    act = silu if cfg.mlp_activation == "swiglu" else gelu
+    h = act(ff("wi_gate")(xe)) * ff("wi_up")(xe)           # (B,E,C,F)
+    h = constrain(h, "batch", "experts", None, "expert_mlp")
+    ye = ff("wo")(h)                                       # (B,E,C,D)
+    ye = constrain(ye, "batch", "experts", None, None)
+
+    def combine_group(ye_g, meta_g):
+        exp_s, pos, tok_s, gate_s, keep = meta_g
+        vals = ye_g[exp_s, jnp.clip(pos, 0, C - 1)]        # (A,D)
+        vals = vals * (gate_s * keep).astype(vals.dtype)[:, None]
+        out = jnp.zeros((S + 1, D), vals.dtype).at[tok_s].add(vals)
+        return out[:S]
+
+    out = jax.vmap(combine_group)(ye, meta)
+    out = constrain(out, "batch", None, "embed_act")
+    return out.astype(x.dtype)
+
+
+def moe_aux_loss(logits_probs):
+    """Load-balancing auxiliary loss (Switch-style)."""
+    probs, topk = logits_probs
+    E = probs.shape[-1]
+    me = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    ce = jnp.zeros((E,)).at[topk.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(ce.sum(), 1.0)
+    return E * jnp.sum(me * ce)

@@ -1,0 +1,94 @@
+"""Parameter schema: one source of truth for shapes, logical sharding axes
+and initializers.
+
+A model's parameters are described as a pytree whose leaves are
+``ParamSpec``s.  From the same schema we derive:
+  * ``init_params``      — concrete arrays (deterministic per-path keys),
+  * ``abstract_params``  — ``jax.ShapeDtypeStruct``s for AOT lowering,
+  * ``logical_axes``     — logical axis-name tuples for the sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim
+    init: str = "normal"                 # normal|zeros|ones|ssm_A|ssm_dt|identity_conv
+    scale: float = 0.02
+    dtype: Optional[str] = None          # overrides the model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def _flatten(schema):
+    return jax.tree_util.tree_flatten_with_path(schema, is_leaf=_is_spec)
+
+
+def _path_str(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _init_leaf(spec: ParamSpec, key, default_dtype: str):
+    dtype = jnp.dtype(spec.dtype or default_dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_A":
+        # A_log init: log of uniform [1, 16] per head (mamba2 default)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt":
+        # dt bias: inverse-softplus of uniform [1e-3, 1e-1]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dtype)
+    # truncated-normal fan-agnostic init
+    w = jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32)
+    return (w * spec.scale).astype(dtype)
+
+
+def init_params(schema, key, default_dtype: str = "float32"):
+    leaves, treedef = _flatten(schema)
+    out = []
+    for i, (path, spec) in enumerate(leaves):
+        k = jax.random.fold_in(key, np.uint32(hash(_path_str(path)) & 0x7FFFFFFF))
+        out.append(_init_leaf(spec, k, default_dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(schema, default_dtype: str = "float32"):
+    def f(spec):
+        return jax.ShapeDtypeStruct(spec.shape, jnp.dtype(spec.dtype or default_dtype))
+
+    return jax.tree_util.tree_map(f, schema, is_leaf=_is_spec)
+
+
+def logical_axes(schema):
+    return jax.tree_util.tree_map(lambda s: s.axes, schema, is_leaf=_is_spec)
+
+
+def stacked(schema, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacked-layers dim of size n to every spec in the subtree."""
+    def f(spec: ParamSpec):
+        return ParamSpec((n,) + spec.shape, (axis_name,) + spec.axes,
+                         spec.init, spec.scale, spec.dtype)
+
+    return jax.tree_util.tree_map(f, schema, is_leaf=_is_spec)
+
+
+def count_params(schema) -> int:
+    leaves, _ = _flatten(schema)
+    return int(sum(int(np.prod(s.shape)) for _, s in leaves))

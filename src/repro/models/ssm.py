@@ -1,0 +1,175 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Prefill/train uses the chunked SSD algorithm as a single ``lax.scan`` over
+sequence chunks (intra-chunk quadratic term + inter-chunk state recurrence),
+so activation memory stays O(B * chunk^2 * H) regardless of sequence length.
+Decode is the O(1) recurrent state update.  ngroups is fixed at 1.
+
+WiSparse applicability: ``in_*``/``out_proj`` are the channel-sparsifiable
+linears; the SSD scan itself is not (DESIGN.md SS5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, rmsnorm, silu
+from repro.models.params import ParamSpec
+from repro.distributed.sharding import constrain
+
+
+def mamba_schema(cfg):
+    d, di, n, h, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_nheads, cfg.ssm_conv)
+    return {
+        "in_z": ParamSpec((d, di), ("embed", "mlp")),
+        "in_x": ParamSpec((d, di), ("embed", "mlp")),
+        "in_B": ParamSpec((d, n), ("embed", None)),
+        "in_C": ParamSpec((d, n), ("embed", None)),
+        "in_dt": ParamSpec((d, h), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((w, di), (None, "mlp"), scale=0.5),
+        "conv_B": ParamSpec((w, n), (None, None), scale=0.5),
+        "conv_C": ParamSpec((w, n), (None, None), scale=0.5),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="ssm_A", dtype="float32"),
+        "D": ParamSpec((h,), ("ssm_heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="ssm_dt", dtype="float32"),
+        "norm": ParamSpec((di,), (None,), init="zeros"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv, u: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(W):
+        shift = W - 1 - i
+        ui = jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + ui.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(u.dtype)
+
+
+def _conv_step(state, u_new, w):
+    """state: (B,W-1,C) last inputs; u_new: (B,C) -> (out, new_state)."""
+    hist = jnp.concatenate([state, u_new[:, None]], axis=1)   # (B,W,C)
+    out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                     w.astype(jnp.float32)).astype(u_new.dtype)
+    return out, hist[:, 1:]
+
+
+def _project_inputs(p, x, sp):
+    sp = sp or {}
+    z = dense(x, p["in_z"], sp.get("in_z"))
+    xs = dense(x, p["in_x"], sp.get("in_x"))
+    Bm = dense(x, p["in_B"], sp.get("in_B"))
+    Cm = dense(x, p["in_C"], sp.get("in_C"))
+    dt = dense(x, p["in_dt"], sp.get("in_dt"))
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P); dt: (B,S,H) (already softplus'd); A: (H,) < 0;
+    Bm/Cm: (B,S,N).  Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    L = max(1, min(chunk, S))
+    while S % L:
+        L -= 1
+    nc = S // L
+
+    xc = jnp.moveaxis(xh.reshape(Bsz, nc, L, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, L, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nc, L, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nc, L, N), 1, 0)
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def chunk_step(S_prev, inputs):
+        xb, dtb, Bb, Cb = inputs                   # (B,L,H,P),(B,L,H),(B,L,N)x2
+        dtb = dtb.astype(jnp.float32)
+        dA = dtb * A                               # (B,L,H), negative
+        cum = jnp.cumsum(dA, axis=1)               # inclusive cumsum
+        # intra-chunk quadratic term
+        sc = jnp.einsum("bln,bmn->blm", Cb.astype(jnp.float32),
+                        Bb.astype(jnp.float32))
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])      # (B,L,M,H)
+        idx = jnp.arange(L)
+        causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
+        att = sc[..., None] * jnp.where(causal, decay, 0.0) * dtb[:, None]
+        y = jnp.einsum("blmh,bmhp->blhp", att, xb.astype(jnp.float32))
+        # inter-chunk contribution from the carried state
+        y = y + jnp.einsum("bln,bhpn->blhp", Cb.astype(jnp.float32),
+                           S_prev) * jnp.exp(cum)[..., None]
+        # state update
+        to_end = jnp.exp(cum[:, -1:, :] - cum) * dtb            # (B,L,H)
+        Sc = jnp.einsum("blh,bln,blhp->bhpn", to_end,
+                        Bb.astype(jnp.float32), xb.astype(jnp.float32))
+        S_new = S_prev * jnp.exp(cum[:, -1])[..., None, None] + Sc
+        return S_new, y.astype(xh.dtype)
+
+    final, yc = jax.lax.scan(chunk_step, init_state, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def mamba_apply(p, x, cfg, sp=None, cache=None, mode: str = "train"):
+    """x: (B,S,D) for train/prefill, (B,1,D) for decode.
+
+    Returns (out, new_cache).  Cache: {"conv_x","conv_B","conv_C","ssm"}.
+    """
+    H, P, N = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Dp = p["D"].astype(jnp.float32)
+
+    if mode == "decode":
+        xt = x[:, 0]
+        z, xs, Bm, Cm, dt = _project_inputs(p, xt, sp)
+        xs, conv_x = _conv_step(cache["conv_x"], xs, p["conv_x"])
+        Bm, conv_B = _conv_step(cache["conv_B"], Bm, p["conv_B"])
+        Cm, conv_C = _conv_step(cache["conv_C"], Cm, p["conv_C"])
+        xs, Bm, Cm = silu(xs), silu(Bm), silu(Cm)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        xh = xs.reshape(-1, H, P).astype(jnp.float32)
+        dA = jnp.exp(dt * A)                                    # (B,H)
+        S_new = (cache["ssm"] * dA[..., None, None]
+                 + jnp.einsum("bh,bn,bhp->bhpn", dt,
+                              Bm.astype(jnp.float32), xh))
+        y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), S_new)
+        y = y + Dp[:, None] * xh
+        y = y.reshape(xt.shape[0], H * P).astype(x.dtype)
+        y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
+        out = dense(y, p["out_proj"], (sp or {}).get("out_proj"),
+                row_parallel=True)
+        return out[:, None], {"conv_x": conv_x, "conv_B": conv_B,
+                              "conv_C": conv_C, "ssm": S_new}
+
+    B, S, D = x.shape
+    z, xs, Bm, Cm, dt = _project_inputs(p, x, sp)
+    raw = (xs, Bm, Cm)          # pre-conv inputs, tails feed the conv cache
+    xs = silu(_causal_conv(xs, p["conv_x"]))
+    Bm = silu(_causal_conv(Bm, p["conv_B"]))
+    Cm = silu(_causal_conv(Cm, p["conv_C"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(B, S, H, P)
+    xh = constrain(xh, "batch", None, "ssm_heads", None)
+    y, S_fin = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + Dp[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, H * P).astype(x.dtype)
+    y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"], (sp or {}).get("out_proj"),
+                row_parallel=True)
+
+    new_cache = None
+    if mode == "prefill":
+        w = cfg.ssm_conv
+        def tail(u):
+            return u[:, -(w - 1):] if S >= w - 1 else jnp.pad(
+                u, ((0, 0), (w - 1 - S, 0), (0, 0)))[:, -(w - 1):]
+        # conv caches hold the *pre-activation* projected inputs
+        new_cache = {"conv_x": tail(raw[0]), "conv_B": tail(raw[1]),
+                     "conv_C": tail(raw[2]), "ssm": S_fin}
+    return out, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, global_norm, init, schedule, update
+
+__all__ = ["AdamWConfig", "global_norm", "init", "schedule", "update"]

@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, host-disjointness, resumability."""
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM, eval_batch
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=128, seq_len=64, global_batch=8, seed=3)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_deterministic_per_step():
+    ds = SyntheticLM(_cfg())
+    np.testing.assert_array_equal(ds.batch(5), ds.batch(5))
+    assert not np.array_equal(ds.batch(5), ds.batch(6))
+
+
+def test_host_sharding_partitions_global_batch():
+    cfg = _cfg()
+    ds = SyntheticLM(cfg)
+    full = ds.batch(3, host_id=0, num_hosts=1)
+    halves = [ds.batch(3, host_id=h, num_hosts=2) for h in (0, 1)]
+    np.testing.assert_array_equal(np.concatenate(halves), full)
+
+
+def test_resume_replays_identically():
+    ds = SyntheticLM(_cfg())
+    it1 = ds.iterator(start_step=0)
+    seen = [next(it1) for _ in range(6)]
+    it2 = ds.iterator(start_step=4)       # "restart" from step 4
+    np.testing.assert_array_equal(next(it2), seen[4])
+    np.testing.assert_array_equal(next(it2), seen[5])
+
+
+def test_eval_disjoint_from_train():
+    cfg = _cfg()
+    ev = eval_batch(cfg, n=4)
+    tr = SyntheticLM(cfg).batch(0)
+    assert not np.array_equal(ev[:4, :16], tr[:4, :16])
+
+
+def test_tokens_in_vocab_and_structured():
+    cfg = _cfg(seq_len=160)        # > motif_period so a copy motif fits
+    b = SyntheticLM(cfg).batch(0)
+    assert b.min() >= 0 and b.max() < cfg.vocab_size
+    # motif copies exist: some offset repeats
+    row = b[0]
+    period, L = cfg.motif_period, cfg.motif_len
+    assert np.array_equal(row[period:period + L],
+                          row[period - L:period])

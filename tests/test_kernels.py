@@ -1,0 +1,99 @@
+"""Pallas kernel validation: interpret-mode execution vs the pure-jnp
+oracles in kernels/ref.py, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import sparse_matmul as K
+
+SHAPES = [
+    (1, 256, 128, 128),     # matvec, tiny
+    (4, 512, 384, 128),     # uneven m
+    (8, 1024, 512, 256),    # bigger blocks
+    (3, 384, 256, 128),     # B not multiple of bt
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(B, n, m, dtype, key=0):
+    k = jax.random.PRNGKey(key)
+    x = jax.random.normal(k, (B, n), dtype)
+    w = (jax.random.normal(jax.random.fold_in(k, 1), (n, m), dtype) * 0.1
+         ).astype(dtype)
+    g = jnp.abs(jax.random.normal(jax.random.fold_in(k, 2), (n,))) + 0.1
+    return x, w, g
+
+
+@pytest.mark.parametrize("B,n,m,blk", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sparse_matmul_shared(B, n, m, blk, dtype):
+    x, w, _ = _data(B, n, m, dtype)
+    nb = n // blk
+    idx = jnp.arange(0, nb, 2, dtype=jnp.int32)      # every other block
+    y = K.sparse_matmul_shared(x, w, idx, blk=blk, interpret=True)
+    yr = ref.ref_sparse_matmul_shared(x, w, idx, blk)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,n,m,blk", SHAPES[:3])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sparse_matmul_per_seq(B, n, m, blk, dtype):
+    x, w, _ = _data(B, n, m, dtype)
+    nb = n // blk
+    kb = max(nb // 2, 1)
+    idx = jnp.stack([(jnp.arange(kb) + b) % nb for b in range(B)]
+                    ).astype(jnp.int32)
+    y = K.sparse_matmul_per_seq(x, w, idx, blk=blk, interpret=True)
+    yr = ref.ref_sparse_matmul_per_seq(x, w, idx, blk)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,n,m,blk", SHAPES)
+@pytest.mark.parametrize("alpha,tau", [(0.0, 0.3), (0.7, 0.5), (1.5, 1.0)])
+def test_score_mask(B, n, m, blk, alpha, tau):
+    x, _, g = _data(B, n, m, jnp.float32)
+    xm, bs = K.score_mask(x, g, alpha, tau, blk=blk, interpret=True)
+    xmr, bsr = ref.ref_score_mask(x, g, alpha, tau, blk)
+    np.testing.assert_allclose(np.asarray(xm), np.asarray(xmr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(bs), np.asarray(bsr), rtol=1e-4)
+
+
+@pytest.mark.parametrize("B,n,m,blk", SHAPES[:3])
+@pytest.mark.parametrize("k_frac,keep_frac", [(1.0, 1.0), (0.75, 0.5),
+                                              (0.5, 0.5)])
+def test_wisparse_project_vs_oracle(B, n, m, blk, k_frac, keep_frac):
+    x, w, g = _data(B, n, m, jnp.float32)
+    sp = {"g": g, "alpha": jnp.float32(0.7), "tau": jnp.float32(0.2),
+          "keep_frac": jnp.float32(keep_frac)}
+    y = ops.wisparse_project(x, w, sp, block=blk, k_frac=k_frac,
+                             interpret=True)
+    kb = max(1, min(n // blk, round(n // blk * k_frac)))
+    yr = ref.ref_wisparse_project(x, w, sp, k_blocks=kb, blk=blk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_full_keep_matches_dense():
+    """keep everything (tau=-inf, k=all) -> exactly the dense matmul."""
+    x, w, g = _data(4, 512, 256, jnp.float32)
+    sp = {"g": g, "alpha": jnp.float32(1.0), "tau": jnp.float32(-jnp.inf),
+          "keep_frac": jnp.float32(1.0)}
+    y = ops.wisparse_project(x, w, sp, block=128, k_frac=1.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_project_jit_and_grad_free():
+    x, w, g = _data(2, 256, 128, jnp.float32)
+    sp = {"g": g, "alpha": jnp.float32(0.5), "tau": jnp.float32(0.1),
+          "keep_frac": jnp.float32(0.6)}
+    f = jax.jit(lambda x: ops.wisparse_project(x, w, sp, block=128,
+                                               k_frac=0.8))
+    y1, y2 = f(x), ops.wisparse_project(x, w, sp, block=128, k_frac=0.8)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)

@@ -1,0 +1,101 @@
+"""Coverage for the perf-phase execution paths (EXPERIMENTS.md §Perf):
+aligned batched decode, balanced grouped top-k gather, fused projections."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import sparse_linear as sl
+from repro.models import api, model as M
+import repro.models.params as P
+
+
+def _pad_caches(cfg, caches, B, T):
+    target = P.abstract_params(api.cache_schema(cfg, B, T), cfg.dtype)
+
+    def fit(src, dst):
+        if src.shape == dst.shape:
+            return src.astype(dst.dtype)
+        pads = [(0, d - s) for s, d in zip(src.shape, dst.shape)]
+        return jnp.pad(src, pads).astype(dst.dtype)
+
+    return jax.tree_util.tree_map(fit, caches, target)
+
+
+def test_aligned_decode_matches_unaligned():
+    """aligned_decode (single DUS cache writes) must be numerically
+    identical to the general per-sequence path when positions agree."""
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    B, S, T = 2, 20, 24
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    _, caches = M.forward(params, cfg, tokens=toks[:, :-1], mode="prefill")
+    caches = _pad_caches(cfg, caches, B, T)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    lo, c0 = M.forward(params, cfg, tokens=toks[:, -1], mode="decode",
+                       caches=caches, positions=pos)
+    with M.aligned_decode():
+        la, c1 = M.forward(params, cfg, tokens=toks[:, -1], mode="decode",
+                           caches=caches, positions=pos)
+    np.testing.assert_allclose(np.asarray(lo), np.asarray(la), atol=1e-5)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                np.asarray(b), atol=1e-6),
+        c0, c1)
+
+
+def test_aligned_decode_rolling_window():
+    cfg = reduced(get_config("gemma3_4b"))
+    params = api.init_model(cfg, 0)
+    B, S = 2, 60                      # window 32 < S -> rolling caches
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0,
+                              cfg.vocab_size)
+    full, _ = M.forward(params, cfg, tokens=toks, mode="train")
+    _, caches = M.forward(params, cfg, tokens=toks[:, :-1], mode="prefill")
+    caches = _pad_caches(cfg, caches, B, 64)
+    with M.aligned_decode():
+        logits, _ = M.forward(params, cfg, tokens=toks[:, -1], mode="decode",
+                              caches=caches,
+                              positions=jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, -1]),
+                               atol=2e-5)
+
+
+def test_grouped_gather_matches_global_budget():
+    """Balanced per-shard selection keeps the same global channel budget
+    and stays close to the global top-k output (beyond-paper A3)."""
+    k = jax.random.PRNGKey(0)
+    B, n, m, G = 4, 512, 128, 16
+    x = jax.random.normal(k, (B, n))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (n, m)) * 0.1
+    sp = sl.default_sp(w)
+    sp = {**sp, "keep_frac": jnp.float32(0.5)}
+    with sl.sparsity_mode("topk_shared", k_max_frac=0.5):
+        y_global = sl._topk_gather(x, w, sp, sl.current_mode(), groups=1)
+        y_grouped = sl._topk_gather(x, w, sp, sl.current_mode(), groups=G)
+    y_dense = x @ w
+    # both sparse outputs approximate dense comparably
+    e_g = float(jnp.linalg.norm(y_global - y_dense))
+    e_b = float(jnp.linalg.norm(y_grouped - y_dense))
+    assert e_b < 2.0 * e_g + 1e-6
+    # full keep: both are exact
+    sp1 = {**sp, "keep_frac": jnp.float32(1.0)}
+    with sl.sparsity_mode("topk_shared", k_max_frac=1.0):
+        yg = sl._topk_gather(x, w, sp1, sl.current_mode(), groups=G)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(y_dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fused_qkv_matches_separate():
+    """The fused dense-path projections (B3) must match the separate
+    (sparse/calibration) path exactly."""
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0,
+                              cfg.vocab_size)
+    fused, _ = M.forward(params, cfg, tokens=toks, mode="train")
+    with sl.capture_inputs():          # capture forces the separate path
+        sep, _ = M.forward(params, cfg, tokens=toks, mode="train")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(sep),
+                               rtol=1e-5, atol=1e-5)

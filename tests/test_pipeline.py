@@ -1,0 +1,130 @@
+"""WiSparse pipeline tests: component ordering (paper Table 2), allocation
+invariants, plan (de)serialization."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import calibration, pipeline
+from repro.core.allocation import (EvoConfig, block_level_allocation,
+                                   intra_block_allocation, weighted_average)
+from repro.models import api
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    # inject weight-column outliers (paper Obs. 1: low-|x| channels can
+    # carry high-norm weight columns) — random-init weights are isotropic,
+    # where activation-only and weight-aware scores coincide by symmetry
+    from repro.core.unstacked import SPARSIFIABLE
+
+    def spike(path, a):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in SPARSIFIABLE and a.ndim >= 3:   # stacked (reps, n, m)
+            n = a.shape[-2]
+            key = jax.random.fold_in(jax.random.PRNGKey(7), n)
+            mask = jax.random.bernoulli(key, 0.1, (n,))
+            scale = jnp.where(mask, 4.0, 1.0).astype(a.dtype)
+            return a * scale[..., :, None]
+        return a
+
+    params = jax.tree_util.tree_map_with_path(spike, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 48), 0,
+                              cfg.vocab_size)
+    return calibration.build_context(params, cfg, {"tokens": toks}), \
+        params, cfg, {"tokens": toks}
+
+
+def test_context_shapes(ctx):
+    c, params, cfg, _ = ctx
+    assert c.num_blocks == cfg.num_layers
+    assert len(c.block_io) == c.num_blocks + 1
+    # every sparsifiable linear captured exactly once
+    for d in range(c.num_blocks):
+        for path in c.keys_by_depth[d]:
+            key = (d, path)
+            assert key in c.acts and key in c.g
+            assert c.acts[key].shape[-1] == c.g[key].shape[-1]
+
+
+def test_tau_monotone_in_sparsity(ctx):
+    c = ctx[0]
+    key = (0, c.keys_by_depth[0][0])
+    taus = [c.tau_for(key, 1.0, keep) for keep in (0.9, 0.5, 0.2)]
+    assert taus[0] <= taus[1] <= taus[2]
+
+
+def test_weight_aware_beats_activation_only(ctx):
+    """Paper Table 2 first step: +weight importance improves over
+    activation-only at matched 50% sparsity."""
+    c = ctx[0]
+    ratios = {(d, p): 0.5 for d in range(c.num_blocks)
+              for p in c.keys_by_depth[d]}
+    kl_act = c.fitness(c.make_sp({k: 0.0 for k in ratios}, ratios))
+    kl_w = c.fitness(c.make_sp({k: 1.0 for k in ratios}, ratios))
+    assert np.isfinite(kl_act) and np.isfinite(kl_w)
+    assert kl_w < kl_act
+
+
+def test_evolutionary_allocation_invariants(ctx):
+    c = ctx[0]
+    evo = EvoConfig(generations=2, offspring=4, eps=0.1, seed=0)
+    p = block_level_allocation(c, 0.5, evo)
+    assert weighted_average(c, p) <= 0.5 + 1e-9
+    assert (p >= 0).all() and (p <= 0.95).all()
+
+
+def test_greedy_allocation_meets_budget(ctx):
+    c = ctx[0]
+    alloc = intra_block_allocation(c, 0, 0.5, delta=0.25)
+    sizes = np.array([c.sizes[k] for k in alloc])
+    vals = np.array([alloc[k] for k in alloc])
+    eff = float(np.sum(vals * sizes) / np.sum(sizes))
+    assert eff >= 0.5 - 0.25           # within one delta of the budget
+
+
+def test_full_pipeline_beats_uniform_activation_only(ctx):
+    c, params, cfg, batch = ctx
+    plan_a = pipeline.activation_only_plan(params, cfg, batch, 0.5, ctx=c)
+    kl_a = c.fitness(plan_a.per_depth_sp)
+    plan = pipeline.run_pipeline(
+        params, cfg, batch, 0.5,
+        evo=EvoConfig(generations=2, offspring=4, eps=0.1),
+        delta=0.25, coord_passes=0, ctx=c)
+    kl_f = c.fitness(plan.per_depth_sp)
+    assert kl_f < kl_a
+    # global budget respected at block level
+    assert weighted_average(c, plan.block_ratios) <= 0.5 + 1e-9
+
+
+def test_plan_save_load(tmp_path, ctx):
+    c, params, cfg, batch = ctx
+    plan = pipeline.activation_only_plan(params, cfg, batch, 0.4, ctx=c)
+    f = str(tmp_path / "plan.json")
+    plan.save(f)
+    p_target, blocks, layers, alphas, taus = pipeline.SparsePlan.load_ratios(f)
+    assert p_target == 0.4
+    assert len(blocks) == c.num_blocks
+    assert set(layers) == set(plan.layer_ratios)
+
+
+def test_stacked_sp_matches_unstacked_numerics(ctx):
+    """The re-stacked sp tree drives the scan model to the same logits as
+    the unstacked calibration model."""
+    from repro.core import sparse_linear as sl
+    from repro.core import unstacked as U
+    from repro.models import model as M
+    c, params, cfg, batch = ctx
+    plan = pipeline.activation_only_plan(params, cfg, batch, 0.5, ctx=c)
+    with sl.sparsity_mode("mask"):
+        lu, _ = U.forward_unstacked(params, cfg, batch["tokens"],
+                                    per_depth_sp=plan.per_depth_sp)
+        ls, _ = M.forward(params, cfg, tokens=batch["tokens"], mode="train",
+                          sp=plan.stacked_sp)
+    np.testing.assert_allclose(np.asarray(lu), np.asarray(ls),
+                               rtol=1e-4, atol=1e-4)

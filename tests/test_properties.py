@@ -1,0 +1,134 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse_linear as sl
+from repro.optim import adamw
+
+COMMON = dict(deadline=None, max_examples=25)
+
+
+@st.composite
+def xw(draw, max_n=64, max_m=32):
+    n = draw(st.integers(4, max_n))
+    m = draw(st.integers(2, max_m))
+    b = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2**16))
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (b, n))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (n, m)) * 0.2
+    return x, w
+
+
+@given(xw(), st.floats(0.0, 1.5))
+@settings(**COMMON)
+def test_mask_mode_equals_masked_dense(data, alpha):
+    """project(mask) == (x * 1[s>=tau]) @ w exactly (paper Eq. 5)."""
+    x, w = data
+    g = sl.column_norms(w)
+    s = np.asarray(sl.scores(x, g, alpha))
+    tau = float(np.median(s))
+    sp = {"g": g, "alpha": jnp.float32(alpha), "tau": jnp.float32(tau),
+          "keep_frac": jnp.float32(1.0)}
+    with sl.sparsity_mode("mask"):
+        y = sl.project(x, w, sp)
+    m = (s >= tau).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(y),
+                               (np.asarray(x) * m) @ np.asarray(w),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(xw(), st.floats(0.1, 0.9))
+@settings(**COMMON)
+def test_threshold_keeps_expected_fraction(data, keep):
+    """Eq. 7: tau at the (1-r)-quantile keeps ~r of score mass entries."""
+    x, w = data
+    g = sl.column_norms(w)
+    s = np.asarray(sl.scores(x, g, 1.0)).ravel()
+    tau = np.quantile(s, 1.0 - keep)
+    frac = float((s >= tau).mean())
+    assert abs(frac - keep) < 0.25 + 2.0 / s.size
+
+@given(xw())
+@settings(**COMMON)
+def test_alpha_zero_is_activation_only(data):
+    """alpha=0 collapses the weight-aware score to TEAL's |x| criterion."""
+    x, w = data
+    g = sl.column_norms(w)
+    s = np.asarray(sl.scores(x, g, 0.0))
+    np.testing.assert_allclose(s, np.abs(np.asarray(x)), rtol=1e-5)
+
+
+@given(xw(), st.floats(0.0, 1.5), st.floats(0.1, 1.0))
+@settings(**COMMON)
+def test_topk_shared_exact_on_kept_channels(data, alpha, kf):
+    """Gather backend == dense matmul restricted to its kept channel set."""
+    x, w = data
+    n = w.shape[0]
+    g = sl.column_norms(w)
+    sp = {"g": g, "alpha": jnp.float32(alpha),
+          "tau": jnp.float32(-jnp.inf), "keep_frac": jnp.float32(kf)}
+    with sl.sparsity_mode("topk_shared", k_max_frac=kf):
+        y = sl.project(x, w, sp)
+    # reconstruct the same channel set
+    sal = np.asarray(sl.scores(x, g, alpha)).reshape(-1, n).mean(0)
+    k_max = max(1, round(n * kf))
+    idx = np.argsort(-sal, kind="stable")[:k_max]
+    k_l = int(np.round(kf * n))
+    keep = idx[np.arange(k_max) < k_l]
+    mask = np.zeros(n, np.float32)
+    mask[keep] = 1
+    yr = (np.asarray(x) * mask) @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(y), yr, rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(0, 2**16), st.integers(1, 64))
+@settings(**COMMON)
+def test_int8_error_feedback_preserves_sum(seed, n):
+    """Compressed grads with error feedback: cumulative sum drift stays
+    bounded by one quantization step (the EF invariant)."""
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=(n,)).astype(np.float32)
+    ef = np.zeros_like(g)
+    tot_deq = np.zeros_like(g)
+    steps = 8
+    for _ in range(steps):
+        deq, ef = adamw._quantize_int8(jnp.asarray(g), jnp.asarray(ef))
+        deq, ef = np.asarray(deq), np.asarray(ef)
+        tot_deq += deq
+    # total transmitted + residual == total true gradient mass
+    np.testing.assert_allclose(tot_deq + ef, g * steps, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 2**16))
+@settings(**COMMON)
+def test_column_norms_match_numpy(seed):
+    k = jax.random.PRNGKey(seed)
+    w = jax.random.normal(k, (16, 4, 3))
+    g = np.asarray(sl.column_norms(w))
+    ref = np.linalg.norm(np.asarray(w).reshape(16, -1), axis=1)
+    np.testing.assert_allclose(g, ref, rtol=1e-5)
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.5), st.integers(0, 1000))
+@settings(**COMMON)
+def test_evo_constraint_invariant(nblocks, eps, seed):
+    """Alg. 3 repair loop keeps the weighted average at/below target."""
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(1, 10, nblocks)
+    p_target = 0.5
+    p = np.full(nblocks, p_target)
+    for _ in range(5):
+        q = p.copy()
+        for b in rng.choice(nblocks, max(1, nblocks // 10), replace=False):
+            q[b] = min(q[b] + eps, 0.95)
+        guard = 0
+        while np.sum(q * w) / np.sum(w) > p_target + 1e-9 and guard < 10000:
+            j = rng.integers(nblocks)
+            q[j] = max(q[j] - eps, 0.0)
+            guard += 1
+        p = q
+        assert np.sum(p * w) / np.sum(w) <= p_target + 1e-9
+        assert (p >= 0).all() and (p <= 0.95 + 1e-12).all()

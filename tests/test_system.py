@@ -1,0 +1,79 @@
+"""End-to-end system behaviour: train a tiny LM on synthetic data, apply
+the full WiSparse pipeline, and serve with sparsity — the paper's
+train-free sparsification story on a model that actually learned."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import calibration, pipeline
+from repro.core.allocation import EvoConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.serve import generate
+from repro.launch.train import train
+from repro.models import api
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params, cfg, data_cfg, hist, final = train(
+        arch="llama31_8b", use_reduced=True, steps=80, batch=8, seq=96,
+        lr=5e-3, log=lambda *a: None)
+    return params, cfg, data_cfg, hist, final
+
+
+def test_training_reduces_loss(trained):
+    _, cfg, _, hist, final = trained
+    assert hist[0]["loss"] > final + 0.05
+    assert final < np.log(cfg.vocab_size)      # better than uniform
+
+
+def test_wisparse_on_trained_model(trained):
+    """50% sparsity on the trained model: full pipeline beats
+    activation-only (the paper's core accuracy claim, mechanism-level)."""
+    params, cfg, data_cfg, _, _ = trained
+    calib = SyntheticLM(dataclasses.replace(data_cfg, global_batch=2)
+                        ).batch(991)
+    batch = {"tokens": jnp.asarray(calib)}
+    ctx = calibration.build_context(params, cfg, batch)
+    plan_act = pipeline.activation_only_plan(params, cfg, batch, 0.5, ctx=ctx)
+    kl_act = ctx.fitness(plan_act.per_depth_sp)
+    plan = pipeline.run_pipeline(
+        params, cfg, batch, 0.5,
+        evo=EvoConfig(generations=2, offspring=4, eps=0.1),
+        delta=0.25, coord_passes=0, ctx=ctx)
+    kl_full = ctx.fitness(plan.per_depth_sp)
+    assert kl_full < kl_act
+    assert kl_full < 1.0                       # sparse model stays sane
+
+
+def test_serve_generates_with_sparsity(trained):
+    params, cfg, data_cfg, _, _ = trained
+    from repro.core.sp_schema import default_sp_stacked
+    prompts = jnp.asarray(SyntheticLM(
+        dataclasses.replace(data_cfg, global_batch=2, seq_len=32)).batch(5))
+    sp = default_sp_stacked(params, cfg, keep_frac=0.5)
+    toks_sparse = generate(params, cfg, prompts, 8, sp,
+                           mode="topk_shared", k_max_frac=0.5)
+    toks_dense = generate(params, cfg, prompts, 8, None, mode="off")
+    assert toks_sparse.shape == (2, 8) == toks_dense.shape
+    # a trained model + 50% weight-aware sparsity should mostly agree with
+    # the dense decode on easy synthetic text
+    agree = float((toks_sparse == toks_dense).mean())
+    assert agree >= 0.5
+
+
+def test_decode_equals_prefill_continuation(trained):
+    """Greedy decode continuation is consistent with re-running prefill."""
+    params, cfg, data_cfg, _, _ = trained
+    prompts = jnp.asarray(SyntheticLM(
+        dataclasses.replace(data_cfg, global_batch=2, seq_len=16)).batch(6))
+    toks = generate(params, cfg, prompts, 4, None, mode="off")
+    # re-run with the first generated token appended: next token must match
+    ext = jnp.concatenate([prompts, toks[:, :1]], axis=1)
+    toks2 = generate(params, cfg, ext, 3, None, mode="off")
+    np.testing.assert_array_equal(np.asarray(toks[:, 1:]),
+                                  np.asarray(toks2))
