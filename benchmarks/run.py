@@ -14,6 +14,7 @@ MODULES = [
     "benchmarks.fig4_efficiency",
     "benchmarks.fig6_alpha",
     "benchmarks.roofline_report",
+    "benchmarks.serving_throughput",
 ]
 
 

@@ -78,6 +78,46 @@ def capture_active() -> bool:
     return getattr(_STATE, "capture", None) is not None
 
 
+@contextlib.contextmanager
+def token_weights(w):
+    """Serving hook: weight each token row's contribution to the shared
+    top-k saliency aggregate.  The engine passes the active-slot mask for
+    batched decode (so freed/empty slots don't pollute the layer's shared
+    channel set) and the real-token mask for padded prefill chunks.  With
+    all-ones weights the ranking (and the floats) match the unweighted
+    mean exactly.  w: (rows,) or None; rows must equal the flattened
+    token count of each projection call inside the context."""
+    prev = getattr(_STATE, "tok_w", None)
+    _STATE.tok_w = w
+    try:
+        yield
+    finally:
+        _STATE.tok_w = prev
+
+
+def current_token_weights():
+    return getattr(_STATE, "tok_w", None)
+
+
+def _saliency(xf, sp):
+    """Per-channel shared saliency over all token rows (optionally
+    weighted by the serving engine's token_weights context)."""
+    s = scores(xf, sp["g"], sp["alpha"])                 # (rows, n_in)
+    tw = current_token_weights()
+    if tw is None:
+        return s.mean(axis=0)
+    if tw.size != s.shape[0]:
+        # a projection whose rows aren't the context's tokens (e.g. an
+        # expert-dispatched layout) must opt out via token_weights(None)
+        # — mis-aligned weights would silently bias the channel set
+        raise ValueError(
+            f"token_weights has {tw.size} rows but the projection sees "
+            f"{s.shape[0]} token rows; wrap dispatch-reshaped projections "
+            "in token_weights(None)")
+    twf = tw.reshape(-1, 1).astype(jnp.float32)
+    return (s * twf).sum(axis=0) / jnp.maximum(twf.sum(), 1.0)
+
+
 def record(w, x):
     cap = getattr(_STATE, "capture", None)
     if cap is not None and not isinstance(x, jax.core.Tracer):
@@ -149,7 +189,7 @@ def _topk_gather(x, w, sp, mode: SparsityMode, groups: int = 1):
         return _topk_gather_grouped(x, w, sp, mode, groups)
     n_in = w.shape[0]
     xf = x.reshape(-1, n_in)
-    sal = scores(xf, sp["g"], sp["alpha"]).mean(axis=0)          # (n_in,)
+    sal = _saliency(xf, sp)                                      # (n_in,)
     if mode.mode == "topk_block":
         b = mode.block
         nb = max(n_in // b, 1)
@@ -187,7 +227,7 @@ def _topk_gather_grouped(x, w, sp, mode: SparsityMode, groups: int):
     G = groups
     ng = n_in // G
     xf = x.reshape(-1, n_in)
-    sal = scores(xf, sp["g"], sp["alpha"]).mean(axis=0).reshape(G, ng)
+    sal = _saliency(xf, sp).reshape(G, ng)
     k_max = max(1, round(ng * mode.k_max_frac))
     _, idx = jax.lax.top_k(sal, k_max)                    # (G, k)
     k_l = jnp.round(sp["keep_frac"] * ng).astype(jnp.int32)

@@ -21,7 +21,7 @@ from repro.kernels import sparse_matmul as K
 def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = None,
                      interpret: bool = True, per_seq: bool = False):
     """x: (..., n); w: (n, *out).  Returns x W with WiSparse block sparsity."""
-    from repro.core.sparse_linear import current_mode
+    from repro.core.sparse_linear import current_mode, current_token_weights
     n = w.shape[0]
     w2 = w.reshape(n, -1)
     lead = x.shape[:-1]
@@ -33,8 +33,16 @@ def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = None,
     kf = k_frac if k_frac is not None else current_mode().k_max_frac
     kb = max(1, min(nb, round(nb * kf)))
 
+    # serving engine: each row's block-score contribution is weighted by
+    # the active-slot / real-token mask (fused into the kernel)
+    tw = current_token_weights()
+    if tw is not None and tw.size != xf.shape[0]:
+        raise ValueError(
+            f"token_weights has {tw.size} rows but the projection sees "
+            f"{xf.shape[0]} token rows; wrap dispatch-reshaped projections "
+            "in token_weights(None)")
     xm, bs = K.score_mask(xf, sp["g"], sp["alpha"], sp["tau"], blk=blk,
-                          interpret=interpret)
+                          interpret=interpret, row_weights=tw)
     _, idx = jax.lax.top_k(bs, kb)
     # per-layer budget: zero blocks ranked past keep_frac*nb
     kb_l = jnp.round(sp["keep_frac"] * nb).astype(jnp.int32)

@@ -124,9 +124,12 @@ def sparse_matmul_per_seq(x, w, block_idx, *, blk: int = DEFAULT_BLK,
     )(block_idx, x, w)
 
 
-def _score_mask_kernel(ab_ref, x_ref, g_ref, xm_ref, bs_ref):
+def _score_mask_kernel(ab_ref, x_ref, g_ref, w_ref, xm_ref, bs_ref):
     """Fused WiSparse scoring: s=|x|*g^alpha, m=s>=tau, xm=x*m and the
-    per-channel-block aggregate score (for block selection)."""
+    per-channel-block aggregate score (for block selection).  Each row's
+    score contribution is scaled by its weight (serving: 0 for freed
+    slots / pad tokens, 1 otherwise; all-ones is bit-identical to the
+    unweighted sum).  The mask itself stays per-token (unweighted)."""
     alpha = ab_ref[0]
     tau = ab_ref[1]
     x = x_ref[...]
@@ -134,18 +137,24 @@ def _score_mask_kernel(ab_ref, x_ref, g_ref, xm_ref, bs_ref):
     s = jnp.abs(x.astype(jnp.float32)) * jnp.power(g, alpha)
     keep = s >= tau
     xm_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
-    bs_ref[0, 0] = jnp.sum(jnp.where(keep, s, 0.0))
+    bs_ref[0, 0] = jnp.sum(jnp.where(keep, s, 0.0) * w_ref[...])
 
 
 def score_mask(x, g, alpha, tau, *, blk: int = DEFAULT_BLK,
-               interpret: bool = True):
-    """Returns (x_masked (B,n), block_scores (n//blk,)) — Eq. 4/5 fused."""
+               interpret: bool = True, row_weights=None):
+    """Returns (x_masked (B,n), block_scores (n//blk,)) — Eq. 4/5 fused.
+    row_weights (B,) optionally weights each row's block-score
+    contribution (the serving engine's active-slot / real-token mask)."""
     B, n = x.shape
     blk = min(blk, n)
     assert n % blk == 0
     nb = n // blk
     ab = jnp.stack([jnp.asarray(alpha, jnp.float32),
                     jnp.asarray(tau, jnp.float32)])
+    if row_weights is None:
+        rw = jnp.ones((B, 1), jnp.float32)
+    else:
+        rw = row_weights.reshape(B, 1).astype(jnp.float32)
     xm, bs = pl.pallas_call(
         _score_mask_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -154,6 +163,7 @@ def score_mask(x, g, alpha, tau, *, blk: int = DEFAULT_BLK,
             in_specs=[
                 pl.BlockSpec((B, blk), lambda j, ab: (0, j)),
                 pl.BlockSpec((blk,), lambda j, ab: (j,)),
+                pl.BlockSpec((B, 1), lambda j, ab: (0, 0)),
             ],
             out_specs=[
                 pl.BlockSpec((B, blk), lambda j, ab: (0, j)),
@@ -163,5 +173,5 @@ def score_mask(x, g, alpha, tau, *, blk: int = DEFAULT_BLK,
         out_shape=[jax.ShapeDtypeStruct((B, n), x.dtype),
                    jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
         interpret=interpret,
-    )(ab, x, g)
+    )(ab, x, g, rw)
     return xm, bs[:, 0]

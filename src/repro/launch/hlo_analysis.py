@@ -161,6 +161,36 @@ def multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
     return mult
 
 
+def _operand_list(line: str, opcode: str) -> List[str]:
+    """Operand names of a top-level op, robust to typed operand lists:
+    ``dot(f32[64,256]{1,0} %a, f32[256,256]{2,1,0} %b)`` -> [a, b].
+    Splits only on commas outside brackets/braces/parens, then takes the
+    last whitespace token of each piece (the %name)."""
+    m = re.search(r"\b" + re.escape(opcode) + r"\(", line)
+    if not m:
+        return []
+    depth, parts, cur = 0, [], []
+    for ch in line[m.end():]:
+        if ch == ")" and depth == 0:    # closes the operand list
+            break
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    names = []
+    for p in parts:
+        toks = p.strip().split()
+        if toks:
+            names.append(toks[-1].lstrip("%"))
+    return names
+
+
 def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
     result_bytes_dims = _SHAPE_RE.findall(op.result_type)
     if not result_bytes_dims:
@@ -171,12 +201,11 @@ def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
         if d:
             out_elems *= int(d)
     # contracted size from lhs shape + lhs_contracting_dims
-    opnds = re.search(r"\b" + re.escape(op.opcode) + r"\(([^)]*)\)", op.line)
+    opnds = _operand_list(op.line, op.opcode)
     mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
     contract = 1
     if opnds and mcd:
-        first = opnds.group(1).split(",")[0].strip().lstrip("%")
-        lhs_type = shapes.get(first, "")
+        lhs_type = shapes.get(opnds[0], "")
         sh = _SHAPE_RE.findall(lhs_type)
         if sh:
             lhs_dims = [int(d) for d in sh[0][1].split(",") if d]
@@ -217,9 +246,7 @@ def _sliced_param_bytes(callee: "Computation", param_idx: int) -> Optional[float
         elif o.opcode in ("dynamic-slice", "gather", "slice"):
             touched += _shape_bytes(o.result_type)
         elif o.opcode == "dynamic-update-slice":
-            m = re.search(r"dynamic-update-slice\(([^)]*)\)", o.line)
-            refs = [r.strip().lstrip("%").split(" ")[0]
-                    for r in m.group(1).split(",")] if m else []
+            refs = _operand_list(o.line, o.opcode)
             if refs and refs[0] in names:
                 names.add(o.name)            # aliased in-place destination
             else:
@@ -234,11 +261,7 @@ def _op_bytes(op: Op, shapes: Dict[str, str],
     if op.opcode in _NO_BYTES:
         return 0.0
     out_b = _shape_bytes(op.result_type)
-    opnds = re.search(r"\b" + re.escape(op.opcode) + r"\(([^)]*)\)", op.line)
-    refs = []
-    if opnds:
-        refs = [r.strip().lstrip("%").split(" ")[0]
-                for r in opnds.group(1).split(",") if r.strip()]
+    refs = _operand_list(op.line, op.opcode)
     callee = comps.get(op.fusion_callee) if (comps and op.fusion_callee) else None
     in_b = 0.0
     for i, ref in enumerate(refs):
@@ -263,13 +286,10 @@ def _op_bytes(op: Op, shapes: Dict[str, str],
             upd_b = 0.0
             for o in callee.ops:
                 if o.opcode == "dynamic-update-slice":
-                    m = re.search(r"dynamic-update-slice\(([^)]*)\)", o.line)
-                    if m:
-                        rs = [r.strip().lstrip("%").split(" ")[0]
-                              for r in m.group(1).split(",")]
-                        local = {x.name: x.result_type for x in callee.ops}
-                        if len(rs) >= 2 and rs[1] in local:
-                            upd_b += _shape_bytes(local[rs[1]])
+                    rs = _operand_list(o.line, o.opcode)
+                    local = {x.name: x.result_type for x in callee.ops}
+                    if len(rs) >= 2 and rs[1] in local:
+                        upd_b += _shape_bytes(local[rs[1]])
             if upd_b:
                 out_b = min(out_b, upd_b)
     return float(in_b + out_b)

@@ -1,4 +1,5 @@
-"""Serving driver: batched prefill + decode with WiSparse.
+"""Serving CLI: a thin driver over the continuous-batching engine
+(``repro.serving``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama31_8b --reduced \
         --sparsity 0.5 --prompt-len 64 --gen 32 --batch 4
@@ -6,7 +7,10 @@
 Implements the paper's serving recipe: sparsify (by default) only half of
 the prefill tokens and all decode tokens (§5.1), with the per-token mask
 backend for accuracy-faithful numerics or the batched top-k backends for
-TPU-shaped execution.  Greedy decoding over the KV-cache serve path.
+TPU-shaped execution.  Greedy decoding over the slot-pool KV-cache path;
+``--legacy`` runs the original static-batch loop (kept as the numerics
+reference — the engine matches it token-for-token for equal-length
+prompts under the whole-prompt prefill strategy).
 """
 from __future__ import annotations
 
@@ -84,9 +88,20 @@ def main():
                     choices=["mask", "topk_shared", "topk_block", "pallas"])
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to submit")
     ap.add_argument("--calib-quick", action="store_true",
                     help="tiny-budget WiSparse calibration (CPU demo)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="static-batch reference loop instead of the engine")
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="KV pool slots (0 = batch size)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="KV pool length (0 = prompt+gen)")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk size (chunked strategy)")
+    ap.add_argument("--prefill-strategy", default="auto",
+                    choices=["auto", "chunked", "whole"])
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -115,14 +130,39 @@ def main():
                 print("no calibration -> using topk_shared backend")
                 args.mode = "topk_shared"
 
+    mode = args.mode if sp is not None else "off"
+    k_max = 1.0 - args.sparsity if sp is not None else 1.0
+
+    if args.legacy:
+        t0 = time.time()
+        toks = generate(params, cfg, prompts, args.gen, sp,
+                        mode=mode, k_max_frac=k_max)
+        dt = time.time() - t0
+        n = toks.size
+        print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s on CPU)")
+        print("sample:", np.asarray(toks[0])[:16])
+        return
+
+    from repro.serving import Engine, EngineConfig
+    from repro.serving.metrics import latency_percentiles
+    ecfg = EngineConfig(
+        max_slots=args.max_slots or args.batch,
+        max_len=args.max_len or args.prompt_len + args.gen,
+        prefill_chunk=args.chunk, mode=mode, k_max_frac=k_max,
+        prefill_strategy=args.prefill_strategy)
+    engine = Engine(params, cfg, ecfg, sp)
     t0 = time.time()
-    toks = generate(params, cfg, prompts, args.gen, sp,
-                    mode=args.mode if sp is not None else "off",
-                    k_max_frac=1.0 - args.sparsity if sp is not None else 1.0)
+    for b in range(args.batch):
+        engine.submit(np.asarray(prompts[b]), args.gen)
+    out = engine.run()
     dt = time.time() - t0
-    n = toks.size
+    n = sum(len(t) for t in out.values())
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s on CPU)")
-    print("sample:", np.asarray(toks[0])[:16])
+    print("engine stats:", engine.stats.summary())
+    print("latency:", {k: round(v, 3) for k, v in
+                       latency_percentiles(engine.states.values()).items()
+                       if v is not None})
+    print("sample:", out[0][:16])
 
 
 if __name__ == "__main__":

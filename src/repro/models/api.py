@@ -201,6 +201,42 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
+def make_slot_decode_step(cfg: ModelConfig):
+    """Continuous-batching decode over a slot pool: one token per slot at
+    per-slot positions, with the active-slot mask weighting the shared
+    top-k saliency aggregate (empty slots don't pollute the layer's
+    channel set; with every slot active the floats match the plain
+    batched decode exactly)."""
+    from repro.core.sparse_linear import token_weights
+
+    def slot_decode_step(params, tokens, positions, caches, sp=None,
+                         active=None):
+        with token_weights(active):
+            logits, caches = M.forward(
+                params, cfg, tokens=tokens, mode="decode", caches=caches,
+                positions=positions, sp=sp)
+        return logits, caches
+    return slot_decode_step
+
+
+def make_chunk_prefill_step(cfg: ModelConfig):
+    """Chunked prefill of one request directly into the slot pool: tokens
+    (1,C) at chunk-start ``offset`` for pool slot ``slot``.  Pad tokens in
+    the final chunk carry zero weight in the shared saliency.  Returns
+    logits for every chunk position (the engine reads the last real one)
+    and the updated pool."""
+    from repro.core.sparse_linear import token_weights
+
+    def chunk_prefill_step(params, tokens, offset, slot, caches, sp=None,
+                           weights=None):
+        with token_weights(weights):
+            logits, caches = M.forward(
+                params, cfg, tokens=tokens, mode="chunk", caches=caches,
+                positions=offset, sp=sp, slot=slot)
+        return logits, caches
+    return chunk_prefill_step
+
+
 def step_for_shape(cfg: ModelConfig, shape: ShapeConfig,
                    opt_cfg: Optional[adamw.AdamWConfig] = None,
                    remat: str = "none"):

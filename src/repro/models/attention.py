@@ -185,6 +185,36 @@ def decode_attention(q, k_cache, v_cache, positions, k_new=None, v_new=None,
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def chunk_attention(q, k_cache, v_cache, offset, *, attn_softcap: float = 0.0):
+    """Chunked-prefill attention: a chunk of C new queries against a slot's
+    cache which *already holds* the chunk's own K/V at [offset, offset+C)
+    (written before the call, so causal masking ``t <= qpos`` covers both
+    the past context and the within-chunk triangle in one pass).
+
+    q: (B,C,H,hd); k_cache: (B,KV,hd,T); v_cache: (B,KV,T,hd) — the same
+    pre-transposed decode layouts, so chunked prefill reads the pool cache
+    without materializing transposed copies.  offset: scalar int32 start
+    position of the chunk.  Slots beyond offset+C hold stale data and are
+    masked out.
+    """
+    B, C, H, hd = q.shape
+    KV, T = k_cache.shape[1], k_cache.shape[3]
+    G = H // KV
+    scale = hd ** -0.5
+    qr = q.reshape(B, C, KV, G, hd)
+    s = jnp.einsum("bqKGd,bKdt->bKGqt", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    qpos = offset + jnp.arange(C)
+    valid = jnp.arange(T)[None, :] <= qpos[:, None]              # (C,T)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKGqt,bKtd->bKGqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
+
+
 def cache_write_kv(k_cache, v_cache, k_new, v_new, positions, *,
                    rolling: bool = False, aligned: bool = False):
     """Write one token into a layer's caches.

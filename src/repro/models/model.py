@@ -116,8 +116,17 @@ def model_schema(cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
-               positions=None, mode: str = "train", kv_override=None):
-    """Self- or cross-attention.  kv_override: (enc_out) for cross-attn."""
+               positions=None, mode: str = "train", kv_override=None,
+               slot=None):
+    """Self- or cross-attention.  kv_override: (enc_out) for cross-attn.
+
+    mode "chunk" is the serving engine's chunked-prefill path: x is one
+    request's C-token chunk, cache holds the *whole slot pool*
+    (max_slots batch dim), ``slot`` is the request's pool slot and
+    ``positions`` (B,) its chunk-start offset.  The chunk's K/V are written
+    in place at (slot, offset) via dynamic_update_slice and attention runs
+    against the slot's full cache row, so every chunk reuses one compiled
+    step regardless of prompt length or pool occupancy."""
     sp = sp or {}
     B, S, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -165,11 +174,33 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
     if cfg.rope_theta:
         if mode == "decode":
             cos, sin = rope_angles(positions[:, None], hd, cfg.rope_theta)
+        elif mode == "chunk":
+            cos, sin = rope_angles(positions[:, None] + jnp.arange(S)[None],
+                                   hd, cfg.rope_theta)
         else:
             cos, sin = rope_angles(jnp.arange(S)[None], hd, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
     q = constrain(q, "batch", None, "heads", None)
+
+    if mode == "chunk":
+        if win:
+            raise NotImplementedError(
+                "chunked prefill does not support local-attention layers; "
+                "use the engine's whole-prompt prefill strategy")
+        kc, vc = cache["k"], cache["v"]          # pool: (S,KV,hd,T)/(S,KV,T,hd)
+        off = positions[0]
+        kn = k.transpose(0, 2, 3, 1).astype(kc.dtype)        # (B,KV,hd,C)
+        vn = v.transpose(0, 2, 1, 3).astype(vc.dtype)        # (B,KV,C,hd)
+        kc = jax.lax.dynamic_update_slice(kc, kn, (slot, 0, 0, off))
+        vc = jax.lax.dynamic_update_slice(vc, vn, (slot, 0, off, 0))
+        ks = jax.lax.dynamic_slice(kc, (slot, 0, 0, 0), (B,) + kc.shape[1:])
+        vs = jax.lax.dynamic_slice(vc, (slot, 0, 0, 0), (B,) + vc.shape[1:])
+        out = attn_lib.chunk_attention(q, ks, vs, off,
+                                       attn_softcap=cfg.attn_softcap)
+        y = dense(out.reshape(B, S, H * hd), p["wo"], sp.get("wo"),
+                  row_parallel=True)
+        return y, {"k": kc, "v": vc}
 
     if mode == "decode":
         kc, vc = cache["k"], cache["v"]
@@ -211,7 +242,8 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
 
 
 def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
-                positions=None, mode: str = "train", enc_out=None):
+                positions=None, mode: str = "train", enc_out=None,
+                slot=None):
     """cache: per-layer dict (train/prefill) or, in decode mode,
     {"stack": <layer-stacked group cache entry>, "idx": layer-in-stack} —
     decode caches ride the scan *carry* and are updated in place with
@@ -219,16 +251,20 @@ def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
     mixer, ffn = kind
     sp = sp or {}
     cache = cache or {}
-    decode = mode == "decode"
+    decode = mode in ("decode", "chunk")
     new_cache = dict(cache) if decode else {}
     if mixer in ATTN_KINDS:
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
         h, nc = attn_apply(p["attn"], h, cfg, mixer, sp.get("attn"),
-                           cache.get("self"), positions, mode)
+                           cache.get("self"), positions, mode, slot=slot)
         if nc is not None:
             new_cache["self"] = nc
         x = x + h
     elif mixer == "mamba":
+        if mode == "chunk":
+            raise NotImplementedError(
+                "chunked prefill does not support SSM layers; use the "
+                "engine's whole-prompt prefill strategy")
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
         h, nc = mamba_apply(p["mamba"], h, cfg, sp.get("mamba"),
                             cache.get("ssm"), mode)
@@ -272,7 +308,7 @@ def _remat_wrap(fn, policy: str):
 
 def run_groups(groups, x, cfg: ModelConfig, patterns, *, mode="train",
                caches=None, positions=None, sp=None, enc_out=None,
-               remat: str = "none"):
+               remat: str = "none", slot=None):
     """Scan each stacked layer group.  Returns (x, new_caches).
 
     Decode mode carries the layer-stacked caches through the scan *carry*
@@ -297,7 +333,7 @@ def run_groups(groups, x, cfg: ModelConfig, patterns, *, mode="train",
                 cj = c_i[j] if c_i is not None else None
                 spj = sp_i[f"l{j}"] if sp_i is not None else None
                 xc, nc = layer_apply(p_i[f"l{j}"], xc, cfg, kind, spj, cj,
-                                     positions, mode, enc_out)
+                                     positions, mode, enc_out, slot=slot)
                 ncs.append(nc)
             ys = tuple(ncs) if any(n is not None for n in ncs) else None
             return xc, ys
@@ -337,19 +373,31 @@ def encode(params, frames, cfg: ModelConfig, sp=None, remat="none"):
 
 def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
             patch_embeds=None, mode="train", caches=None, positions=None,
-            sp=None, sp_enc=None, remat="none"):
+            sp=None, sp_enc=None, remat="none", slot=None):
     """Unified forward.
 
     train/prefill: tokens (B,S[-P]) [+ frames (B,F,D) | patch_embeds (B,P,D)]
     decode:        tokens (B,), positions (B,), caches required.
+    chunk:         tokens (B,C) one request's prefill chunk, positions (B,)
+                   chunk-start offset, slot () pool slot, caches = the full
+                   slot pool (serving engine's chunked prefill).
     Returns (logits, new_caches):
       train  -> logits (B,S,V), caches None
       prefill-> logits (B,V) last position, caches filled
       decode -> logits (B,V), caches updated
+      chunk  -> logits (B,C,V) all chunk positions, pool caches updated
     """
     enc_out = None
     if cfg.family == "encdec" and frames is not None:
         enc_out = encode(params, frames, cfg, sp=sp_enc, remat=remat)
+
+    if mode == "chunk":
+        x = embed_tokens(params, tokens, cfg)
+        x, new_caches = run_groups(
+            params["groups"], x, cfg, cfg.layer_groups(), mode="chunk",
+            caches=caches, positions=positions, sp=sp, slot=slot)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return lm_logits(params, x, cfg), new_caches
 
     if mode == "decode":
         x = embed_tokens(params, tokens[:, None], cfg)

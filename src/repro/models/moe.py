@@ -90,11 +90,18 @@ def moe_apply(p, x, cfg, sp=None):
                 sparse_linear.record(w, h)                 # calibration hook
                 return jnp.einsum("becd,edf->becf", h, w)
             return apply_dense
-        # per-expert WiSparse: vmap the sparse projection over experts
+        # per-expert WiSparse: vmap the sparse projection over experts.
+        # The serving engine's per-token saliency weights cannot ride
+        # through expert dispatch (rows here are capacity-bounded
+        # permutations of tokens, and can even coincidentally match the
+        # slot count) — clear them explicitly; dropped/pad rows are
+        # zeroed by dispatch and contribute nothing to the saliency sum.
         def apply(h):                                      # h: (B,E,C,din)
+            from repro.core.sparse_linear import token_weights
             hm = jnp.moveaxis(h, 1, 0)                     # (E,B,C,din)
-            out = jax.vmap(lambda he, we, ge: dense(
-                he, we, {**s, "g": ge}))(hm, w, s["g"])
+            with token_weights(None):
+                out = jax.vmap(lambda he, we, ge: dense(
+                    he, we, {**s, "g": ge}))(hm, w, s["g"])
             return jnp.moveaxis(out, 0, 1)
         return apply
 

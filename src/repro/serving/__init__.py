@@ -1,0 +1,17 @@
+"""Continuous-batching serving engine with WiSparse-aware scheduling.
+
+The engine keeps a fixed slot pool of KV caches (one decode executable for
+the engine's whole lifetime), admits requests FIFO, interleaves chunked
+prefill with batched decode, and drives the paper's §5.1 recipe (dense
+first half of prefill, sparse decode) by switching ``sparsity_mode`` per
+phase."""
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kv_pool import SlotKVPool
+from repro.serving.metrics import EngineStats, percentile
+from repro.serving.request import FinishReason, Request, RequestState, Status
+from repro.serving.scheduler import Scheduler
+
+__all__ = [
+    "Engine", "EngineConfig", "SlotKVPool", "EngineStats", "percentile",
+    "Request", "RequestState", "Status", "FinishReason", "Scheduler",
+]

@@ -1,0 +1,277 @@
+"""Continuous-batching inference engine.
+
+One engine instance owns: the slot KV pool (fixed shapes, so the batched
+decode step compiles once and never retraces), the FIFO scheduler, and the
+jitted phase steps.  Sparsity is phase-aware per the paper's §5.1 recipe:
+prefill chunks in the first ``prefill_dense_frac`` of the prompt run dense
+and later chunks plus all decode steps run under the configured sparse
+backend.  The sparsity mode/k_max are *static* jit arguments, so each
+(phase, mode) pair owns its executable and the thread-local
+``sparsity_mode`` context can never leak a stale trace.
+
+Prefill strategies:
+  * "chunked": fixed-size chunks written straight into the pool slot via
+    ``mode="chunk"`` forwards (jit-stable across prompt lengths; plain
+    full-attention archs only).
+  * "whole":   the legacy whole-prompt prefill (batched over same-length
+    requests) + pool insertion; supports every cached arch (local windows,
+    SSM) at the cost of one executable per prompt length.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.sparse_linear import sparsity_mode
+from repro.models import api
+from repro.serving.kv_pool import SlotKVPool
+from repro.serving.metrics import EngineStats
+from repro.serving.request import (FinishReason, Request, RequestState,
+                                   Status)
+from repro.serving.scheduler import Scheduler
+
+_CHUNKABLE_MIXERS = ("attn", "global")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8
+    max_len: int = 512
+    prefill_chunk: int = 32
+    mode: str = "off"                # off|mask|topk_shared|topk_block|pallas
+    k_max_frac: float = 1.0          # static kept-fraction bound (top-k/pallas)
+    prefill_dense_frac: float = 0.5  # §5.1: first fraction of prompt dense
+    prefill_strategy: str = "auto"   # auto|chunked|whole
+    eos_id: Optional[int] = None     # default per-request EOS
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
+                 sp=None):
+        if cfg.family in ("encdec", "vlm"):
+            raise NotImplementedError(
+                f"serving engine supports token-only models, not {cfg.family}")
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.sp = sp
+        # the pool holds one chunk of slack past max_len: pad tokens of a
+        # request's final prefill chunk land in [max_len, pool_len-1), and
+        # the last position is scratch — inactive slots in a decode step
+        # must still write *somewhere*, and every real position (< max_len)
+        # may belong to a mid-prefill prompt span that a garbage write
+        # would corrupt.  Scratch is beyond every reachable position, so
+        # the decode valid-mask never admits it.
+        self.pool_len = ecfg.max_len + ecfg.prefill_chunk
+        self.pool = SlotKVPool(cfg, ecfg.max_slots, self.pool_len)
+        self.scheduler = Scheduler()
+        self.stats = EngineStats()
+        self.states: Dict[int, RequestState] = {}
+        self._next_id = 0
+        self._decode_traces = 0      # python-side retrace counter
+        self._chunk_traces = 0
+
+        mixers = {m for m, _ in cfg.layer_kinds()}
+        chunkable = mixers <= set(_CHUNKABLE_MIXERS)
+        if ecfg.prefill_strategy == "auto":
+            self.prefill_strategy = "chunked" if chunkable else "whole"
+        else:
+            if ecfg.prefill_strategy == "chunked" and not chunkable:
+                raise ValueError(
+                    f"chunked prefill needs plain-attention mixers, got {mixers}")
+            self.prefill_strategy = ecfg.prefill_strategy
+
+        slot_decode = api.make_slot_decode_step(cfg)
+        chunk_step = api.make_chunk_prefill_step(cfg)
+        prefill_step = api.make_prefill_step(cfg)
+
+        def _decode(params, tokens, positions, caches, sp, active, *,
+                    mode, k_max_frac):
+            self._decode_traces += 1        # runs only while tracing
+            with sparsity_mode(mode, k_max_frac=k_max_frac):
+                return slot_decode(params, tokens, positions, caches, sp,
+                                   active)
+
+        def _chunk(params, tokens, offset, slot, caches, sp, weights, *,
+                   mode, k_max_frac):
+            self._chunk_traces += 1
+            with sparsity_mode(mode, k_max_frac=k_max_frac):
+                return chunk_step(params, tokens, offset, slot, caches, sp,
+                                  weights)
+
+        def _prefill(params, tokens, sp, *, mode, k_max_frac):
+            with sparsity_mode(mode, k_max_frac=k_max_frac):
+                return prefill_step(params, {"tokens": tokens}, sp)
+
+        # pool caches are donated back into themselves each step (no copy
+        # on TPU; XLA falls back to copying where donation is unsupported)
+        self._dstep = jax.jit(_decode, static_argnames=("mode", "k_max_frac"),
+                              donate_argnums=(3,))
+        self._cstep = jax.jit(_chunk, static_argnames=("mode", "k_max_frac"),
+                              donate_argnums=(4,))
+        self._pstep = jax.jit(_prefill,
+                              static_argnames=("mode", "k_max_frac"))
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None,
+               arrival_time: Optional[float] = None,
+               on_token=None) -> RequestState:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0 or prompt.size >= self.ecfg.max_len:
+            raise ValueError(
+                f"prompt length {prompt.size} outside (0, {self.ecfg.max_len})")
+        max_new = min(max_new_tokens, self.ecfg.max_len - prompt.size)
+        req = Request(self._next_id, prompt, max_new,
+                      eos_id if eos_id is not None else self.ecfg.eos_id,
+                      self._now() if arrival_time is None else arrival_time)
+        self._next_id += 1
+        rs = RequestState(req, on_token=on_token)
+        self.states[req.request_id] = rs
+        self.scheduler.enqueue(rs)
+        self.stats.submitted += 1
+        return rs
+
+    # ------------------------------------------------------------------
+    # stepping
+    # ------------------------------------------------------------------
+    def step(self) -> str:
+        """Admit, then run one scheduler-chosen phase step."""
+        self.scheduler.admit(self.pool)
+        self.stats.sample(len(self.scheduler.queue), self.pool.num_occupied)
+        action = self.scheduler.next_action()
+        if action == "prefill":
+            if self.prefill_strategy == "chunked":
+                self._prefill_chunk(self.scheduler.prefill_head())
+            else:
+                self._prefill_whole(self.scheduler.prefill_group())
+        elif action == "decode":
+            self._decode_step()
+        return action
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive until idle; returns {request_id: generated tokens}."""
+        while self.scheduler.has_work():
+            self.step()
+        return {rid: rs.tokens for rid, rs in self.states.items()}
+
+    # ------------------------------------------------------------------
+    # phases
+    # ------------------------------------------------------------------
+    def _phase_mode(self, offset: int, prompt_len: int) -> str:
+        """§5.1: chunks starting before the dense boundary run dense."""
+        if self.ecfg.mode == "off":
+            return "off"
+        dense_end = int(np.ceil(prompt_len * self.ecfg.prefill_dense_frac))
+        return "off" if offset < dense_end else self.ecfg.mode
+
+    def _prefill_chunk(self, rs: RequestState) -> None:
+        C = self.ecfg.prefill_chunk
+        req = rs.request
+        off = rs.next_offset
+        real = min(C, req.prompt_len - off)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :real] = req.prompt[off:off + real]
+        weights = np.zeros((C,), np.float32)
+        weights[:real] = 1.0
+        mode = self._phase_mode(off, req.prompt_len)
+        t0 = self._now()
+        logits, self.pool.caches = self._cstep(
+            self.params, jnp.asarray(chunk), jnp.full((1,), off, jnp.int32),
+            jnp.int32(rs.slot), self.pool.caches, self.sp,
+            jnp.asarray(weights), mode=mode, k_max_frac=self.ecfg.k_max_frac)
+        logits.block_until_ready()
+        self.stats.prefill_time += self._now() - t0
+        self.stats.prefill_chunks += 1
+        self.stats.prefill_tokens += real
+        rs.next_offset = off + real
+        self.pool.lengths[rs.slot] = rs.next_offset
+        if rs.done_prefill:
+            first = int(np.asarray(jnp.argmax(logits[0, real - 1])))
+            self._start_decode(rs, first)
+
+    def _prefill_whole(self, group: List[RequestState]) -> None:
+        P = group[0].request.prompt_len
+        tokens = np.stack([rs.request.prompt for rs in group])
+        # whole-prompt prefill can't split tokens by phase: any dense
+        # fraction > 0 makes the whole prompt dense (the conservative
+        # accuracy choice, matching the legacy serve path)
+        mode = self.ecfg.mode if self.ecfg.prefill_dense_frac <= 0.0 else "off"
+        t0 = self._now()
+        logits, caches = self._pstep(self.params, jnp.asarray(tokens),
+                                     self.sp, mode=mode,
+                                     k_max_frac=self.ecfg.k_max_frac)
+        logits.block_until_ready()
+        self.stats.prefill_time += self._now() - t0
+        self.stats.prefill_chunks += 1
+        self.stats.prefill_tokens += P * len(group)
+        first = np.asarray(jnp.argmax(logits, axis=-1))
+        for b, rs in enumerate(group):
+            self.pool.insert(caches, b, rs.slot, P)
+            rs.next_offset = P
+            self._start_decode(rs, int(first[b]))
+
+    def _start_decode(self, rs: RequestState, first_token: int) -> None:
+        rs.first_token_time = self._now()
+        rs.emit(first_token)
+        self.stats.decode_tokens += 1
+        self.scheduler.to_decode(rs)
+        self._maybe_finish(rs, first_token)
+
+    def _decode_step(self) -> None:
+        S = self.ecfg.max_slots
+        tokens = np.zeros((S,), np.int32)
+        # inactive slots write their garbage token at the scratch position
+        # (see pool_len above); their logits are ignored host-side and
+        # their saliency weight is zero
+        positions = np.full((S,), self.pool_len - 1, np.int32)
+        active = np.zeros((S,), np.float32)
+        decoding = self.scheduler.decoding
+        for slot, rs in decoding.items():
+            tokens[slot] = rs.last_token
+            positions[slot] = rs.position
+            active[slot] = 1.0
+        t0 = self._now()
+        logits, self.pool.caches = self._dstep(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            self.pool.caches, self.sp, jnp.asarray(active),
+            mode=self.ecfg.mode, k_max_frac=self.ecfg.k_max_frac)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.stats.decode_time += self._now() - t0
+        self.stats.decode_steps += 1
+        for slot, rs in list(decoding.items()):
+            tok = int(nxt[slot])
+            rs.emit(tok)
+            self.pool.lengths[slot] += 1
+            self.stats.decode_tokens += 1
+            self._maybe_finish(rs, tok)
+
+    def _maybe_finish(self, rs: RequestState, token: int) -> None:
+        req = rs.request
+        if req.eos_id is not None and token == req.eos_id:
+            rs.finish_reason = FinishReason.EOS
+        elif len(rs.tokens) >= req.max_new_tokens:
+            rs.finish_reason = FinishReason.MAX_TOKENS
+        else:
+            return
+        rs.finish_time = self._now()
+        self.scheduler.finish(rs)
+        self.pool.free(rs.slot)
+        self.stats.finished += 1
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _now() -> float:
+        return time.monotonic()
+
+    @property
+    def decode_traces(self) -> int:
+        """How many times the batched decode step has (re)traced."""
+        return self._decode_traces

@@ -1,0 +1,89 @@
+"""Slot-based KV cache pool.
+
+One fixed ``(max_slots, max_len)`` cache tree is allocated up front from
+``api.cache_schema`` and lives for the engine's lifetime; requests borrow a
+slot (the batch index) and return it on completion.  Because the tree's
+shapes never change, the decode step compiles exactly once.
+
+Prefill results enter the pool through ``insert`` — a jitted per-leaf
+``dynamic_update_slice`` at the slot's batch index (and time offset 0 for
+the KV time dim), driven by the schema's logical axes so every cache
+layout (self-attn KV, rolling-window KV, SSM conv/state) inserts through
+the same code path."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models import params as P
+
+
+def _axes_leaf(x) -> bool:
+    """A logical-axes tuple: all elements are axis names or None."""
+    return (isinstance(x, tuple)
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+class SlotKVPool:
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        schema = api.cache_schema(cfg, max_slots, max_len)
+        # cache specs are all init="zeros": this is a plain zero allocation
+        self.caches = P.init_params(schema, jax.random.PRNGKey(0), cfg.dtype)
+        self._axes = P.logical_axes(schema)
+        self._flat_axes = jax.tree_util.tree_leaves(
+            self._axes, is_leaf=_axes_leaf)
+        self._free: List[int] = list(range(max_slots))[::-1]   # pop() -> 0 first
+        self.lengths = np.zeros(max_slots, np.int64)
+        # donate the pool into the insert like the decode/chunk steps do —
+        # without it every insertion copies the whole pool tree
+        self._insert_jit = jax.jit(self._insert_tree, donate_argnums=(0,))
+
+    # ---- slot management -------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_occupied(self) -> int:
+        return self.max_slots - len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free KV slots")
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        assert 0 <= slot < self.max_slots and slot not in self._free, slot
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    # ---- prefill insertion ----------------------------------------------
+    def _insert_tree(self, pool, pref, src, slot):
+        pool_leaves, treedef = jax.tree_util.tree_flatten(pool)
+        pref_leaves = jax.tree_util.tree_leaves(pref)
+        out = []
+        for pl, fl, axes in zip(pool_leaves, pref_leaves, self._flat_axes):
+            b_ax = axes.index("batch")
+            upd = jax.lax.dynamic_slice_in_dim(fl, src, 1, axis=b_ax)
+            start = [0] * pl.ndim
+            start[b_ax] = slot
+            out.append(jax.lax.dynamic_update_slice(
+                pl, upd.astype(pl.dtype), tuple(start)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def insert(self, prefill_caches, src_idx: int, slot: int,
+               length: int) -> None:
+        """Copy request ``src_idx`` of a prefill cache tree (shorter time
+        dim allowed) into ``slot``.  Retraces per distinct prefill shape;
+        the decode-facing pool shapes never change."""
+        self.caches = self._insert_jit(self.caches, prefill_caches,
+                                       jnp.int32(src_idx), jnp.int32(slot))
+        self.lengths[slot] = length

@@ -1,0 +1,78 @@
+"""Engine statistics: per-phase step counts/latencies, throughput, queue
+depth and slot occupancy, plus request-latency percentiles."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+from repro.serving.request import RequestState
+
+
+def percentile(values: Iterable[float], p: float) -> float:
+    """Nearest-rank percentile (no numpy interpolation surprises)."""
+    vs = sorted(values)
+    if not vs:
+        return float("nan")
+    k = max(0, min(len(vs) - 1, int(round(p / 100.0 * (len(vs) - 1)))))
+    return vs[k]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    submitted: int = 0
+    finished: int = 0
+    prefill_chunks: int = 0
+    prefill_tokens: int = 0                  # real (non-pad) prompt tokens
+    decode_steps: int = 0
+    decode_tokens: int = 0                   # generated tokens (incl. first)
+    prefill_time: float = 0.0                # seconds in prefill steps
+    decode_time: float = 0.0                 # seconds in decode steps
+    queue_depth: List[int] = dataclasses.field(default_factory=list)
+    occupancy: List[int] = dataclasses.field(default_factory=list)
+
+    def sample(self, queue_depth: int, occupied_slots: int) -> None:
+        self.queue_depth.append(queue_depth)
+        self.occupancy.append(occupied_slots)
+
+    @property
+    def decode_tps(self) -> float:
+        return self.decode_tokens / self.decode_time if self.decode_time else 0.0
+
+    @property
+    def prefill_tps(self) -> float:
+        return (self.prefill_tokens / self.prefill_time
+                if self.prefill_time else 0.0)
+
+    def summary(self) -> Dict[str, float]:
+        occ = self.occupancy or [0]
+        q = self.queue_depth or [0]
+        return {
+            "submitted": self.submitted,
+            "finished": self.finished,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "prefill_time_s": round(self.prefill_time, 4),
+            "decode_time_s": round(self.decode_time, 4),
+            "prefill_tps": round(self.prefill_tps, 1),
+            "decode_tps": round(self.decode_tps, 1),
+            "mean_occupancy": round(sum(occ) / len(occ), 2),
+            "mean_queue_depth": round(sum(q) / len(q), 2),
+        }
+
+
+def latency_percentiles(states: Iterable[RequestState],
+                        ps=(50, 95)) -> Dict[str, Optional[float]]:
+    """Request latency (finish - arrival) and TTFT percentiles, seconds."""
+    lat, ttft = [], []
+    for rs in states:
+        if rs.finish_time is not None:
+            lat.append(rs.finish_time - rs.request.arrival_time)
+        if rs.first_token_time is not None:
+            ttft.append(rs.first_token_time - rs.request.arrival_time)
+    out: Dict[str, Optional[float]] = {}
+    for p in ps:
+        out[f"latency_p{p}"] = percentile(lat, p) if lat else None
+        out[f"ttft_p{p}"] = percentile(ttft, p) if ttft else None
+    return out

@@ -1,0 +1,64 @@
+"""FIFO admission + prefill/decode interleaving policy.
+
+Admission moves queued requests into free pool slots in arrival order.
+When both prefill and decode work exist the scheduler strictly alternates
+(one prefill chunk, one decode step, ...) so in-flight decodes keep
+streaming while new prompts are absorbed — the continuous-batching
+property.  With only one kind of work pending it runs that kind."""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List
+
+from repro.serving.kv_pool import SlotKVPool
+from repro.serving.request import RequestState, Status
+
+
+class Scheduler:
+    def __init__(self) -> None:
+        self.queue: Deque[RequestState] = collections.deque()
+        self.prefilling: List[RequestState] = []
+        self.decoding: Dict[int, RequestState] = {}
+        self._last = "decode"        # so the first contested pick prefills
+
+    def enqueue(self, rs: RequestState) -> None:
+        self.queue.append(rs)
+
+    def admit(self, pool: SlotKVPool) -> None:
+        while self.queue and pool.num_free:
+            rs = self.queue.popleft()
+            rs.slot = pool.alloc()
+            rs.status = Status.PREFILL
+            self.prefilling.append(rs)
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self.prefilling or self.decoding)
+
+    def next_action(self) -> str:
+        """"prefill" | "decode" | "idle" (strict alternation when both)."""
+        if not self.prefilling and not self.decoding:
+            return "idle"
+        if self.prefilling and (not self.decoding or self._last != "prefill"):
+            self._last = "prefill"
+            return "prefill"
+        self._last = "decode"
+        return "decode"
+
+    def prefill_head(self) -> RequestState:
+        return self.prefilling[0]
+
+    def prefill_group(self) -> List[RequestState]:
+        """All pending prefills sharing the FIFO head's prompt length
+        (batched whole-prompt prefill shares one forward)."""
+        head_len = self.prefilling[0].request.prompt_len
+        return [rs for rs in self.prefilling
+                if rs.request.prompt_len == head_len]
+
+    def to_decode(self, rs: RequestState) -> None:
+        self.prefilling.remove(rs)
+        rs.status = Status.DECODE
+        self.decoding[rs.slot] = rs
+
+    def finish(self, rs: RequestState) -> None:
+        self.decoding.pop(rs.slot, None)
+        rs.status = Status.FINISHED

@@ -1,0 +1,166 @@
+"""Continuous-batching engine: parity with the legacy generate() loop,
+ragged/mid-flight admission, slot reclamation, and decode jit-stability."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.sp_schema import default_sp_stacked
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.serve import generate
+from repro.models import api
+from repro.serving import Engine, EngineConfig, SlotKVPool, Status
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    return params, cfg
+
+
+def _prompts(cfg, n, seq, step=0):
+    return np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, seq, n)).batch(step))
+
+
+def _engine(params, cfg, sp=None, **kw):
+    defaults = dict(max_slots=4, max_len=32, prefill_chunk=8, mode="off")
+    defaults.update(kw)
+    return Engine(params, cfg, EngineConfig(**defaults), sp)
+
+
+# ---------------------------------------------------------------------------
+# exact parity with the legacy static-batch loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,keep", [("off", 1.0), ("topk_shared", 0.5)])
+def test_engine_matches_legacy_generate(model, mode, keep):
+    """Equal-length prompts through the whole-prefill engine produce the
+    exact tokens of the legacy generate() loop, dense and sparse."""
+    params, cfg = model
+    prompts = _prompts(cfg, 4, 16)
+    sp = default_sp_stacked(params, cfg, keep_frac=keep) \
+        if mode != "off" else None
+    legacy = np.asarray(generate(params, cfg, jnp.asarray(prompts), 8, sp,
+                                 mode=mode, k_max_frac=keep))
+    eng = _engine(params, cfg, sp, mode=mode, k_max_frac=keep,
+                  prefill_strategy="whole", prefill_dense_frac=1.0)
+    for b in range(4):
+        eng.submit(prompts[b], 8)
+    out = eng.run()
+    for b in range(4):
+        assert out[b] == list(legacy[b]), f"request {b} diverged"
+
+
+def test_chunked_prefill_matches_whole(model):
+    """Chunked prefill (in-place pool writes) agrees with the legacy
+    whole-prompt prefill + insertion on the same requests."""
+    params, cfg = model
+    prompts = _prompts(cfg, 2, 24, step=3)
+    outs = []
+    for strategy in ("whole", "chunked"):
+        eng = _engine(params, cfg, max_slots=2, max_len=32, prefill_chunk=8,
+                      prefill_strategy=strategy)
+        eng.submit(prompts[0], 6)
+        eng.submit(prompts[1], 6)
+        outs.append(eng.run())
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# continuous batching mechanics
+# ---------------------------------------------------------------------------
+
+def test_ragged_midflight_and_slot_reuse(model):
+    """Ragged prompt lengths, more requests than slots, and a mid-flight
+    submission: everything finishes, slots are reclaimed, and the decode
+    step traces exactly once."""
+    params, cfg = model
+    prompts = _prompts(cfg, 4, 20, step=7)
+    eng = _engine(params, cfg, max_slots=2, max_len=32, prefill_chunk=8,
+                  prefill_strategy="chunked")
+    lens = [9, 14, 20]
+    for b, L in enumerate(lens):
+        eng.submit(prompts[b][:L], 5)
+    for _ in range(6):                       # start prefill/decode
+        eng.step()
+    late = eng.submit(prompts[3][:11], 5)    # mid-flight admission
+    out = eng.run()
+    assert set(out) == {0, 1, 2, 3}
+    assert all(len(toks) == 5 for toks in out.values())
+    assert all(rs.status == Status.FINISHED for rs in eng.states.values())
+    assert late.tokens == out[3]
+    assert eng.pool.num_free == 2            # all slots reclaimed
+    assert eng.decode_traces == 1            # no retrace after warmup
+    assert eng.stats.finished == 4
+    assert eng.stats.decode_tokens == 20
+
+
+def test_eos_stop_and_streaming(model):
+    """EOS stops a request early; the streaming callback sees every token
+    in order."""
+    params, cfg = model
+    prompts = _prompts(cfg, 1, 12, step=11)
+    eng = _engine(params, cfg)
+    eng.submit(prompts[0], 6)
+    ref = eng.run()[0]
+    assert len(ref) == 6
+
+    seen = []
+    eng2 = _engine(params, cfg)
+    rs = eng2.submit(prompts[0], 6, eos_id=ref[2],
+                     on_token=lambda rid, t: seen.append((rid, t)))
+    out = eng2.run()
+    assert out[0] == ref[:3]                 # stopped at the EOS token
+    assert rs.finish_reason.value == "eos"
+    assert seen == [(0, t) for t in ref[:3]]
+
+
+def test_moe_and_ssm_archs_serve_sparse():
+    """The engine serves MoE (expert projections opt out of slot-weighted
+    saliency) and SSM archs (whole-prefill fallback) under a sparse
+    backend with partially occupied slots."""
+    for arch in ("granite_moe_1b_a400m", "mamba2_130m"):
+        cfg = reduced(get_config(arch))
+        params = api.init_model(cfg, 0)
+        sp = default_sp_stacked(params, cfg, keep_frac=0.5)
+        eng = Engine(params, cfg, EngineConfig(
+            max_slots=3, max_len=24, prefill_chunk=8,
+            mode="topk_shared", k_max_frac=0.5), sp)
+        prompts = _prompts(cfg, 2, 10, step=17)
+        eng.submit(prompts[0], 4)
+        eng.submit(prompts[1][:7], 4)        # ragged + a free slot
+        out = eng.run()
+        assert all(len(t) == 4 for t in out.values()), arch
+        assert eng.pool.num_free == 3
+
+
+def test_pool_alloc_free_cycle(model):
+    _, cfg = model
+    pool = SlotKVPool(cfg, max_slots=3, max_len=16)
+    slots = [pool.alloc() for _ in range(3)]
+    assert sorted(slots) == [0, 1, 2] and pool.num_free == 0
+    with pytest.raises(RuntimeError):
+        pool.alloc()
+    pool.free(slots[1])
+    assert pool.num_free == 1
+    assert pool.alloc() == slots[1]
+
+
+def test_engine_stats_and_phase_times(model):
+    params, cfg = model
+    prompts = _prompts(cfg, 2, 16, step=13)
+    eng = _engine(params, cfg, max_slots=2)
+    eng.submit(prompts[0], 4)
+    eng.submit(prompts[1], 4)
+    eng.run()
+    s = eng.stats.summary()
+    assert s["finished"] == 2
+    assert s["decode_tokens"] == 8
+    assert s["decode_tps"] > 0 and s["prefill_tps"] > 0
+    assert eng.stats.prefill_tokens == 32
+    for rs in eng.states.values():
+        assert rs.first_token_time is not None
+        assert rs.finish_time >= rs.first_token_time
