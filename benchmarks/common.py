@@ -48,14 +48,15 @@ def calib_context():
 
 def eval_metrics(params, cfg, data_cfg, per_depth_sp=None):
     """Held-out PPL + KL + top-1 agreement vs dense."""
-    from repro.core import sparse_linear as sl
     from repro.core import unstacked as U
     from repro.data import eval_batch
+    from repro.sparsity import SparsityPolicy
     toks = jnp.asarray(eval_batch(data_cfg, n=4))
-    mode = "mask" if per_depth_sp is not None else "off"
-    with sl.sparsity_mode(mode):
-        logits, _ = U.forward_unstacked(params, cfg, toks,
-                                        per_depth_sp=per_depth_sp)
+    policy = SparsityPolicy.uniform("mask") if per_depth_sp is not None \
+        else SparsityPolicy.dense()
+    logits, _ = U.forward_unstacked(params, cfg, toks,
+                                    per_depth_sp=per_depth_sp,
+                                    policy=policy)
     dense_logits, _ = U.forward_unstacked(params, cfg, toks)
     lg = logits[:, :-1].astype(jnp.float32)
     lab = toks[:, 1:]

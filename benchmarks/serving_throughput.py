@@ -1,15 +1,27 @@
 """Serving throughput under a Poisson arrival trace: dense vs WiSparse
-decode backends on the continuous-batching engine.
+decode backends (uniform and mixed per-block policies) on the
+continuous-batching engine.
 
 Replays the *same* seeded request trace (prompts, lengths, arrival times)
-against one engine per sparsity mode and reports decode tokens/s, p50/p95
-request latency and time-to-first-token.  Also checks the engine's
+against one engine per :class:`SparsityPolicy` and reports decode
+tokens/s, p50/p95 request latency, time-to-first-token, and each
+scenario's token agreement vs the dense run.  Also checks the engine's
 token-level parity against the legacy static-batch ``generate()`` loop
 (equal-length prompts, whole-prefill strategy) — the engine must match it
 exactly.
 
+Scenarios (``--modes``): ``off`` / ``mask`` / ``topk_shared`` /
+``topk_block`` / ``pallas`` are uniform-backend policies; ``mixed`` runs
+the most sensitive blocks dense and ``topk_shared`` elsewhere at the
+*matched global budget* (the sparse blocks prune harder so the average
+keep ratio equals the uniform run's).  Without a calibrated plan the
+"sensitive" set is the first ``--sensitive-frac`` of blocks — the early
+blocks a calibrated ``plan.to_policy(sensitive_backend=...)`` would
+typically protect.
+
     PYTHONPATH=src python -m benchmarks.serving_throughput \
-        [--modes off,topk_shared,topk_block] [--requests 16] [--rate 8]
+        [--modes off,topk_shared,topk_block,mixed] [--requests 16] [--rate 8]
+    PYTHONPATH=src python -m benchmarks.serving_throughput --smoke   # CI
 
 The default model is a reduced-but-not-tiny llama31_8b variant
 (d_model=768, d_ff=6144, 4 layers) — large enough that decode is
@@ -32,6 +44,7 @@ from repro.launch.serve import generate
 from repro.models import api
 from repro.serving import Engine, EngineConfig, EngineStats
 from repro.serving.metrics import latency_percentiles
+from repro.sparsity import SparsityPolicy
 
 
 def bench_config(d_model=768, d_ff=6144, layers=4, vocab=1024):
@@ -68,12 +81,86 @@ def replay(engine: Engine, prompts, arrivals, gen_tokens):
     return states
 
 
-def run(log=print, modes=("off", "topk_shared", "topk_block"),
+def _set_keep_per_depth(sp, cfg, keep_by_depth):
+    """Stacked sp tree with each layer's traced keep_frac taken from
+    keep_by_depth[depth] (scalar leaves become per-rep vectors)."""
+
+    def set_keep(tree, keep_vec):
+        if isinstance(tree, dict):
+            if "keep_frac" in tree and "g" in tree:
+                return {**tree,
+                        "keep_frac": jnp.asarray(keep_vec, jnp.float32)}
+            return {k: set_keep(v, keep_vec) for k, v in tree.items()}
+        return tree
+
+    out, depth = [], 0
+    for gi, (pattern, reps) in enumerate(cfg.layer_groups()):
+        group = {}
+        for j in range(len(pattern)):
+            keep_vec = [keep_by_depth[depth + r * len(pattern) + j]
+                        for r in range(reps)]
+            group[f"l{j}"] = set_keep(sp[gi][f"l{j}"], keep_vec)
+        out.append(group)
+        depth += len(pattern) * reps
+    return out
+
+
+def mixed_scenario(params, cfg, sparsity, sensitive_frac=0.25):
+    """(policy, sp) for the mixed row: dense on the sensitive blocks,
+    topk_shared elsewhere, pruned harder so the *global* keep budget
+    matches the uniform run's 1 - sparsity."""
+    L = cfg.num_layers
+    n_dense = min(max(1, int(round(L * sensitive_frac))), L - 1)
+    keep_target = 1.0 - sparsity
+    f = n_dense / L
+    k_rest = (keep_target - f) / (1.0 - f)
+    if k_rest < 0.05:
+        raise ValueError(
+            f"cannot match the global keep budget {keep_target:.2f} with "
+            f"{n_dense}/{L} blocks dense (the rest would need keep_frac "
+            f"{k_rest:.3f} < 0.05); lower --sensitive-frac or --sparsity")
+    keep_by_depth = [1.0 if d < n_dense else k_rest for d in range(L)]
+    sp = default_sp_stacked(params, cfg, keep_frac=1.0)
+    sp = _set_keep_per_depth(sp, cfg, keep_by_depth)
+    policy = SparsityPolicy.uniform(
+        "topk_shared", k_max_frac=k_rest,
+        block_backends=((0, n_dense, "off"),))
+    return policy, sp
+
+
+def _agreement(states_a, states_b):
+    """Mean per-request fraction of identical generated tokens."""
+    fa = {s.request.request_id: s.tokens for s in states_a}
+    fb = {s.request.request_id: s.tokens for s in states_b}
+    fracs = []
+    for rid, ta in fa.items():
+        tb = fb.get(rid, [])
+        n = max(len(ta), len(tb), 1)
+        eq = sum(1 for x, y in zip(ta, tb) if x == y)
+        fracs.append(eq / n)
+    return float(np.mean(fracs)) if fracs else 1.0
+
+
+def run(log=print, modes=("off", "topk_shared", "topk_block", "mixed"),
         n_requests=16, rate_hz=8.0, gen_tokens=48, max_slots=8,
-        sparsity=0.5, seed=0, reps=2, cfg=None):
+        sparsity=0.5, seed=0, reps=2, cfg=None, sensitive_frac=0.25,
+        expect_speedup=True):
     cfg = cfg or bench_config()
     params = api.init_model(cfg, 0)
-    sp = default_sp_stacked(params, cfg, keep_frac=1.0 - sparsity)
+    sp_uniform = default_sp_stacked(params, cfg, keep_frac=1.0 - sparsity)
+
+    scenarios = {}
+    for mode in modes:
+        if mode == "off":
+            scenarios[mode] = (SparsityPolicy.dense(), None)
+        elif mode == "mixed":
+            scenarios[mode] = mixed_scenario(params, cfg, sparsity,
+                                             sensitive_frac)
+        else:
+            # 1e-6 floor: k_max_frac must be > 0; at 100% sparsity the
+            # gather backends keep their one-channel minimum
+            scenarios[mode] = (SparsityPolicy.uniform(
+                mode, k_max_frac=max(1.0 - sparsity, 1e-6)), sp_uniform)
 
     prompt_lens = (24, 32, 48)
     arrivals, lens = poisson_trace(n_requests, rate_hz, prompt_lens, seed)
@@ -84,12 +171,13 @@ def run(log=print, modes=("off", "topk_shared", "topk_block"),
 
     # --- parity gate: engine == legacy generate(), token for token -------
     eq_prompts = jnp.asarray(pool[:4, :32])
-    legacy = np.asarray(generate(params, cfg, eq_prompts, 8, sp,
-                                 mode="topk_shared", k_max_frac=1 - sparsity))
+    parity_pol = SparsityPolicy.uniform("topk_shared",
+                                        k_max_frac=max(1 - sparsity, 1e-6))
+    legacy = np.asarray(generate(params, cfg, eq_prompts, 8, sp_uniform,
+                                 policy=parity_pol))
     eng = Engine(params, cfg, EngineConfig(
-        max_slots=4, max_len=48, mode="topk_shared",
-        k_max_frac=1 - sparsity, prefill_strategy="whole",
-        prefill_dense_frac=1.0), sp)
+        max_slots=4, max_len=48, policy=parity_pol,
+        prefill_strategy="whole", prefill_dense_frac=1.0), sp_uniform)
     for b in range(4):
         eng.submit(np.asarray(eq_prompts[b]), 8)
     out = eng.run()
@@ -105,60 +193,81 @@ def run(log=print, modes=("off", "topk_shared", "topk_block"),
     # background load, and interleaving + best-of-n cancels that drift out
     # of the mode-vs-mode ratio
     engines = {}
-    for mode in modes:
-        use_sp = sp if mode != "off" else None
+    for mode, (policy, sp) in scenarios.items():
         engines[mode] = Engine(params, cfg, EngineConfig(
             max_slots=max_slots, max_len=max_len, prefill_chunk=32,
-            mode=mode, k_max_frac=(1 - sparsity) if use_sp else 1.0), use_sp)
+            policy=policy), sp)
         # warm the executables so compile time stays out of the trace
         engines[mode].submit(prompts[0], 2)
         engines[mode].run()
 
-    results = {m: 0.0 for m in modes}
+    results = {m: 0.0 for m in scenarios}
     best = {}
     for rep in range(reps):
-        for mode in modes:
+        for mode in scenarios:
             engine = engines[mode]
             engine.stats = EngineStats()
             states = replay(engine, prompts, arrivals, gen_tokens)
             if mode not in best or engine.stats.decode_tps > results[mode]:
                 results[mode] = engine.stats.decode_tps
                 best[mode] = (engine.stats, states)
-    for mode in modes:
+    dense_states = best.get("off", (None, None))[1]
+    for mode in scenarios:
         s, states = best[mode]
         lat = latency_percentiles(states)
+        agree = _agreement(states, dense_states) \
+            if dense_states is not None else float("nan")
         log(f"{mode:12s} decode {s.decode_tps:7.1f} tok/s | prefill "
             f"{s.prefill_tps:7.1f} tok/s | latency p50 "
             f"{lat['latency_p50']:.2f}s p95 {lat['latency_p95']:.2f}s | "
             f"ttft p50 {lat['ttft_p50']:.2f}s | occ "
-            f"{s.summary()['mean_occupancy']:.1f}/{max_slots}")
+            f"{s.summary()['mean_occupancy']:.1f}/{max_slots} | "
+            f"vs-dense agree {agree:.1%}")
         rows.append((f"serving/decode_tps/{mode}", 0.0,
                      f"{s.decode_tps:.1f}tok/s;p50={lat['latency_p50']:.3f}s;"
-                     f"p95={lat['latency_p95']:.3f}s"))
+                     f"p95={lat['latency_p95']:.3f}s;"
+                     f"dense_agree={agree:.3f}"))
 
-    if "off" in results and "topk_shared" in results:
+    if "off" in results and "topk_shared" in results and expect_speedup:
         ratio = results["topk_shared"] / results["off"]
         log(f"topk_shared vs dense decode speedup: x{ratio:.2f} "
             f"(sparsity {sparsity:.0%})")
         rows.append(("serving/decode_speedup_topk_shared", 0.0,
                      f"x{ratio:.3f}"))
+    if "off" in results and "mixed" in results:
+        ratio = results["mixed"] / results["off"]
+        log(f"mixed (dense sensitive + topk_shared) vs dense decode "
+            f"speedup: x{ratio:.2f} (matched global budget)")
+        rows.append(("serving/decode_speedup_mixed", 0.0, f"x{ratio:.3f}"))
     return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--modes", default="off,topk_shared,topk_block")
+    ap.add_argument("--modes", default="off,topk_shared,topk_block,mixed")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=8.0)
     ap.add_argument("--gen", type=int, default=48)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--sensitive-frac", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + trace for CI: exercises every "
+                         "scenario (incl. mixed) and the parity gate in "
+                         "about a minute; no throughput expectations")
     args = ap.parse_args()
-    rows = run(modes=tuple(args.modes.split(",")), n_requests=args.requests,
-               rate_hz=args.rate, gen_tokens=args.gen, max_slots=args.slots,
-               sparsity=args.sparsity, seed=args.seed, reps=args.reps)
+    kw = dict(modes=tuple(args.modes.split(",")), n_requests=args.requests,
+              rate_hz=args.rate, gen_tokens=args.gen, max_slots=args.slots,
+              sparsity=args.sparsity, seed=args.seed, reps=args.reps,
+              sensitive_frac=args.sensitive_frac)
+    if args.smoke:
+        kw.update(cfg=bench_config(d_model=128, d_ff=512, layers=4,
+                                   vocab=512),
+                  n_requests=4, gen_tokens=8, max_slots=4, reps=1,
+                  expect_speedup=False)
+    rows = run(**kw)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

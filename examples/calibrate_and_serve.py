@@ -1,7 +1,9 @@
-"""Serving example: calibrate WiSparse offline, save the plan, reload it in
-a "serving fleet" process and run batched greedy decoding with the
-weight-aware sparse path (paper §5.1 recipe: dense prefill half, sparse
-decode), comparing outputs against the dense server.
+"""Serving example: calibrate WiSparse offline, save a *self-contained*
+policy artifact, reload it in a "serving fleet" process (no checkpoint
+needed to rebuild the sparsity params — the artifact carries ratios,
+alphas, taus and the weight-column norms g) and run batched greedy
+decoding with the weight-aware sparse path (paper §5.1 recipe: dense
+prefill half, sparse decode), comparing outputs against the dense server.
 
     PYTHONPATH=src python examples/calibrate_and_serve.py
 """
@@ -13,16 +15,16 @@ _sys.path.insert(0, _os.path.join(_os.path.dirname(__file__), "..", "src"))
 import dataclasses
 import tempfile
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import calibration, pipeline
+from repro.core import pipeline
 from repro.core.allocation import EvoConfig
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.serve import generate
 from repro.models import api
+from repro.sparsity import SparsityPolicy
 
 cfg = reduced(get_config("llama31_8b"))
 params = api.init_model(cfg, 0)
@@ -34,16 +36,24 @@ plan = pipeline.run_pipeline(
     params, cfg, calib, p_target=0.5,
     evo=EvoConfig(generations=2, offspring=4, eps=0.1),
     delta=0.25, coord_passes=0, log=print)
-with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
-    plan.save(f.name)
-    print(f"plan saved to {f.name} "
-          f"(block ratios {np.round(plan.block_ratios, 2)})")
 
-# --- serving ----------------------------------------------------------------
+# the policy: paper-exact mask numerics on the most sensitive blocks
+# (lowest evolutionary prune ratios), mask everywhere else for this demo
+policy = plan.to_policy(backend="mask", sensitive_backend="mask")
+artifact = tempfile.NamedTemporaryFile(suffix=".npz", delete=False).name
+policy.save(artifact, sp=plan.stacked_sp)
+print(f"self-contained artifact saved to {artifact} "
+      f"(block ratios {np.round(plan.block_ratios, 2)})")
+
+# --- serving fleet: reload without the calibration context -----------------
+policy2, sp2 = SparsityPolicy.load(artifact)
+assert policy2 == policy
+
 prompts = jnp.asarray(SyntheticLM(
     dataclasses.replace(data_cfg, seq_len=32)).batch(7))
-dense = generate(params, cfg, prompts, 16, None, mode="off")
-sparse = generate(params, cfg, prompts, 16, plan.stacked_sp, mode="mask")
+dense = generate(params, cfg, prompts, 16, None,
+                 policy=SparsityPolicy.dense())
+sparse = generate(params, cfg, prompts, 16, sp2, policy=policy2)
 agree = float((dense == sparse).mean())
 print(f"generated {dense.size} tokens; "
       f"sparse/dense token agreement: {agree:.1%}")

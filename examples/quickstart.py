@@ -15,8 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import calibration, pipeline
-from repro.core import sparse_linear as sl
+from repro.core import pipeline
 from repro.core import unstacked as U
 from repro.models import api
 
@@ -37,11 +36,14 @@ plan = pipeline.run_pipeline(
     delta=0.25, coord_passes=0, log=print)
 print("block-level prune ratios:", np.round(plan.block_ratios, 3))
 
-# 4. run the sparse model (per-token masks, Eq. 5) and compare to dense
+# 4. run the sparse model (per-token masks, Eq. 5) and compare to dense.
+#    The execution backend is an explicit SparsityPolicy value, not
+#    ambient state: pass it alongside the traced sp params.
+from repro.sparsity import SparsityPolicy
 dense_logits, _ = U.forward_unstacked(params, cfg, tokens)
-with sl.sparsity_mode("mask"):
-    sparse_logits, _ = U.forward_unstacked(params, cfg, tokens,
-                                           per_depth_sp=plan.per_depth_sp)
+sparse_logits, _ = U.forward_unstacked(params, cfg, tokens,
+                                       per_depth_sp=plan.per_depth_sp,
+                                       policy=SparsityPolicy.uniform("mask"))
 pd = jax.nn.log_softmax(dense_logits.astype(jnp.float32), -1)
 ps = jax.nn.log_softmax(sparse_logits.astype(jnp.float32), -1)
 kl = float(jnp.mean(jnp.sum(jnp.exp(pd) * (pd - ps), -1)))

@@ -19,8 +19,12 @@ from repro.configs.base import ModelConfig
 from repro.core import sparse_linear as sl
 from repro.core import unstacked as U
 from repro.models import model as M
+from repro.sparsity import CaptureSink, SparsityPolicy
 
 Key = Tuple[int, str]                       # (depth, leaf path e.g. "attn/wq")
+
+# calibration/eval execution: paper-exact per-token mask numerics
+_MASK = SparsityPolicy.uniform("mask")
 
 
 @dataclasses.dataclass
@@ -85,12 +89,11 @@ class CalibContext:
             pd = jnp.exp(dense)
 
             def f(sp_list):
-                with sl.sparsity_mode("mask"):
-                    logits, _ = U.forward_unstacked(
-                        params, cfg, batch["tokens"], layers=layers,
-                        per_depth_sp=sp_list,
-                        patch_embeds=batch.get("patch_embeds"),
-                        frames=batch.get("frames"))
+                logits, _ = U.forward_unstacked(
+                    params, cfg, batch["tokens"], layers=layers,
+                    per_depth_sp=sp_list,
+                    patch_embeds=batch.get("patch_embeds"),
+                    frames=batch.get("frames"), policy=_MASK)
                 ls = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
                 return jnp.mean(jnp.sum(pd * (dense - ls), axis=-1))
 
@@ -106,8 +109,7 @@ class CalibContext:
             cfg, enc_out = self.cfg, self.enc_out
 
             def f(sp):
-                with sl.sparsity_mode("mask"):
-                    y = U.block_forward(dl, x_in, cfg, sp, enc_out)
+                y = U.block_forward(dl, x_in, cfg, sp, enc_out, policy=_MASK)
                 return jnp.mean(jnp.square(y.astype(jnp.float32) - y_ref))
 
             self._block_fns[depth] = jax.jit(f)
@@ -151,12 +153,13 @@ def build_context(params, cfg: ModelConfig, batch) -> CalibContext:
     if cfg.family == "encdec" and "frames" in batch:
         enc_out = M.encode(params, batch["frames"], cfg)
 
-    with sl.capture_inputs() as cap:
-        logits, block_io = U.forward_unstacked(
-            params, cfg, batch["tokens"], layers=layers,
-            patch_embeds=batch.get("patch_embeds"),
-            frames=batch.get("frames"), collect_block_inputs=True)
-        block_io = list(block_io)
+    cap = CaptureSink()
+    logits, block_io = U.forward_unstacked(
+        params, cfg, batch["tokens"], layers=layers,
+        patch_embeds=batch.get("patch_embeds"),
+        frames=batch.get("frames"), collect_block_inputs=True,
+        policy=SparsityPolicy.dense(capture=cap))
+    block_io = list(block_io)
     # forward_unstacked appends inputs before each block; add the final x
     # is handled below via a second pass convention: recompute last output.
     last = layers[-1]

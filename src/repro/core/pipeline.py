@@ -6,9 +6,15 @@
     tau_l    <- Eq. 7 quantile at the final (alpha, ratio)
 
 Returns a ``SparsePlan`` holding per-depth sp dicts (calibration/eval form)
-plus the re-stacked sp tree the scanned production model consumes, and
-serialization helpers so a plan calibrated offline ships to the serving
-fleet as plain arrays.
+plus the re-stacked sp tree the scanned production model consumes.
+
+Shipping a plan: ``SparsePlan.save``/``load_ratios`` round-trip the search
+*outputs* (ratios/alphas/taus) as json — enough to rebuild sp against a
+checkpoint.  For a **self-contained** artifact that needs no checkpoint
+(it also carries the weight-column norms ``g``), use
+``plan.to_policy().save(path, sp=plan.stacked_sp)`` /
+``repro.sparsity.SparsityPolicy.load`` — that is what a serving fleet
+loads.
 """
 from __future__ import annotations
 
@@ -61,11 +67,29 @@ class SparsePlan:
     def load_ratios(path: str):
         with open(path) as f:
             blob = json.load(f)
-        parse = lambda d: {(int(k.split("|")[0]), k.split("|")[1]): v
-                           for k, v in d.items()}
+
+        def parse(d):
+            out = {}
+            for k, v in d.items():
+                # split once: a "|" inside the path component must survive
+                # the round-trip, not silently truncate the key
+                depth, p = k.split("|", 1)
+                out[(int(depth), p)] = v
+            return out
+
         return (blob["p_target"], np.array(blob["block_ratios"]),
                 parse(blob["layer_ratios"]), parse(blob["alphas"]),
                 parse(blob["taus"]))
+
+    def to_policy(self, backend: str = "topk_shared",
+                  sensitive_backend=None, sensitive_frac: float = 0.25,
+                  **kw):
+        """Execution policy for this plan — see
+        :meth:`repro.sparsity.SparsityPolicy.from_plan`."""
+        from repro.sparsity import SparsityPolicy
+        return SparsityPolicy.from_plan(
+            self, backend=backend, sensitive_backend=sensitive_backend,
+            sensitive_frac=sensitive_frac, **kw)
 
 
 def run_pipeline(params, cfg: ModelConfig, calib_batch, p_target: float,

@@ -1,28 +1,27 @@
 """WiSparse sparse-projection dispatch.
 
-``project(x, w, sp)`` is the single choke point through which every linear
-layer in the model zoo runs.  ``sp`` carries the per-layer WiSparse
-parameters (all traced arrays so they can ride through ``lax.scan`` over a
-stacked layer group):
+``project(x, w, sp, policy=...)`` is the single choke point through which
+every linear layer in the model zoo runs.  ``sp`` carries the per-layer
+WiSparse parameters (all traced arrays so they can ride through
+``lax.scan`` over a stacked layer group):
 
     g          (n_in,)  precomputed weight-column L2 norms  (paper Eq. 4)
     alpha      ()       layer exponent alpha_l               (paper Eq. 4)
     tau        ()       inference threshold tau_l            (paper Eq. 5)
     keep_frac  ()       keep ratio 1 - p_l (gather backends)
 
-The *static* execution mode lives in a context var (set by the serving /
-calibration drivers), because backends differ in lowering:
+The *static* execution config is an explicit :class:`SparsityPolicy`
+value (``repro.sparsity``): which backend runs where (globally, per
+layer-role, per block range), the static top-k bound, the Pallas block
+size/interpret flag, and the optional calibration capture hook.  Because
+backends differ in lowering, the policy is a hashable static jit argument
+— never ambient state — so concurrent engines with different policies can
+never share a trace.
 
-    off          dense matmul (baseline)
-    mask         per-token threshold mask, dense compute (paper-exact
-                 numerics; the calibration/eval path)
-    topk_shared  batched-serving gather path (DESIGN.md SS3.3): one
-                 weight-aware channel set per layer per step, shared across
-                 the batch; FLOPs and weight bytes shrink with sparsity and
-                 the op stays XLA-partitionable.
-    topk_block   like topk_shared but whole 128-channel blocks (the TPU
-                 block-granular scheme the Pallas kernel implements).
-    pallas       Pallas block-gather kernel (TPU target; interpret on CPU).
+Deprecated shims (one release): the thread-local ``sparsity_mode``,
+``capture_inputs`` and ``token_weights`` contexts still work for callers
+that do not pass ``policy=`` / ``token_weights=`` explicitly; explicit
+arguments always win.
 """
 from __future__ import annotations
 
@@ -34,25 +33,59 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.sparsity import CaptureSink, SparsityPolicy, VALID_BACKENDS
+
+__all__ = [
+    "SparsityPolicy", "CaptureSink", "VALID_BACKENDS", "project", "scores",
+    "column_norms", "default_sp", "resolve_execution",
+    # deprecated shims
+    "SparsityMode", "sparsity_mode", "current_mode", "capture_inputs",
+    "capture_active", "token_weights", "current_token_weights", "record",
+]
+
+# sentinel distinguishing "argument not given -> consult the deprecated
+# thread-local context" from an explicit None ("no token weights")
+_UNSET = object()
+
+
+# ---------------------------------------------------------------------------
+# Deprecated thread-local shims (kept one release; see SparsityPolicy)
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class SparsityMode:
+    """Deprecated: use :class:`SparsityPolicy`.  Kept so existing
+    ``sparsity_mode(...)`` callers keep working for one release."""
     mode: str = "off"            # off|mask|topk_shared|topk_block|pallas
     k_max_frac: float = 1.0      # static upper bound on kept fraction
     block: int = 128             # channel-block size (TPU lane width)
     interpret: bool = True       # Pallas interpret mode (CPU container)
+
+    @property
+    def backend(self) -> str:
+        return self.mode
 
 
 _STATE = threading.local()
 
 
 def current_mode() -> SparsityMode:
+    """Deprecated: read the thread-local mode context."""
     return getattr(_STATE, "mode", None) or SparsityMode()
 
 
 @contextlib.contextmanager
 def sparsity_mode(mode: str = "mask", k_max_frac: float = 1.0,
                   block: int = 128, interpret: bool = True):
+    """Deprecated: prefer passing an explicit ``SparsityPolicy`` (e.g.
+    ``SparsityPolicy.uniform(mode, k_max_frac=...)``) to ``forward`` /
+    ``project``.  This context only affects calls that do not receive a
+    policy argument."""
+    import warnings
+    warnings.warn(
+        "sparsity_mode(...) is deprecated; pass "
+        "policy=SparsityPolicy.uniform(...) explicitly",
+        DeprecationWarning, stacklevel=3)
     prev = getattr(_STATE, "mode", None)
     _STATE.mode = SparsityMode(mode, k_max_frac, block, interpret)
     try:
@@ -63,9 +96,15 @@ def sparsity_mode(mode: str = "mask", k_max_frac: float = 1.0,
 
 @contextlib.contextmanager
 def capture_inputs():
-    """Calibration hook: record (id(w), x) for every projection executed
-    eagerly inside this context.  Used by repro.core.calibration to gather
-    per-linear input activations without instrumenting the models."""
+    """Deprecated calibration hook: prefer a :class:`CaptureSink` on the
+    policy (``SparsityPolicy.dense(capture=CaptureSink())``).  Records
+    (id(w), x) for every projection executed eagerly inside this context
+    that does not receive an explicit policy."""
+    import warnings
+    warnings.warn(
+        "capture_inputs() is deprecated; attach a CaptureSink to the "
+        "policy (SparsityPolicy.dense(capture=CaptureSink()))",
+        DeprecationWarning, stacklevel=3)
     prev = getattr(_STATE, "capture", None)
     _STATE.capture = []
     try:
@@ -75,18 +114,22 @@ def capture_inputs():
 
 
 def capture_active() -> bool:
+    """Deprecated: query the thread-local capture context."""
     return getattr(_STATE, "capture", None) is not None
 
 
 @contextlib.contextmanager
 def token_weights(w):
-    """Serving hook: weight each token row's contribution to the shared
-    top-k saliency aggregate.  The engine passes the active-slot mask for
-    batched decode (so freed/empty slots don't pollute the layer's shared
-    channel set) and the real-token mask for padded prefill chunks.  With
-    all-ones weights the ranking (and the floats) match the unweighted
-    mean exactly.  w: (rows,) or None; rows must equal the flattened
-    token count of each projection call inside the context."""
+    """Deprecated serving hook: prefer passing ``token_weights=`` through
+    ``M.forward`` / the step factories.  Weights each token row's
+    contribution to the shared top-k saliency aggregate; with all-ones
+    weights the ranking (and the floats) match the unweighted mean
+    exactly.  w: (rows,) or None."""
+    import warnings
+    warnings.warn(
+        "the token_weights(...) context is deprecated; pass "
+        "token_weights= through M.forward / the step factories",
+        DeprecationWarning, stacklevel=3)
     prev = getattr(_STATE, "tok_w", None)
     _STATE.tok_w = w
     try:
@@ -96,32 +139,61 @@ def token_weights(w):
 
 
 def current_token_weights():
+    """Deprecated: read the thread-local token-weights context."""
     return getattr(_STATE, "tok_w", None)
 
 
-def _saliency(xf, sp):
-    """Per-channel shared saliency over all token rows (optionally
-    weighted by the serving engine's token_weights context)."""
-    s = scores(xf, sp["g"], sp["alpha"])                 # (rows, n_in)
-    tw = current_token_weights()
-    if tw is None:
-        return s.mean(axis=0)
-    if tw.size != s.shape[0]:
-        # a projection whose rows aren't the context's tokens (e.g. an
-        # expert-dispatched layout) must opt out via token_weights(None)
-        # — mis-aligned weights would silently bias the channel set
-        raise ValueError(
-            f"token_weights has {tw.size} rows but the projection sees "
-            f"{s.shape[0]} token rows; wrap dispatch-reshaped projections "
-            "in token_weights(None)")
-    twf = tw.reshape(-1, 1).astype(jnp.float32)
-    return (s * twf).sum(axis=0) / jnp.maximum(twf.sum(), 1.0)
-
-
 def record(w, x):
+    """Deprecated: append to the thread-local capture context (the policy
+    ``capture`` sink replaces this)."""
     cap = getattr(_STATE, "capture", None)
     if cap is not None and not isinstance(x, jax.core.Tracer):
         cap.append((id(w), x))
+
+
+def _policy_from_context() -> SparsityPolicy:
+    """Build a policy from the deprecated thread-local contexts — the one
+    place the legacy ambient state is still consulted."""
+    m = current_mode()
+    cap = getattr(_STATE, "capture", None)
+    return SparsityPolicy(
+        backend=m.mode, k_max_frac=m.k_max_frac, block=m.block,
+        interpret=m.interpret,
+        capture=CaptureSink(cap) if cap is not None else None)
+
+
+def resolve_execution(policy: Optional[SparsityPolicy], tok_w=None):
+    """Fill unspecified execution state from the deprecated thread-local
+    contexts (explicit arguments always win).  Model entry points call
+    this exactly once at the forward boundary, so nothing below it ever
+    reads ambient state."""
+    if policy is None:
+        policy = _policy_from_context()
+    if tok_w is None:
+        tok_w = current_token_weights()
+    return policy, tok_w
+
+
+# ---------------------------------------------------------------------------
+# Scoring
+# ---------------------------------------------------------------------------
+
+def _saliency(xf, sp, tok_w=None):
+    """Per-channel shared saliency over all token rows (optionally
+    weighted by the serving engine's token weights)."""
+    s = scores(xf, sp["g"], sp["alpha"])                 # (rows, n_in)
+    if tok_w is None:
+        return s.mean(axis=0)
+    if tok_w.size != s.shape[0]:
+        # a projection whose rows aren't the step's tokens (e.g. an
+        # expert-dispatched layout) must opt out via token_weights=None
+        # — mis-aligned weights would silently bias the channel set
+        raise ValueError(
+            f"token_weights has {tok_w.size} rows but the projection sees "
+            f"{s.shape[0]} token rows; pass token_weights=None for "
+            "dispatch-reshaped projections")
+    twf = tok_w.reshape(-1, 1).astype(jnp.float32)
+    return (s * twf).sum(axis=0) / jnp.maximum(twf.sum(), 1.0)
 
 
 def _matmul(x, w):
@@ -129,8 +201,9 @@ def _matmul(x, w):
 
     Output dtype == input dtype: a f32 preferred_element_type makes XLA
     hoist the bf16 convert past the row-parallel all-reduce, doubling every
-    TP activation psum on the wire (EXPERIMENTS.md SSPerf iteration B2).
-    The MXU accumulates in f32 internally either way."""
+    TP activation psum on the wire (measured on the TP mesh dry-runs; see
+    benchmarks/roofline_report.py).  The MXU accumulates in f32 internally
+    either way."""
     return jax.lax.dot_general(
         x.reshape(-1, x.shape[-1]), w.reshape(w.shape[0], -1),
         (((1,), (0,)), ((), ())),
@@ -144,21 +217,37 @@ def scores(x, g, alpha):
     return jnp.abs(x.astype(jnp.float32)) * jnp.power(gf, alpha)
 
 
-def project(x, w, sp: Optional[dict] = None, row_parallel: bool = False):
-    """row_parallel: statically marks weights whose *input* dim is
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+def project(x, w, sp: Optional[dict] = None, row_parallel: bool = False, *,
+            policy: Optional[SparsityPolicy] = None,
+            role: Optional[str] = None, token_weights=_UNSET):
+    """Dispatch one projection under ``policy`` (per-block depth ranges
+    are already folded in by the model's scan driver; only role overrides
+    remain to resolve here).
+
+    row_parallel statically marks weights whose *input* dim is
     model-sharded (o_proj/down_proj/out_proj).  The top-k gather backends
     then select a balanced per-shard channel budget so the gather stays
     local instead of lowering to a cross-shard masked-gather + all-reduce
-    (DESIGN.md SS3 / EXPERIMENTS.md SSPerf iteration A3)."""
-    record(w, x)
-    mode = current_mode()
-    if sp is None or mode.mode == "off":
+    (see ``_topk_gather_grouped``).
+    """
+    if policy is None:
+        policy = _policy_from_context()              # deprecated shim
+    if token_weights is _UNSET:
+        token_weights = current_token_weights()      # deprecated shim
+    if policy.capture is not None:
+        policy.capture.record(w, x)
+    backend = policy.backend_at(role=role)
+    if sp is None or backend == "off":
         return _matmul(x, w)
-    if mode.mode == "mask":
+    if backend == "mask":
         s = scores(x, sp["g"], sp["alpha"])
         m = (s >= sp["tau"]).astype(x.dtype)           # Eq. 5
         return _matmul(x * m, w)
-    if mode.mode in ("topk_shared", "topk_block"):
+    if backend in ("topk_shared", "topk_block"):
         groups = 1
         if row_parallel:
             from repro.distributed.sharding import current_ctx
@@ -168,37 +257,47 @@ def project(x, w, sp: Optional[dict] = None, row_parallel: bool = False):
                 g = sizes.get("model", 1)
                 if w.shape[0] % g == 0:
                     groups = g
-        return _topk_gather(x, w, sp, mode, groups)
-    if mode.mode == "pallas":
+        return _topk_gather(x, w, sp, policy, backend=backend, groups=groups,
+                            token_weights=token_weights)
+    if backend == "pallas":
         from repro.kernels import ops as kops
-        return kops.wisparse_project(x, w, sp, block=mode.block,
-                                     interpret=mode.interpret)
-    raise ValueError(f"unknown sparsity mode {mode.mode}")
+        return kops.wisparse_project(x, w, sp, block=policy.block,
+                                     k_frac=policy.k_max_frac,
+                                     interpret=policy.interpret,
+                                     token_weights=token_weights)
+    raise ValueError(    # unreachable: policies validate at construction
+        f"unknown sparsity backend {backend}")
 
 
-def _topk_gather(x, w, sp, mode: SparsityMode, groups: int = 1):
+def _topk_gather(x, w, sp, policy, *, backend: Optional[str] = None,
+                 groups: int = 1, token_weights=None):
     """Shared-mask gather path: aggregate weight-aware scores over all
     tokens in the call, keep the top k_max channels (static), mask ranks
     beyond the layer's own traced keep_frac, gather the corresponding
     weight rows and run a compact matmul.  FLOPs ~ k/n of dense.
 
+    ``policy`` supplies the static knobs (k_max_frac, block); it may be a
+    SparsityPolicy or a legacy SparsityMode (both expose ``.backend``).
+
     groups > 1: balanced per-shard selection for row-parallel weights —
     the channel budget is split evenly across `groups` contiguous input
     slices (= the weight's model shards) so every gather is shard-local."""
+    backend = backend or policy.backend
     if groups > 1:
-        return _topk_gather_grouped(x, w, sp, mode, groups)
+        return _topk_gather_grouped(x, w, sp, policy, groups,
+                                    token_weights=token_weights)
     n_in = w.shape[0]
     xf = x.reshape(-1, n_in)
-    sal = _saliency(xf, sp)                                      # (n_in,)
-    if mode.mode == "topk_block":
-        b = mode.block
+    sal = _saliency(xf, sp, token_weights)                       # (n_in,)
+    if backend == "topk_block":
+        b = policy.block
         nb = max(n_in // b, 1)
         if n_in % b:
             pad = nb * b + b - n_in
             sal = jnp.pad(sal, (0, pad))
             nb += 1
         blk = sal.reshape(nb, -1).sum(axis=1)
-        kb_max = max(1, round(nb * mode.k_max_frac))
+        kb_max = max(1, round(nb * policy.k_max_frac))
         _, bidx = jax.lax.top_k(blk, kb_max)
         idx = (bidx[:, None] * b + jnp.arange(b)[None, :]).reshape(-1)
         idx = jnp.minimum(idx, n_in - 1)
@@ -206,7 +305,7 @@ def _topk_gather(x, w, sp, mode: SparsityMode, groups: int = 1):
         rank_ok = (jnp.arange(kb_max) < k_l)
         rank_ok = jnp.repeat(rank_ok, b)
     else:
-        k_max = max(1, round(n_in * mode.k_max_frac))
+        k_max = max(1, round(n_in * policy.k_max_frac))
         _, idx = jax.lax.top_k(sal, k_max)
         k_l = jnp.round(sp["keep_frac"] * n_in).astype(jnp.int32)
         rank_ok = jnp.arange(k_max) < k_l
@@ -217,18 +316,18 @@ def _topk_gather(x, w, sp, mode: SparsityMode, groups: int = 1):
     return y.astype(x.dtype).reshape(x.shape[:-1] + w.shape[1:])
 
 
-def _topk_gather_grouped(x, w, sp, mode: SparsityMode, groups: int):
+def _topk_gather_grouped(x, w, sp, policy, groups: int, token_weights=None):
     """Balanced grouped selection: reshape the input-channel dim into
     (groups, n/groups), pick top-(k/groups) per group, gather within each
     group (shard-local for model-sharded weight rows), contract per group
     and sum.  Keeps the same global budget; selection is per-shard-balanced
-    (accuracy delta measured in benchmarks/table1)."""
+    (accuracy delta measured in benchmarks/table1_accuracy.py)."""
     n_in = w.shape[0]
     G = groups
     ng = n_in // G
     xf = x.reshape(-1, n_in)
-    sal = _saliency(xf, sp).reshape(G, ng)
-    k_max = max(1, round(ng * mode.k_max_frac))
+    sal = _saliency(xf, sp, token_weights).reshape(G, ng)
+    k_max = max(1, round(ng * policy.k_max_frac))
     _, idx = jax.lax.top_k(sal, k_max)                    # (G, k)
     k_l = jnp.round(sp["keep_frac"] * ng).astype(jnp.int32)
     rank_ok = (jnp.arange(k_max) < k_l)[None, :]          # (1, k)

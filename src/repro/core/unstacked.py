@@ -17,7 +17,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 
-# weight-leaf names WiSparse sparsifies (DESIGN.md SS5)
+# weight-leaf names WiSparse sparsifies: every channel-sparse linear in the
+# zoo (attention q/k/v/o, MLP gate/up/down, SSM input/output projections);
+# convs, norms, routers and the SSD recurrence stay dense
 SPARSIFIABLE = {
     "wq", "wk", "wv", "wo", "wi_gate", "wi_up", "wi",
     "in_z", "in_x", "in_B", "in_C", "in_dt", "out_proj",
@@ -117,13 +119,17 @@ def get_sp_leaf(sp: dict, path: str) -> dict:
 
 def forward_unstacked(params, cfg: ModelConfig, tokens, *, layers=None,
                       per_depth_sp=None, patch_embeds=None, frames=None,
-                      collect_block_inputs=False):
+                      collect_block_inputs=False, policy=None):
     """Full forward via the python-loop layer list.  Returns
-    (logits, block_inputs or None)."""
+    (logits, block_inputs or None).  ``policy``: the SparsityPolicy driving
+    every projection (depth ranges resolve per layer here; None falls back
+    to the deprecated thread-local contexts)."""
+    from repro.core import sparse_linear as _sl
+    policy, _ = _sl.resolve_execution(policy, None)
     layers = layers or unstack_layers(cfg, params)
     enc_out = None
     if cfg.family == "encdec" and frames is not None:
-        enc_out = M.encode(params, frames, cfg)
+        enc_out = M.encode(params, frames, cfg, policy=policy)
     x = M.embed_tokens(params, tokens, cfg)
     if patch_embeds is not None:
         x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
@@ -137,13 +143,18 @@ def forward_unstacked(params, cfg: ModelConfig, tokens, *, layers=None,
             block_inputs.append(x)
         sp = per_depth_sp[dl.depth] if per_depth_sp is not None else None
         x, _ = M.layer_apply(dl.params, x, cfg, dl.kind, sp, None, None,
-                             "train", enc_out)
+                             "train", enc_out,
+                             policy=policy.resolve_depth(dl.depth))
     x = M.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     return M.lm_logits(params, x, cfg), block_inputs
 
 
-def block_forward(dl: DepthLayer, x, cfg: ModelConfig, sp=None, enc_out=None):
+def block_forward(dl: DepthLayer, x, cfg: ModelConfig, sp=None, enc_out=None,
+                  policy=None):
     """One transformer block (paper's unit of sensitivity analysis)."""
+    from repro.core import sparse_linear as _sl
+    policy, _ = _sl.resolve_execution(policy, None)
     out, _ = M.layer_apply(dl.params, x, cfg, dl.kind, sp, None, None,
-                           "train", enc_out)
+                           "train", enc_out,
+                           policy=policy.resolve_depth(dl.depth))
     return out

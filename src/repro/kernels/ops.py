@@ -1,27 +1,35 @@
 """Jit'd end-to-end WiSparse projection built on the Pallas kernels.
 
-This is the ``mode="pallas"`` backend of ``repro.core.sparse_linear``:
+This is the ``backend="pallas"`` path of ``repro.core.sparse_linear``:
   1. fused scoring + per-channel threshold mask (Eq. 4/5) + per-block
      aggregate scores (score_mask kernel),
-  2. static-budget top-k block selection (k from the mode's k_max_frac;
+  2. static-budget top-k block selection (k from the policy's k_max_frac;
      ranks beyond the layer's traced keep_frac get their x zeroed, so the
      per-layer allocation still binds),
   3. block-gather matmul over exactly the kept blocks (sparse_matmul).
+
+All execution state arrives as explicit arguments (``k_frac``,
+``token_weights``); the thread-local fallbacks below are one-release
+deprecation shims for callers that predate ``SparsityPolicy``.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import sparse_matmul as K
 
+_UNSET = object()
+
 
 def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = None,
-                     interpret: bool = True, per_seq: bool = False):
-    """x: (..., n); w: (n, *out).  Returns x W with WiSparse block sparsity."""
-    from repro.core.sparse_linear import current_mode, current_token_weights
+                     interpret: bool = True, per_seq: bool = False,
+                     token_weights=_UNSET):
+    """x: (..., n); w: (n, *out).  Returns x W with WiSparse block sparsity.
+
+    token_weights: per-row weights for the shared block-score aggregate
+    (the serving engine's active-slot / real-token mask, fused into the
+    kernel); explicit None disables weighting."""
     n = w.shape[0]
     w2 = w.reshape(n, -1)
     lead = x.shape[:-1]
@@ -30,17 +38,20 @@ def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = None,
     while n % blk:
         blk -= 1
     nb = n // blk
-    kf = k_frac if k_frac is not None else current_mode().k_max_frac
-    kb = max(1, min(nb, round(nb * kf)))
+    if k_frac is None:                                  # deprecated shim
+        from repro.core.sparse_linear import current_mode
+        k_frac = current_mode().k_max_frac
+    if token_weights is _UNSET:                         # deprecated shim
+        from repro.core.sparse_linear import current_token_weights
+        token_weights = current_token_weights()
+    kb = max(1, min(nb, round(nb * k_frac)))
 
-    # serving engine: each row's block-score contribution is weighted by
-    # the active-slot / real-token mask (fused into the kernel)
-    tw = current_token_weights()
+    tw = token_weights
     if tw is not None and tw.size != xf.shape[0]:
         raise ValueError(
             f"token_weights has {tw.size} rows but the projection sees "
-            f"{xf.shape[0]} token rows; wrap dispatch-reshaped projections "
-            "in token_weights(None)")
+            f"{xf.shape[0]} token rows; pass token_weights=None for "
+            "dispatch-reshaped projections")
     xm, bs = K.score_mask(xf, sp["g"], sp["alpha"], sp["tau"], blk=blk,
                           interpret=interpret, row_weights=tw)
     _, idx = jax.lax.top_k(bs, kb)

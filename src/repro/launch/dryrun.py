@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs import SHAPES, get_config, runnable_cells
 from repro.core import sp_schema
-from repro.core.sparse_linear import sparsity_mode
+from repro.sparsity import SparsityPolicy
 from repro.distributed.sharding import (LOGICAL_RULES_SERVE,
                                         LOGICAL_RULES_TRAIN, param_shardings,
                                         sharding_context)
@@ -57,7 +57,12 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         in_specs = api.input_specs(cfg, shape)
         in_axes = api.input_axes(cfg, shape)
         b_sh = _shardings_for(in_axes, in_specs, ctx)
-        step, kind = api.step_for_shape(cfg, shape, remat=remat)
+        policy = SparsityPolicy.uniform(
+            "topk_shared", k_max_frac=max(1.0 - sparsity, 1e-6)) \
+            if sparse else SparsityPolicy.dense()
+        step, kind = api.step_for_shape(
+            cfg, shape, remat=remat, policy=policy,
+            aligned=aligned and shape.mode == "decode")
 
         args, shardings, donate = [abstract], [p_sh], ()
         if shape.mode == "train":
@@ -74,20 +79,16 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             if shape.mode == "decode" and donate_cache:
                 donate = (1,)          # in-place KV-cache update
 
-        sp_ctx = sparsity_mode("topk_shared", k_max_frac=1.0 - sparsity) \
-            if sparse else sparsity_mode("off")
         if sparse:
             sp_abs, sp_axes = sp_schema.abstract_sp(cfg)
             sp_sh = _shardings_for(sp_axes, sp_abs, ctx)
             args += [sp_abs]
             shardings += [sp_sh]
 
-        from repro.models.model import aligned_decode
-        with sp_ctx, aligned_decode(aligned and shape.mode == "decode"):
-            jitted = jax.jit(step, in_shardings=tuple(shardings),
-                             donate_argnums=donate)
-            lowered = jitted.lower(*args)
-            compiled = lowered.compile()
+        jitted = jax.jit(step, in_shardings=tuple(shardings),
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

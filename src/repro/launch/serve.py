@@ -23,10 +23,9 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core import pipeline as wis_pipeline
-from repro.core import unstacked as U
-from repro.core.sparse_linear import sparsity_mode
 from repro.data import DataConfig, SyntheticLM
 from repro.models import api, model as M
+from repro.sparsity import SparsityPolicy
 
 
 def _pad_caches(cfg, caches, batch, total_len):
@@ -44,9 +43,27 @@ def _pad_caches(cfg, caches, batch, total_len):
 
 
 def generate(params, cfg, prompts, gen_tokens: int, sp_stacked=None,
-             mode: str = "mask", k_max_frac: float = 1.0,
-             prefill_sparse_frac: float = 0.5):
-    """prompts: (B, P) int32.  Returns (B, gen_tokens) greedy tokens."""
+             mode: str = None, k_max_frac: float = None,
+             prefill_sparse_frac: float = 0.5, *, policy=None):
+    """prompts: (B, P) int32.  Returns (B, gen_tokens) greedy tokens.
+
+    ``policy`` (keyword-only): the SparsityPolicy for sparse phases.
+    ``mode``/``k_max_frac`` are the deprecated string-mode parameters
+    (one release, old positions preserved for positional callers): they
+    build a uniform policy when no explicit policy is given."""
+    if policy is None:
+        if mode is not None or k_max_frac is not None:
+            import warnings
+            warnings.warn(
+                "generate(mode=..., k_max_frac=...) is deprecated; pass "
+                "policy=SparsityPolicy.uniform(...) instead",
+                DeprecationWarning, stacklevel=2)
+        policy = SparsityPolicy.uniform(
+            mode or "mask", k_max_frac=1.0 if k_max_frac is None
+            else k_max_frac)
+    elif mode is not None or k_max_frac is not None:
+        raise ValueError("pass either policy= or the deprecated "
+                         "mode=/k_max_frac=, not both")
     B, P = prompts.shape
     total = P + gen_tokens
 
@@ -54,28 +71,28 @@ def generate(params, cfg, prompts, gen_tokens: int, sp_stacked=None,
     # half dense, the second half sparse (per-token thresholds make this a
     # pure mask toggle; we approximate by prefilling dense, which is the
     # conservative accuracy choice, when no split point is given)
-    with sparsity_mode("off" if prefill_sparse_frac < 1.0 else mode,
-                       k_max_frac=k_max_frac):
-        logits, caches = M.forward(params, cfg, tokens=prompts,
-                                   mode="prefill",
-                                   sp=sp_stacked if prefill_sparse_frac >= 1.0
-                                   else None)
+    prefill_sparse = prefill_sparse_frac >= 1.0
+    logits, caches = M.forward(
+        params, cfg, tokens=prompts, mode="prefill",
+        sp=sp_stacked if prefill_sparse else None,
+        policy=policy.for_phase(
+            "prefill_sparse" if prefill_sparse else "prefill_dense"))
     caches = _pad_caches(cfg, caches, B, total)
 
+    decode_policy = policy.for_phase("decode")
     decode = jax.jit(lambda p, b, sp: M.forward(
         p, cfg, tokens=b["tokens"], mode="decode", caches=b["caches"],
-        positions=b["positions"], sp=sp))
+        positions=b["positions"], sp=sp, policy=decode_policy))
 
     toks = jnp.argmax(logits, -1).astype(jnp.int32)
     out = [toks]
-    with sparsity_mode(mode, k_max_frac=k_max_frac):
-        for i in range(gen_tokens - 1):
-            positions = jnp.full((B,), P + i, jnp.int32)
-            logits, caches = decode(
-                params, {"tokens": toks, "caches": caches,
-                         "positions": positions}, sp_stacked)
-            toks = jnp.argmax(logits, -1).astype(jnp.int32)
-            out.append(toks)
+    for i in range(gen_tokens - 1):
+        positions = jnp.full((B,), P + i, jnp.int32)
+        logits, caches = decode(
+            params, {"tokens": toks, "caches": caches,
+                     "positions": positions}, sp_stacked)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(toks)
     return jnp.stack(out, axis=1)
 
 
@@ -102,7 +119,17 @@ def main():
                     help="prefill chunk size (chunked strategy)")
     ap.add_argument("--prefill-strategy", default="auto",
                     choices=["auto", "chunked", "whole"])
+    ap.add_argument("--sensitive-backend", default=None,
+                    choices=["off", "mask"],
+                    help="mixed per-block policy: run this backend on the "
+                         "most sensitive blocks of a calibrated plan "
+                         "(requires --calib-quick)")
+    ap.add_argument("--sensitive-frac", type=float, default=0.25,
+                    help="fraction of blocks treated as sensitive")
     args = ap.parse_args()
+
+    if not 0.0 <= args.sparsity <= 1.0:
+        raise SystemExit(f"--sparsity must be in [0, 1], got {args.sparsity}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -111,7 +138,11 @@ def main():
     ds = SyntheticLM(DataConfig(cfg.vocab_size, args.prompt_len, args.batch))
     prompts = jnp.asarray(ds.batch(0))
 
-    sp = None
+    if args.sensitive_backend is not None and not args.calib_quick:
+        raise SystemExit("--sensitive-backend needs a calibrated plan: "
+                         "add --calib-quick")
+
+    sp, policy = None, SparsityPolicy.dense()
     if args.sparsity > 0:
         if args.calib_quick:
             from repro.core.allocation import EvoConfig
@@ -120,6 +151,9 @@ def main():
                 evo=EvoConfig(generations=2, offspring=4, eps=0.1),
                 delta=0.25, coord_passes=0, log=print)
             sp = plan.stacked_sp
+            policy = plan.to_policy(
+                backend=args.mode, sensitive_backend=args.sensitive_backend,
+                sensitive_frac=args.sensitive_frac)
         else:
             from repro.core.sp_schema import default_sp_stacked
             sp = default_sp_stacked(params, cfg,
@@ -129,14 +163,14 @@ def main():
                 # calibration fall back to the budgeted top-k backend
                 print("no calibration -> using topk_shared backend")
                 args.mode = "topk_shared"
-
-    mode = args.mode if sp is not None else "off"
-    k_max = 1.0 - args.sparsity if sp is not None else 1.0
+            # k_max_frac must be > 0; at 100% sparsity keep the top-k
+            # backends' one-channel floor (matching the legacy mode path)
+            policy = SparsityPolicy.uniform(
+                args.mode, k_max_frac=max(1.0 - args.sparsity, 1e-6))
 
     if args.legacy:
         t0 = time.time()
-        toks = generate(params, cfg, prompts, args.gen, sp,
-                        mode=mode, k_max_frac=k_max)
+        toks = generate(params, cfg, prompts, args.gen, sp, policy=policy)
         dt = time.time() - t0
         n = toks.size
         print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s on CPU)")
@@ -148,7 +182,7 @@ def main():
     ecfg = EngineConfig(
         max_slots=args.max_slots or args.batch,
         max_len=args.max_len or args.prompt_len + args.gen,
-        prefill_chunk=args.chunk, mode=mode, k_max_frac=k_max,
+        prefill_chunk=args.chunk, policy=policy,
         prefill_strategy=args.prefill_strategy)
     engine = Engine(params, cfg, ecfg, sp)
     t0 = time.time()

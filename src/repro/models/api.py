@@ -138,8 +138,10 @@ def token_loss(cfg: ModelConfig, logits, tokens, text_start: int = 0):
     return jnp.mean(lse - picked)
 
 
-def make_loss_fn(cfg: ModelConfig, remat: str = "none"):
-    def loss_fn(params, batch, sp=None):
+def make_loss_fn(cfg: ModelConfig, remat: str = "none", policy=None):
+    """``policy``: static SparsityPolicy baked into the returned callable
+    (override per call via the ``policy=`` kwarg)."""
+    def loss_fn(params, batch, sp=None, policy=policy):
         kwargs = {}
         text_start = 0
         if cfg.family == "vlm":
@@ -148,14 +150,15 @@ def make_loss_fn(cfg: ModelConfig, remat: str = "none"):
         elif cfg.family == "encdec":
             kwargs["frames"] = batch["frames"]
         logits, _ = M.forward(params, cfg, tokens=batch["tokens"],
-                              mode="train", sp=sp, remat=remat, **kwargs)
+                              mode="train", sp=sp, remat=remat,
+                              policy=policy, **kwargs)
         return token_loss(cfg, logits, batch["tokens"], text_start)
     return loss_fn
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
-                    remat: str = "none", accum_steps: int = 1):
-    loss_fn = make_loss_fn(cfg, remat)
+                    remat: str = "none", accum_steps: int = 1, policy=None):
+    loss_fn = make_loss_fn(cfg, remat, policy=policy)
 
     def train_step(params, opt_state, batch, sp=None):
         if accum_steps == 1:
@@ -179,24 +182,26 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig):
-    def prefill_step(params, batch, sp=None):
+def make_prefill_step(cfg: ModelConfig, policy=None):
+    def prefill_step(params, batch, sp=None, policy=policy):
         kwargs = {}
         if cfg.family == "vlm":
             kwargs["patch_embeds"] = batch["patch_embeds"]
         elif cfg.family == "encdec":
             kwargs["frames"] = batch["frames"]
         logits, caches = M.forward(params, cfg, tokens=batch["tokens"],
-                                   mode="prefill", sp=sp, **kwargs)
+                                   mode="prefill", sp=sp, policy=policy,
+                                   **kwargs)
         return logits, caches
     return prefill_step
 
 
-def make_decode_step(cfg: ModelConfig):
-    def decode_step(params, batch, sp=None):
+def make_decode_step(cfg: ModelConfig, policy=None, aligned: bool = False):
+    def decode_step(params, batch, sp=None, policy=policy):
         logits, caches = M.forward(
             params, cfg, tokens=batch["tokens"], mode="decode",
-            caches=batch["caches"], positions=batch["positions"], sp=sp)
+            caches=batch["caches"], positions=batch["positions"], sp=sp,
+            policy=policy, aligned=aligned)
         return logits, caches
     return decode_step
 
@@ -206,15 +211,14 @@ def make_slot_decode_step(cfg: ModelConfig):
     per-slot positions, with the active-slot mask weighting the shared
     top-k saliency aggregate (empty slots don't pollute the layer's
     channel set; with every slot active the floats match the plain
-    batched decode exactly)."""
-    from repro.core.sparse_linear import token_weights
-
+    batched decode exactly).  ``policy`` is the phase's static
+    SparsityPolicy; ``active`` rides in as an explicit token_weights
+    argument, not ambient state."""
     def slot_decode_step(params, tokens, positions, caches, sp=None,
-                         active=None):
-        with token_weights(active):
-            logits, caches = M.forward(
-                params, cfg, tokens=tokens, mode="decode", caches=caches,
-                positions=positions, sp=sp)
+                         active=None, policy=None):
+        logits, caches = M.forward(
+            params, cfg, tokens=tokens, mode="decode", caches=caches,
+            positions=positions, sp=sp, policy=policy, token_weights=active)
         return logits, caches
     return slot_decode_step
 
@@ -222,32 +226,32 @@ def make_slot_decode_step(cfg: ModelConfig):
 def make_chunk_prefill_step(cfg: ModelConfig):
     """Chunked prefill of one request directly into the slot pool: tokens
     (1,C) at chunk-start ``offset`` for pool slot ``slot``.  Pad tokens in
-    the final chunk carry zero weight in the shared saliency.  Returns
-    logits for every chunk position (the engine reads the last real one)
-    and the updated pool."""
-    from repro.core.sparse_linear import token_weights
-
+    the final chunk carry zero weight in the shared saliency (explicit
+    ``weights`` argument).  Returns logits for every chunk position (the
+    engine reads the last real one) and the updated pool."""
     def chunk_prefill_step(params, tokens, offset, slot, caches, sp=None,
-                           weights=None):
-        with token_weights(weights):
-            logits, caches = M.forward(
-                params, cfg, tokens=tokens, mode="chunk", caches=caches,
-                positions=offset, sp=sp, slot=slot)
+                           weights=None, policy=None):
+        logits, caches = M.forward(
+            params, cfg, tokens=tokens, mode="chunk", caches=caches,
+            positions=offset, sp=sp, slot=slot, policy=policy,
+            token_weights=weights)
         return logits, caches
     return chunk_prefill_step
 
 
 def step_for_shape(cfg: ModelConfig, shape: ShapeConfig,
                    opt_cfg: Optional[adamw.AdamWConfig] = None,
-                   remat: str = "none"):
-    """The jit-able callable a dry-run cell lowers, plus its input maker."""
+                   remat: str = "none", policy=None, aligned: bool = False):
+    """The jit-able callable a dry-run cell lowers, plus its input maker.
+    ``policy`` (static) is baked into the step; ``aligned`` selects the
+    single-DUS batched decode cache write."""
     if shape.mode == "train":
         opt_cfg = opt_cfg or adamw.AdamWConfig()
-        step = make_train_step(cfg, opt_cfg, remat=remat)
+        step = make_train_step(cfg, opt_cfg, remat=remat, policy=policy)
         return step, "train"
     if shape.mode == "prefill":
-        return make_prefill_step(cfg), "prefill"
-    return make_decode_step(cfg), "decode"
+        return make_prefill_step(cfg, policy=policy), "prefill"
+    return make_decode_step(cfg, policy=policy, aligned=aligned), "decode"
 
 
 def abstract_model(cfg: ModelConfig):

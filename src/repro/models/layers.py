@@ -16,14 +16,21 @@ import jax.numpy as jnp
 from repro.core import sparse_linear
 
 
-def dense(x, w, sp=None, row_parallel: bool = False):
+def dense(x, w, sp=None, row_parallel: bool = False, *, policy=None,
+          role=None, token_weights=sparse_linear._UNSET):
     """y = x @ W, optionally channel-sparsified per WiSparse.
 
     x: (..., n_in); w: (n_in, *out_dims); sp: per-layer sparsity params
     ({"g","alpha","tau","keep_frac"}) or None.  row_parallel statically
     marks o_proj/down_proj-style weights whose input dim is model-sharded.
+    policy: the static SparsityPolicy (depth-resolved by the scan driver);
+    role: this projection's sp-leaf path (e.g. "attn/wq") for per-role
+    backend overrides; token_weights: per-row saliency weights (explicit
+    None opts out — e.g. expert-dispatched layouts).
     """
-    return sparse_linear.project(x, w, sp, row_parallel=row_parallel)
+    return sparse_linear.project(x, w, sp, row_parallel=row_parallel,
+                                 policy=policy, role=role,
+                                 token_weights=token_weights)
 
 
 def rmsnorm(x, scale, eps: float = 1e-6):

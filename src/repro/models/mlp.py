@@ -23,23 +23,31 @@ def mlp_schema(cfg):
     }
 
 
-def mlp_apply(p, x, cfg, sp=None, mode: str = "train"):
+def mlp_apply(p, x, cfg, sp=None, mode: str = "train", policy=None,
+              token_weights=None):
     sp = sp or {}
+
+    def proj(name, xin, row_parallel=False):
+        return dense(xin, p[name], sp.get(name), row_parallel=row_parallel,
+                     policy=policy, role=f"mlp/{name}",
+                     token_weights=token_weights)
+
     if cfg.mlp_activation in ("swiglu", "geglu"):
         act = silu if cfg.mlp_activation == "swiglu" else gelu
-        from repro.core.sparse_linear import capture_active
-        if mode == "train" and not sp and not capture_active():
-            # fused gate/up: one dx all-reduce in backward instead of two
-            # (EXPERIMENTS.md SSPerf iteration B3); the concat reshards in
-            # serve modes, and WiSparse/calibration need separate matmuls.
+        if mode == "train" and not sp \
+                and (policy is None or policy.capture is None):
+            # fused gate/up: one dx all-reduce in backward instead of two;
+            # the concat reshards in serve modes, and WiSparse/calibration
+            # (per-projection masks / input capture) need separate matmuls.
             f = p["wi_gate"].shape[1]
-            gu = dense(x, jnp.concatenate([p["wi_gate"], p["wi_up"]], axis=1))
+            gu = dense(x, jnp.concatenate([p["wi_gate"], p["wi_up"]], axis=1),
+                       policy=policy, token_weights=None)
             g, u = gu[..., :f], gu[..., f:]
         else:
-            g = dense(x, p["wi_gate"], sp.get("wi_gate"))
-            u = dense(x, p["wi_up"], sp.get("wi_up"))
+            g = proj("wi_gate", x)
+            u = proj("wi_up", x)
         h = act(g) * u
     else:
-        h = gelu(dense(x, p["wi"], sp.get("wi")))
+        h = gelu(proj("wi", x))
     h = constrain(h, "batch", None, "mlp")
-    return dense(h, p["wo"], sp.get("wo"), row_parallel=True)
+    return proj("wo", h, row_parallel=True)

@@ -8,16 +8,23 @@ InternVL prepends precomputed patch embeddings (frontend stub).
 
 Modes: "train" (full seq, no cache), "prefill" (full seq, emits caches),
 "decode" (one token per sequence against caches).
+
+Execution state is explicit: ``forward`` takes a static
+``SparsityPolicy`` (``repro.sparsity``) selecting the projection backend
+per role / per block range, a traced ``token_weights`` row-weight vector
+for the serving engine's shared saliency, and a static ``aligned`` flag
+for the single-DUS batched decode cache write.  Nothing on the forward
+path reads ambient thread-local state; legacy context callers are
+resolved once at the forward boundary by
+``sparse_linear.resolve_execution`` (a one-release deprecation shim).
 """
 from __future__ import annotations
-
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import sparse_linear
 from repro.distributed.sharding import constrain
 from repro.models import attention as attn_lib
 from repro.models.layers import apply_rope, dense, rmsnorm, rope_angles, softcap
@@ -27,24 +34,6 @@ from repro.models.params import ParamSpec, stacked
 from repro.models.ssm import mamba_apply, mamba_schema
 
 ATTN_KINDS = ("attn", "local", "global", "attn_bidir")
-
-# static serving-mode flag: aligned batched decode (all sequences at the
-# same position) lets cache writes collapse to one dynamic_update_slice
-_ALIGNED = __import__("threading").local()
-
-
-def decode_is_aligned() -> bool:
-    return getattr(_ALIGNED, "on", False)
-
-
-@__import__("contextlib").contextmanager
-def aligned_decode(on: bool = True):
-    prev = getattr(_ALIGNED, "on", False)
-    _ALIGNED.on = on
-    try:
-        yield
-    finally:
-        _ALIGNED.on = prev
 
 
 # ---------------------------------------------------------------------------
@@ -117,7 +106,8 @@ def model_schema(cfg: ModelConfig):
 
 def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
                positions=None, mode: str = "train", kv_override=None,
-               slot=None):
+               slot=None, policy=None, token_weights=None,
+               aligned: bool = False, role_base: str = "attn"):
     """Self- or cross-attention.  kv_override: (enc_out) for cross-attn.
 
     mode "chunk" is the serving engine's chunked-prefill path: x is one
@@ -131,15 +121,22 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
     B, S, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     win = cfg.sliding_window if kind == "local" else 0
+    tw = token_weights
 
-    from repro.core.sparse_linear import capture_active as _cap
+    def proj(name, xin, row_parallel=False):
+        return dense(xin, p[name], sp.get(name), row_parallel=row_parallel,
+                     policy=policy, role=f"{role_base}/{name}",
+                     token_weights=tw)
+
     # fused qkv only pays in training (merges backward dx psums); in serve
     # modes the concat of differently-sharded weight dims costs an
-    # all-to-all reshard (EXPERIMENTS.md SSPerf B3 follow-up)
-    fuse = (mode == "train" and not sp and not _cap()
-            and kv_override is None)
+    # all-to-all reshard.  WiSparse needs per-projection masks (and
+    # calibration needs per-projection input capture), so the sparse and
+    # capture paths keep separate matmuls.
+    fuse = (mode == "train" and not sp and kv_override is None
+            and (policy is None or policy.capture is None))
     if not fuse:
-        q = dense(x, p["wq"], sp.get("wq")).reshape(B, S, H, hd)
+        q = proj("wq", x).reshape(B, S, H, hd)
     if kv_override is not None:                      # cross-attention
         if mode == "decode":                         # static pre-transposed KV
             kc, vc = cache["k"], cache["v"]
@@ -149,27 +146,29 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
             out = out[:, None]
         else:
             F = kv_override.shape[1]
-            k = dense(kv_override, p["wk"], sp.get("wk")).reshape(B, F, KV, hd)
-            v = dense(kv_override, p["wv"], sp.get("wv")).reshape(B, F, KV, hd)
+            # encoder rows are not the step's tokens: opt out of weighting
+            k = dense(kv_override, p["wk"], sp.get("wk"), policy=policy,
+                      role=f"{role_base}/wk",
+                      token_weights=None).reshape(B, F, KV, hd)
+            v = dense(kv_override, p["wv"], sp.get("wv"), policy=policy,
+                      role=f"{role_base}/wv",
+                      token_weights=None).reshape(B, F, KV, hd)
             q = constrain(q, "batch", None, "heads", None)
             out = attn_lib.flash_attention(q, k, v, causal=False)
-        y = dense(out.reshape(B, S, H * hd), p["wo"], sp.get("wo"),
-              row_parallel=True)
+        y = proj("wo", out.reshape(B, S, H * hd), row_parallel=True)
         return y, None
 
     if fuse:
         # fused qkv: one matmul -> backward emits ONE dx all-reduce instead
-        # of three (EXPERIMENTS.md SSPerf iteration B3).  WiSparse needs
-        # per-projection masks (and calibration needs per-projection input
-        # capture), so those paths keep separate matmuls.
+        # of three.
         w_cat = jnp.concatenate([p["wq"], p["wk"], p["wv"]], axis=1)
-        qkv = dense(x, w_cat)
+        qkv = dense(x, w_cat, policy=policy, token_weights=None)
         q = qkv[..., : H * hd].reshape(B, S, H, hd)
         k = qkv[..., H * hd: (H + KV) * hd].reshape(B, S, KV, hd)
         v = qkv[..., (H + KV) * hd:].reshape(B, S, KV, hd)
     else:
-        k = dense(x, p["wk"], sp.get("wk")).reshape(B, S, KV, hd)
-        v = dense(x, p["wv"], sp.get("wv")).reshape(B, S, KV, hd)
+        k = proj("wk", x).reshape(B, S, KV, hd)
+        v = proj("wv", x).reshape(B, S, KV, hd)
 
     if cfg.rope_theta:
         if mode == "decode":
@@ -198,8 +197,7 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
         vs = jax.lax.dynamic_slice(vc, (slot, 0, 0, 0), (B,) + vc.shape[1:])
         out = attn_lib.chunk_attention(q, ks, vs, off,
                                        attn_softcap=cfg.attn_softcap)
-        y = dense(out.reshape(B, S, H * hd), p["wo"], sp.get("wo"),
-                  row_parallel=True)
+        y = proj("wo", out.reshape(B, S, H * hd), row_parallel=True)
         return y, {"k": kc, "v": vc}
 
     if mode == "decode":
@@ -213,7 +211,7 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
         out = out[:, None]
         nk, nv = attn_lib.cache_write_kv(
             kc, vc, k_new, v_new, positions,
-            rolling=rolling, aligned=decode_is_aligned())
+            rolling=rolling, aligned=aligned)
         new_cache = {"k": nk, "v": nv}
     else:
         causal = kind != "attn_bidir"
@@ -236,18 +234,24 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
                                "batch", "kv_heads", None, "kv_seq"),
                 "v": constrain(cv.transpose(0, 2, 1, 3),
                                "batch", "kv_heads", "kv_seq", None)}
-    y = dense(out.reshape(B, S, H * hd), p["wo"], sp.get("wo"),
-              row_parallel=True)
+    y = proj("wo", out.reshape(B, S, H * hd), row_parallel=True)
     return y, new_cache
 
 
 def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
                 positions=None, mode: str = "train", enc_out=None,
-                slot=None):
+                slot=None, policy=None, token_weights=None,
+                aligned: bool = False):
     """cache: per-layer dict (train/prefill) or, in decode mode,
     {"stack": <layer-stacked group cache entry>, "idx": layer-in-stack} —
-    decode caches ride the scan *carry* and are updated in place with
-    update-only writes (EXPERIMENTS.md SSPerf iteration A4)."""
+    decode caches ride through xs/ys with update-only in-place writes.
+
+    ``policy`` is the depth-resolved SparsityPolicy for this block (per-
+    block ranges already folded by ``run_groups``); None falls back to the
+    deprecated thread-local contexts via ``resolve_execution``."""
+    if policy is None:
+        policy, token_weights = sparse_linear.resolve_execution(
+            policy, token_weights)
     mixer, ffn = kind
     sp = sp or {}
     cache = cache or {}
@@ -256,7 +260,9 @@ def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
     if mixer in ATTN_KINDS:
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
         h, nc = attn_apply(p["attn"], h, cfg, mixer, sp.get("attn"),
-                           cache.get("self"), positions, mode, slot=slot)
+                           cache.get("self"), positions, mode, slot=slot,
+                           policy=policy, token_weights=token_weights,
+                           aligned=aligned)
         if nc is not None:
             new_cache["self"] = nc
         x = x + h
@@ -267,7 +273,8 @@ def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
                 "engine's whole-prompt prefill strategy")
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
         h, nc = mamba_apply(p["mamba"], h, cfg, sp.get("mamba"),
-                            cache.get("ssm"), mode)
+                            cache.get("ssm"), mode, policy=policy,
+                            token_weights=token_weights)
         if nc is not None:
             new_cache["ssm"] = nc
         x = x + h
@@ -276,23 +283,28 @@ def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
         h, nc = attn_apply(p["cross"], h, cfg, "attn_bidir", sp.get("cross"),
                            cache.get("cross") if decode else None,
                            positions, mode,
-                           kv_override=enc_out if enc_out is not None else x)
+                           kv_override=enc_out if enc_out is not None else x,
+                           policy=policy, token_weights=token_weights,
+                           aligned=aligned, role_base="cross")
         if mode == "prefill" and enc_out is not None:
             # stash static cross KV for decode (decode layouts)
             F = enc_out.shape[1]
             B = x.shape[0]
             KV, hd = cfg.num_kv_heads, cfg.head_dim
-            ck = dense(enc_out, p["cross"]["wk"]).reshape(B, F, KV, hd)
-            cv = dense(enc_out, p["cross"]["wv"]).reshape(B, F, KV, hd)
+            ck = dense(enc_out, p["cross"]["wk"], policy=policy,
+                       token_weights=None).reshape(B, F, KV, hd)
+            cv = dense(enc_out, p["cross"]["wv"], policy=policy,
+                       token_weights=None).reshape(B, F, KV, hd)
             new_cache["cross"] = {"k": ck.transpose(0, 2, 3, 1),
                                   "v": cv.transpose(0, 2, 1, 3)}
         x = x + h
     if ffn == "dense":
         h = rmsnorm(x, p["ln2"], cfg.norm_eps)
-        x = x + mlp_apply(p["mlp"], h, cfg, sp.get("mlp"), mode)
+        x = x + mlp_apply(p["mlp"], h, cfg, sp.get("mlp"), mode,
+                          policy=policy, token_weights=token_weights)
     elif ffn == "moe":
         h = rmsnorm(x, p["ln2"], cfg.norm_eps)
-        x = x + moe_apply(p["moe"], h, cfg, sp.get("moe"))
+        x = x + moe_apply(p["moe"], h, cfg, sp.get("moe"), policy=policy)
     x = constrain(x, "batch", None, "embed_act")
     return x, (new_cache or None)
 
@@ -306,41 +318,90 @@ def _remat_wrap(fn, policy: str):
     return jax.checkpoint(fn)   # "full": save nothing
 
 
+def _rep_backends(policy, depth0: int, plen: int, reps: int):
+    """Per-rep tuple of depth-resolved backends for one stacked group, or
+    None when the policy has no per-block map (the uniform fast path)."""
+    if policy is None or not policy.block_backends:
+        return None
+    return [tuple(policy.backend_at(depth=depth0 + r * plen + j)
+                  for j in range(plen)) for r in range(reps)]
+
+
 def run_groups(groups, x, cfg: ModelConfig, patterns, *, mode="train",
                caches=None, positions=None, sp=None, enc_out=None,
-               remat: str = "none", slot=None):
+               remat: str = "none", slot=None, policy=None,
+               token_weights=None, aligned: bool = False, depth0: int = 0):
     """Scan each stacked layer group.  Returns (x, new_caches).
 
-    Decode mode carries the layer-stacked caches through the scan *carry*
-    (update-only in-place writes, donation-friendly); train/prefill slice
-    per-layer state via xs and emit fresh caches via ys."""
+    Mixed per-block policies (``policy.block_backends``) split a group's
+    rep scan into contiguous segments of equal backend signature — each
+    segment is its own ``lax.scan`` over a slice of the stacked params /
+    caches / sp, so the backend stays a static property of the trace while
+    compile time grows only with the number of backend *switches*, not
+    with depth.  Uniform policies take the single-scan fast path (HLO
+    identical to the pre-policy code).
+    """
     new_caches = []
+    depth = depth0
     for gi, (gp, (pattern, reps)) in enumerate(zip(groups, patterns)):
         gc = caches[gi] if caches is not None else None
         gsp = sp[gi] if sp is not None else None
+        plen = len(pattern)
 
-        # NOTE (EXPERIMENTS.md SSPerf A4/A5): carrying decode caches through
-        # the scan carry, or unrolling the layer loop over a stacked donated
-        # buffer, both force XLA to defensively copy the full stack per
-        # layer (measured 10-600x memory-term regressions) — decode caches
-        # therefore flow through xs/ys like prefill, with update-only
-        # writes inside each per-layer slice.
+        # NOTE (perf, measured in the decode dry-runs): carrying decode
+        # caches through the scan carry, or unrolling the layer loop over
+        # a stacked donated buffer, both force XLA to defensively copy the
+        # full stack per layer (10-600x memory-term regressions) — decode
+        # caches therefore flow through xs/ys like prefill, with
+        # update-only writes inside each per-layer slice.
 
-        def body(xc, xs, pattern=pattern):
-            p_i, c_i, sp_i = xs
-            ncs = []
-            for j, kind in enumerate(pattern):
-                cj = c_i[j] if c_i is not None else None
-                spj = sp_i[f"l{j}"] if sp_i is not None else None
-                xc, nc = layer_apply(p_i[f"l{j}"], xc, cfg, kind, spj, cj,
-                                     positions, mode, enc_out, slot=slot)
-                ncs.append(nc)
-            ys = tuple(ncs) if any(n is not None for n in ncs) else None
-            return xc, ys
+        rb = _rep_backends(policy, depth, plen, reps)
+        if rb is None:
+            segs = [(0, reps, (policy,) * plen)]
+        else:
+            segs, s = [], 0
+            for r in range(1, reps + 1):
+                if r == reps or rb[r] != rb[s]:
+                    jpols = tuple(policy.resolve_depth(depth + s * plen + j)
+                                  for j in range(plen))
+                    segs.append((s, r, jpols))
+                    s = r
 
-        wrapped = _remat_wrap(body, remat if mode == "train" else "none")
-        x, ys = jax.lax.scan(wrapped, x, (gp, gc, gsp))
-        new_caches.append(ys)
+        seg_ys = []
+        for (r0, r1, jpols) in segs:
+            if (r0, r1) == (0, reps):
+                xs = (gp, gc, gsp)
+            else:
+                xs = tuple(jax.tree_util.tree_map(lambda a: a[r0:r1], t)
+                           for t in (gp, gc, gsp))
+
+            def body(xc, xs_in, pattern=pattern, jpols=jpols):
+                p_i, c_i, sp_i = xs_in
+                ncs = []
+                for j, kind in enumerate(pattern):
+                    cj = c_i[j] if c_i is not None else None
+                    spj = sp_i[f"l{j}"] if sp_i is not None else None
+                    xc, nc = layer_apply(p_i[f"l{j}"], xc, cfg, kind, spj,
+                                         cj, positions, mode, enc_out,
+                                         slot=slot, policy=jpols[j],
+                                         token_weights=token_weights,
+                                         aligned=aligned)
+                    ncs.append(nc)
+                ys = tuple(ncs) if any(n is not None for n in ncs) else None
+                return xc, ys
+
+            wrapped = _remat_wrap(body, remat if mode == "train" else "none")
+            x, ys = jax.lax.scan(wrapped, x, xs)
+            seg_ys.append(ys)
+
+        if len(seg_ys) == 1:
+            new_caches.append(seg_ys[0])
+        elif all(y is None for y in seg_ys):
+            new_caches.append(None)
+        else:
+            new_caches.append(jax.tree_util.tree_map(
+                lambda *ys: jnp.concatenate(ys, axis=0), *seg_ys))
+        depth += plen * reps
     return x, new_caches
 
 
@@ -359,21 +420,27 @@ def lm_logits(params, x, cfg: ModelConfig):
     return constrain(logits, "batch", None, "vocab")
 
 
-def encode(params, frames, cfg: ModelConfig, sp=None, remat="none"):
-    """Whisper encoder over precomputed conv-frontend frame embeddings."""
+def encode(params, frames, cfg: ModelConfig, sp=None, remat="none",
+           policy=None):
+    """Whisper encoder over precomputed conv-frontend frame embeddings.
+    Per-block backend ranges index *decoder* depth, so the encoder runs
+    the policy's default backend."""
     from repro.models.layers import sinusoidal_positions
+    if policy is not None:
+        policy = policy.resolve_depth(None)
     enc = params["encoder"]
     x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model
                                       ).astype(frames.dtype)[None]
     patterns = [((("attn_bidir", "dense"),), cfg.encoder_layers)]
     x, _ = run_groups(enc["groups"], x, cfg, patterns, mode="train",
-                      sp=sp, remat=remat)
+                      sp=sp, remat=remat, policy=policy, token_weights=None)
     return rmsnorm(x, enc["final_norm"], cfg.norm_eps)
 
 
 def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
             patch_embeds=None, mode="train", caches=None, positions=None,
-            sp=None, sp_enc=None, remat="none", slot=None):
+            sp=None, sp_enc=None, remat="none", slot=None, policy=None,
+            token_weights=None, aligned: bool = False):
     """Unified forward.
 
     train/prefill: tokens (B,S[-P]) [+ frames (B,F,D) | patch_embeds (B,P,D)]
@@ -381,21 +448,32 @@ def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
     chunk:         tokens (B,C) one request's prefill chunk, positions (B,)
                    chunk-start offset, slot () pool slot, caches = the full
                    slot pool (serving engine's chunked prefill).
+
+    policy: static SparsityPolicy (None -> the deprecated thread-local
+    contexts, resolved once here).  token_weights: per-row weights for the
+    shared top-k saliency (serving active-slot / real-token masks).
+    aligned: static flag — all decode rows share one position, so cache
+    writes collapse to a single dynamic_update_slice.
+
     Returns (logits, new_caches):
       train  -> logits (B,S,V), caches None
       prefill-> logits (B,V) last position, caches filled
       decode -> logits (B,V), caches updated
       chunk  -> logits (B,C,V) all chunk positions, pool caches updated
     """
+    policy, token_weights = sparse_linear.resolve_execution(
+        policy, token_weights)
     enc_out = None
     if cfg.family == "encdec" and frames is not None:
-        enc_out = encode(params, frames, cfg, sp=sp_enc, remat=remat)
+        enc_out = encode(params, frames, cfg, sp=sp_enc, remat=remat,
+                         policy=policy)
 
     if mode == "chunk":
         x = embed_tokens(params, tokens, cfg)
         x, new_caches = run_groups(
             params["groups"], x, cfg, cfg.layer_groups(), mode="chunk",
-            caches=caches, positions=positions, sp=sp, slot=slot)
+            caches=caches, positions=positions, sp=sp, slot=slot,
+            policy=policy, token_weights=token_weights)
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         return lm_logits(params, x, cfg), new_caches
 
@@ -406,7 +484,8 @@ def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
             x = x + sinusoidal_at(positions, cfg.d_model)[:, None].astype(x.dtype)
         x, new_caches = run_groups(
             params["groups"], x, cfg, cfg.layer_groups(), mode="decode",
-            caches=caches, positions=positions, sp=sp, enc_out=enc_out)
+            caches=caches, positions=positions, sp=sp, enc_out=enc_out,
+            policy=policy, token_weights=token_weights, aligned=aligned)
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         return lm_logits(params, x, cfg)[:, 0], new_caches
 
@@ -420,7 +499,8 @@ def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
     x = constrain(x, "batch", None, "embed_act")
     x, new_caches = run_groups(
         params["groups"], x, cfg, cfg.layer_groups(), mode=mode,
-        caches=None, positions=None, sp=sp, enc_out=enc_out, remat=remat)
+        caches=None, positions=None, sp=sp, enc_out=enc_out, remat=remat,
+        policy=policy, token_weights=token_weights)
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     if mode == "prefill":
         return lm_logits(params, x[:, -1:], cfg)[:, 0], new_caches

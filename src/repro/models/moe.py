@@ -1,6 +1,7 @@
 """Mixture-of-Experts FFN with capacity-bounded gather dispatch.
 
-Shardable formulation (DESIGN.md SS2): tokens stay batch-sharded over
+Shardable formulation (see repro.distributed.sharding rules tables):
+tokens stay batch-sharded over
 ``data`` while the expert dim shards over ``model``; because activations
 are replicated across ``model``, dispatch gathers are local and the combine
 scatter reduces over ``model`` exactly like a row-parallel matmul — no
@@ -24,7 +25,7 @@ from repro.distributed.sharding import constrain
 def moe_schema(cfg):
     # E padded to the TP width: pad experts carry -inf router logits and
     # are never routed to, so the expert dim always shards over `model`
-    # (EXPERIMENTS.md SSPerf iteration C3)
+    # (see ModelConfig.num_experts_padded)
     d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.num_experts_padded
     return {
         "router": ParamSpec((d, e), ("embed", None), scale=0.02),
@@ -40,8 +41,13 @@ def _capacity(tokens_per_group: int, cfg) -> int:
     return max(c, 1)
 
 
-def moe_apply(p, x, cfg, sp=None):
-    """x: (B, S, D) -> (B, S, D).  Groups = batch dim."""
+def moe_apply(p, x, cfg, sp=None, policy=None):
+    """x: (B, S, D) -> (B, S, D).  Groups = batch dim.
+
+    ``policy``: the block's SparsityPolicy.  Expert projections always opt
+    out of the serving engine's per-token saliency weights (dispatch
+    permutes and capacity-bounds the rows), so no token_weights parameter
+    exists here — the opt-out is explicit at each dense() call."""
     sp = sp or {}
     B, S, D = x.shape
     E, K = cfg.num_experts_padded, cfg.num_experts_per_tok
@@ -86,22 +92,26 @@ def moe_apply(p, x, cfg, sp=None):
         s = sp.get(name)
         if s is None:
             def apply_dense(h):
-                from repro.core import sparse_linear
-                sparse_linear.record(w, h)                 # calibration hook
+                if policy is not None:
+                    if policy.capture is not None:
+                        policy.capture.record(w, h)        # calibration hook
+                else:                # deprecated shim: legacy context only
+                    from repro.core import sparse_linear
+                    sparse_linear.record(w, h)
                 return jnp.einsum("becd,edf->becf", h, w)
             return apply_dense
         # per-expert WiSparse: vmap the sparse projection over experts.
         # The serving engine's per-token saliency weights cannot ride
         # through expert dispatch (rows here are capacity-bounded
         # permutations of tokens, and can even coincidentally match the
-        # slot count) — clear them explicitly; dropped/pad rows are
-        # zeroed by dispatch and contribute nothing to the saliency sum.
+        # slot count) — opt out with an explicit token_weights=None;
+        # dropped/pad rows are zeroed by dispatch and contribute nothing
+        # to the saliency sum.
         def apply(h):                                      # h: (B,E,C,din)
-            from repro.core.sparse_linear import token_weights
             hm = jnp.moveaxis(h, 1, 0)                     # (E,B,C,din)
-            with token_weights(None):
-                out = jax.vmap(lambda he, we, ge: dense(
-                    he, we, {**s, "g": ge}))(hm, w, s["g"])
+            out = jax.vmap(lambda he, we, ge: dense(
+                he, we, {**s, "g": ge}, policy=policy, role=f"moe/{name}",
+                token_weights=None))(hm, w, s["g"])
             return jnp.moveaxis(out, 0, 1)
         return apply
 

@@ -6,7 +6,8 @@ so activation memory stays O(B * chunk^2 * H) regardless of sequence length.
 Decode is the O(1) recurrent state update.  ngroups is fixed at 1.
 
 WiSparse applicability: ``in_*``/``out_proj`` are the channel-sparsifiable
-linears; the SSD scan itself is not (DESIGN.md SS5).
+linears (see ``repro.core.unstacked.SPARSIFIABLE``); the SSD scan itself is
+a recurrence over state, not a channel-sparse matmul, so it stays dense.
 """
 from __future__ import annotations
 
@@ -57,14 +58,15 @@ def _conv_step(state, u_new, w):
     return out, hist[:, 1:]
 
 
-def _project_inputs(p, x, sp):
+def _project_inputs(p, x, sp, policy=None, token_weights=None):
     sp = sp or {}
-    z = dense(x, p["in_z"], sp.get("in_z"))
-    xs = dense(x, p["in_x"], sp.get("in_x"))
-    Bm = dense(x, p["in_B"], sp.get("in_B"))
-    Cm = dense(x, p["in_C"], sp.get("in_C"))
-    dt = dense(x, p["in_dt"], sp.get("in_dt"))
-    return z, xs, Bm, Cm, dt
+
+    def proj(name):
+        return dense(x, p[name], sp.get(name), policy=policy,
+                     role=f"mamba/{name}", token_weights=token_weights)
+
+    return (proj("in_z"), proj("in_x"), proj("in_B"), proj("in_C"),
+            proj("in_dt"))
 
 
 def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
@@ -116,7 +118,8 @@ def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
     return y, final
 
 
-def mamba_apply(p, x, cfg, sp=None, cache=None, mode: str = "train"):
+def mamba_apply(p, x, cfg, sp=None, cache=None, mode: str = "train",
+                policy=None, token_weights=None):
     """x: (B,S,D) for train/prefill, (B,1,D) for decode.
 
     Returns (out, new_cache).  Cache: {"conv_x","conv_B","conv_C","ssm"}.
@@ -127,7 +130,7 @@ def mamba_apply(p, x, cfg, sp=None, cache=None, mode: str = "train"):
 
     if mode == "decode":
         xt = x[:, 0]
-        z, xs, Bm, Cm, dt = _project_inputs(p, xt, sp)
+        z, xs, Bm, Cm, dt = _project_inputs(p, xt, sp, policy, token_weights)
         xs, conv_x = _conv_step(cache["conv_x"], xs, p["conv_x"])
         Bm, conv_B = _conv_step(cache["conv_B"], Bm, p["conv_B"])
         Cm, conv_C = _conv_step(cache["conv_C"], Cm, p["conv_C"])
@@ -143,12 +146,13 @@ def mamba_apply(p, x, cfg, sp=None, cache=None, mode: str = "train"):
         y = y.reshape(xt.shape[0], H * P).astype(x.dtype)
         y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
         out = dense(y, p["out_proj"], (sp or {}).get("out_proj"),
-                row_parallel=True)
+                    row_parallel=True, policy=policy, role="mamba/out_proj",
+                    token_weights=token_weights)
         return out[:, None], {"conv_x": conv_x, "conv_B": conv_B,
                               "conv_C": conv_C, "ssm": S_new}
 
     B, S, D = x.shape
-    z, xs, Bm, Cm, dt = _project_inputs(p, x, sp)
+    z, xs, Bm, Cm, dt = _project_inputs(p, x, sp, policy, token_weights)
     raw = (xs, Bm, Cm)          # pre-conv inputs, tails feed the conv cache
     xs = silu(_causal_conv(xs, p["conv_x"]))
     Bm = silu(_causal_conv(Bm, p["conv_B"]))
@@ -161,7 +165,8 @@ def mamba_apply(p, x, cfg, sp=None, cache=None, mode: str = "train"):
     y = y.reshape(B, S, H * P).astype(x.dtype)
     y = rmsnorm(y * silu(z), p["norm"], cfg.norm_eps)
     out = dense(y, p["out_proj"], (sp or {}).get("out_proj"),
-                row_parallel=True)
+                row_parallel=True, policy=policy, role="mamba/out_proj",
+                token_weights=token_weights)
 
     new_cache = None
     if mode == "prefill":

@@ -3,15 +3,18 @@
 The engine keeps a fixed slot pool of KV caches (one decode executable for
 the engine's whole lifetime), admits requests FIFO, interleaves chunked
 prefill with batched decode, and drives the paper's §5.1 recipe (dense
-first half of prefill, sparse decode) by switching ``sparsity_mode`` per
-phase."""
+first half of prefill, sparse decode) by deriving a static
+``SparsityPolicy`` per phase (``policy.for_phase(...)``) — an explicit jit
+argument, so concurrent engines never share execution state."""
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import EngineStats, percentile
 from repro.serving.request import FinishReason, Request, RequestState, Status
 from repro.serving.scheduler import Scheduler
+from repro.sparsity import SparsityPolicy
 
 __all__ = [
     "Engine", "EngineConfig", "SlotKVPool", "EngineStats", "percentile",
     "Request", "RequestState", "Status", "FinishReason", "Scheduler",
+    "SparsityPolicy",
 ]

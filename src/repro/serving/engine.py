@@ -4,10 +4,12 @@ One engine instance owns: the slot KV pool (fixed shapes, so the batched
 decode step compiles once and never retraces), the FIFO scheduler, and the
 jitted phase steps.  Sparsity is phase-aware per the paper's §5.1 recipe:
 prefill chunks in the first ``prefill_dense_frac`` of the prompt run dense
-and later chunks plus all decode steps run under the configured sparse
-backend.  The sparsity mode/k_max are *static* jit arguments, so each
-(phase, mode) pair owns its executable and the thread-local
-``sparsity_mode`` context can never leak a stale trace.
+and later chunks plus all decode steps run under the configured
+:class:`SparsityPolicy`.  The policy is a hashable *static* jit argument —
+an explicit value, not ambient state — so each (phase, policy) pair owns
+its executable, and two engines with different policies can run
+interleaved (or on separate threads) without ever sharing or leaking a
+trace.
 
 Prefill strategies:
   * "chunked": fixed-size chunks written straight into the pool slot via
@@ -28,27 +30,76 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.sparse_linear import sparsity_mode
 from repro.models import api
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import EngineStats
 from repro.serving.request import (FinishReason, Request, RequestState,
                                    Status)
 from repro.serving.scheduler import Scheduler
+from repro.sparsity import SparsityPolicy
 
 _CHUNKABLE_MIXERS = ("attn", "global")
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """``policy`` is the engine's execution policy (validated eagerly at
+    construction — a typo'd backend fails here with the list of valid
+    backends, not deep inside a jit trace of ``project()``).
+
+    ``mode``/``k_max_frac`` are the deprecated string-mode constructor
+    args, kept one release: they build a uniform policy.  Passing both
+    ``policy`` and ``mode`` is an error."""
     max_slots: int = 8
     max_len: int = 512
     prefill_chunk: int = 32
-    mode: str = "off"                # off|mask|topk_shared|topk_block|pallas
-    k_max_frac: float = 1.0          # static kept-fraction bound (top-k/pallas)
+    policy: Optional[SparsityPolicy] = None
+    mode: Optional[str] = None       # deprecated: uniform backend string
+    k_max_frac: Optional[float] = None  # deprecated: goes with ``mode``
     prefill_dense_frac: float = 0.5  # §5.1: first fraction of prompt dense
     prefill_strategy: str = "auto"   # auto|chunked|whole
     eos_id: Optional[int] = None     # default per-request EOS
+
+    def __post_init__(self):
+        pol = self.policy
+        if pol is not None:
+            if not isinstance(pol, SparsityPolicy):
+                raise TypeError(
+                    f"policy must be a SparsityPolicy, got {type(pol)!r}")
+            # mode/k_max_frac matching the policy are tolerated so
+            # dataclasses.replace() on a constructed (back-filled) config
+            # keeps working; genuinely conflicting values are an error,
+            # never a silent discard
+            if (self.mode is not None and self.mode != pol.backend) or \
+                    (self.k_max_frac is not None
+                     and self.k_max_frac != pol.k_max_frac):
+                raise ValueError(
+                    "conflicting policy= and deprecated mode=/k_max_frac= "
+                    "(to change the policy of an existing EngineConfig, "
+                    "also pass mode=None, k_max_frac=None)")
+        else:
+            if self.mode is not None or self.k_max_frac is not None:
+                import warnings
+                warnings.warn(
+                    "EngineConfig(mode=..., k_max_frac=...) is deprecated; "
+                    "pass policy=SparsityPolicy.uniform(...) instead",
+                    DeprecationWarning, stacklevel=3)
+            # deprecated shim: uniform policy from the mode string —
+            # SparsityPolicy validates the backend eagerly here
+            pol = SparsityPolicy.uniform(
+                self.mode or "off",
+                k_max_frac=1.0 if self.k_max_frac is None else self.k_max_frac)
+        object.__setattr__(self, "policy", pol)
+        # keep the legacy field readable for introspection/logs
+        object.__setattr__(self, "mode", pol.backend)
+        object.__setattr__(self, "k_max_frac", pol.k_max_frac)
+        if not 0 <= self.prefill_dense_frac <= 1:
+            raise ValueError(
+                f"prefill_dense_frac must be in [0, 1], "
+                f"got {self.prefill_dense_frac}")
+        if self.prefill_strategy not in ("auto", "chunked", "whole"):
+            raise ValueError(
+                f"unknown prefill_strategy {self.prefill_strategy!r}")
 
 
 class Engine:
@@ -61,6 +112,12 @@ class Engine:
         self.cfg = cfg
         self.ecfg = ecfg
         self.sp = sp
+        # per-phase static policies, derived once so equal phases reuse
+        # equal (hash-equal) jit cache keys
+        self.policy = ecfg.policy
+        self._pol_decode = self.policy.for_phase("decode")
+        self._pol_prefill_sparse = self.policy.for_phase("prefill_sparse")
+        self._pol_prefill_dense = self.policy.for_phase("prefill_dense")
         # the pool holds one chunk of slack past max_len: pad tokens of a
         # request's final prefill chunk land in [max_len, pool_len-1), and
         # the last position is scratch — inactive slots in a decode step
@@ -92,31 +149,28 @@ class Engine:
         prefill_step = api.make_prefill_step(cfg)
 
         def _decode(params, tokens, positions, caches, sp, active, *,
-                    mode, k_max_frac):
+                    policy):
             self._decode_traces += 1        # runs only while tracing
-            with sparsity_mode(mode, k_max_frac=k_max_frac):
-                return slot_decode(params, tokens, positions, caches, sp,
-                                   active)
+            return slot_decode(params, tokens, positions, caches, sp,
+                               active, policy=policy)
 
         def _chunk(params, tokens, offset, slot, caches, sp, weights, *,
-                   mode, k_max_frac):
+                   policy):
             self._chunk_traces += 1
-            with sparsity_mode(mode, k_max_frac=k_max_frac):
-                return chunk_step(params, tokens, offset, slot, caches, sp,
-                                  weights)
+            return chunk_step(params, tokens, offset, slot, caches, sp,
+                              weights, policy=policy)
 
-        def _prefill(params, tokens, sp, *, mode, k_max_frac):
-            with sparsity_mode(mode, k_max_frac=k_max_frac):
-                return prefill_step(params, {"tokens": tokens}, sp)
+        def _prefill(params, tokens, sp, *, policy):
+            return prefill_step(params, {"tokens": tokens}, sp,
+                                policy=policy)
 
         # pool caches are donated back into themselves each step (no copy
         # on TPU; XLA falls back to copying where donation is unsupported)
-        self._dstep = jax.jit(_decode, static_argnames=("mode", "k_max_frac"),
+        self._dstep = jax.jit(_decode, static_argnames=("policy",),
                               donate_argnums=(3,))
-        self._cstep = jax.jit(_chunk, static_argnames=("mode", "k_max_frac"),
+        self._cstep = jax.jit(_chunk, static_argnames=("policy",),
                               donate_argnums=(4,))
-        self._pstep = jax.jit(_prefill,
-                              static_argnames=("mode", "k_max_frac"))
+        self._pstep = jax.jit(_prefill, static_argnames=("policy",))
 
     # ------------------------------------------------------------------
     # submission
@@ -165,12 +219,11 @@ class Engine:
     # ------------------------------------------------------------------
     # phases
     # ------------------------------------------------------------------
-    def _phase_mode(self, offset: int, prompt_len: int) -> str:
+    def _phase_policy(self, offset: int, prompt_len: int) -> SparsityPolicy:
         """§5.1: chunks starting before the dense boundary run dense."""
-        if self.ecfg.mode == "off":
-            return "off"
         dense_end = int(np.ceil(prompt_len * self.ecfg.prefill_dense_frac))
-        return "off" if offset < dense_end else self.ecfg.mode
+        return self._pol_prefill_dense if offset < dense_end \
+            else self._pol_prefill_sparse
 
     def _prefill_chunk(self, rs: RequestState) -> None:
         C = self.ecfg.prefill_chunk
@@ -181,12 +234,12 @@ class Engine:
         chunk[0, :real] = req.prompt[off:off + real]
         weights = np.zeros((C,), np.float32)
         weights[:real] = 1.0
-        mode = self._phase_mode(off, req.prompt_len)
+        policy = self._phase_policy(off, req.prompt_len)
         t0 = self._now()
         logits, self.pool.caches = self._cstep(
             self.params, jnp.asarray(chunk), jnp.full((1,), off, jnp.int32),
             jnp.int32(rs.slot), self.pool.caches, self.sp,
-            jnp.asarray(weights), mode=mode, k_max_frac=self.ecfg.k_max_frac)
+            jnp.asarray(weights), policy=policy)
         logits.block_until_ready()
         self.stats.prefill_time += self._now() - t0
         self.stats.prefill_chunks += 1
@@ -203,11 +256,11 @@ class Engine:
         # whole-prompt prefill can't split tokens by phase: any dense
         # fraction > 0 makes the whole prompt dense (the conservative
         # accuracy choice, matching the legacy serve path)
-        mode = self.ecfg.mode if self.ecfg.prefill_dense_frac <= 0.0 else "off"
+        policy = self._pol_prefill_sparse \
+            if self.ecfg.prefill_dense_frac <= 0.0 else self._pol_prefill_dense
         t0 = self._now()
         logits, caches = self._pstep(self.params, jnp.asarray(tokens),
-                                     self.sp, mode=mode,
-                                     k_max_frac=self.ecfg.k_max_frac)
+                                     self.sp, policy=policy)
         logits.block_until_ready()
         self.stats.prefill_time += self._now() - t0
         self.stats.prefill_chunks += 1
@@ -242,7 +295,7 @@ class Engine:
         logits, self.pool.caches = self._dstep(
             self.params, jnp.asarray(tokens), jnp.asarray(positions),
             self.pool.caches, self.sp, jnp.asarray(active),
-            mode=self.ecfg.mode, k_max_frac=self.ecfg.k_max_frac)
+            policy=self._pol_decode)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         self.stats.decode_time += self._now() - t0
         self.stats.decode_steps += 1

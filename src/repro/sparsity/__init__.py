@@ -1,0 +1,8 @@
+"""First-class sparsity policies: the static execution config for WiSparse
+projections, threaded explicitly through the model/serving stack instead of
+ambient thread-local mode state."""
+from repro.sparsity.policy import (ARTIFACT_VERSION, PHASES, VALID_BACKENDS,
+                                   CaptureSink, SparsityPolicy)
+
+__all__ = ["SparsityPolicy", "CaptureSink", "VALID_BACKENDS", "PHASES",
+           "ARTIFACT_VERSION"]

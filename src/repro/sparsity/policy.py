@@ -1,0 +1,347 @@
+"""First-class sparsity execution policy.
+
+``SparsityPolicy`` is the *static* execution config for WiSparse: which
+projection backend runs where (globally, per layer-role, or per block/depth
+range), the static top-k bound ``k_max_frac``, the Pallas block size and
+interpret flag.  It is a frozen, hashable dataclass so it can ride through
+``jax.jit`` as a static argument — each distinct policy owns its executable
+and two engines with different policies can never share (or leak) a trace,
+unlike the retired thread-local ``sparsity_mode`` context.
+
+The *traced* per-layer WiSparse parameters (``g``, ``alpha``, ``tau``,
+``keep_frac``) stay in the ``sp`` pytree that flows next to the weights;
+the policy only decides how each projection consumes them.
+
+Backends (dispatching in ``repro.core.sparse_linear.project``):
+
+    off          dense matmul (baseline)
+    mask         per-token threshold mask, dense compute (paper-exact
+                 numerics; the calibration/eval path)
+    topk_shared  batched-serving gather path: one weight-aware channel set
+                 per layer per step, shared across the batch; FLOPs and
+                 weight bytes shrink with sparsity and the op stays
+                 XLA-partitionable.
+    topk_block   like topk_shared but whole 128-channel blocks (the TPU
+                 block-granular scheme the Pallas kernel implements).
+    pallas       Pallas block-gather kernel (TPU target; interpret on CPU).
+
+Typical lifecycle::
+
+    pol = SparsityPolicy.dense()                          # baseline
+    pol = SparsityPolicy.uniform("topk_shared", k_max_frac=0.5)
+    pol = SparsityPolicy.from_plan(plan,                  # calibrated,
+            backend="topk_shared",                        # mixed per-block
+            sensitive_backend="mask", sensitive_frac=0.25)
+    pol.save("plan.npz", sp=plan.stacked_sp)              # self-contained
+    pol, sp = SparsityPolicy.load("plan.npz")             # no checkpoint
+    engine = Engine(params, cfg, EngineConfig(policy=pol), sp)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple
+
+import numpy as np
+
+VALID_BACKENDS = ("off", "mask", "topk_shared", "topk_block", "pallas")
+
+# serving phases (paper §5.1 recipe: dense first fraction of prefill,
+# sparse later prefill chunks and all decode steps)
+PHASES = ("prefill_dense", "prefill_sparse", "decode")
+
+ARTIFACT_VERSION = 1
+
+
+class CaptureSink:
+    """Eager-only calibration hook: when attached to a policy, every
+    projection executed eagerly records ``(id(w), x)`` here, so
+    ``repro.core.calibration`` can gather per-linear input activations
+    without instrumenting the models.  Traced executions record nothing.
+
+    Identity-hashed, so a policy carrying a sink stays hashable."""
+
+    __slots__ = ("records",)
+
+    def __init__(self, records=None):
+        self.records = [] if records is None else records
+
+    def record(self, w, x):
+        import jax
+        if not isinstance(x, jax.core.Tracer):
+            self.records.append((id(w), x))
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def __len__(self):
+        return len(self.records)
+
+
+def _check_backend(b, where: str):
+    if b not in VALID_BACKENDS:
+        raise ValueError(
+            f"unknown sparsity backend {b!r} in {where}; "
+            f"valid backends: {', '.join(VALID_BACKENDS)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityPolicy:
+    """Static, hashable execution policy for every ``project()`` call.
+
+    backend        default backend for every projection
+    k_max_frac     static upper bound on the kept channel fraction
+                   (gather/pallas backends size their output by it)
+    block          channel-block size (TPU lane width)
+    interpret      Pallas interpret mode (CPU containers)
+    role_backends  ((role, backend), ...) overrides by projection role;
+                   a role is the sp-leaf path within a layer (``"attn/wq"``,
+                   ``"mlp/wo"``, ``"mamba/out_proj"``) and an entry matches
+                   either the full path or just the leaf name (``"wo"``
+                   matches both ``attn/wo`` and ``mlp/wo``).  Role matches
+                   win over block ranges.
+    block_backends ((start, end, backend), ...) overrides by model depth
+                   (transformer-block index, half-open ranges) — the mixed
+                   per-block execution the paper's non-monotonic block
+                   sensitivity motivates, e.g. ``mask`` on the most
+                   sensitive blocks and ``topk_block`` elsewhere.
+    dense_phases   serving phases forced dense by :meth:`for_phase`.
+    capture        optional :class:`CaptureSink` calibration hook.
+
+    Validation is eager: a typo'd backend fails here, at construction,
+    with the list of valid backends — not deep inside a jit trace.
+    """
+
+    backend: str = "off"
+    k_max_frac: float = 1.0
+    block: int = 128
+    interpret: bool = True
+    role_backends: Tuple[Tuple[str, str], ...] = ()
+    block_backends: Tuple[Tuple[int, int, str], ...] = ()
+    dense_phases: Tuple[str, ...] = ("prefill_dense",)
+    capture: Optional[CaptureSink] = None
+
+    def __post_init__(self):
+        # normalize accidental lists (e.g. json round-trips) to tuples so
+        # the policy stays hashable as a static jit argument
+        for f in ("role_backends", "block_backends", "dense_phases"):
+            v = getattr(self, f)
+            if not isinstance(v, tuple):
+                object.__setattr__(self, f, tuple(
+                    tuple(e) if isinstance(e, list) else e for e in v))
+        _check_backend(self.backend, "SparsityPolicy.backend")
+        for role, b in self.role_backends:
+            _check_backend(b, f"role_backends[{role!r}]")
+        for s, e, b in self.block_backends:
+            _check_backend(b, f"block_backends[{s}:{e}]")
+            if not (isinstance(s, int) and isinstance(e, int) and s < e):
+                raise ValueError(
+                    f"block_backends range ({s}, {e}) must be a half-open "
+                    "int range with start < end")
+        for ph in self.dense_phases:
+            if ph not in PHASES:
+                raise ValueError(
+                    f"unknown phase {ph!r} in dense_phases; "
+                    f"valid phases: {', '.join(PHASES)}")
+        if not (0.0 < self.k_max_frac <= 1.0):
+            raise ValueError(
+                f"k_max_frac must be in (0, 1], got {self.k_max_frac}")
+        if self.block <= 0:
+            raise ValueError(f"block must be positive, got {self.block}")
+
+    # ------------------------------------------------------------------
+    # builders
+    # ------------------------------------------------------------------
+    @classmethod
+    def dense(cls, **kw) -> "SparsityPolicy":
+        """All-dense execution (every projection runs the plain matmul)."""
+        return cls(backend="off", **kw)
+
+    @classmethod
+    def uniform(cls, backend: str, k_max_frac: float = 1.0,
+                **kw) -> "SparsityPolicy":
+        """One backend for every projection (the legacy ``sparsity_mode``
+        semantics, as an explicit value)."""
+        return cls(backend=backend, k_max_frac=k_max_frac, **kw)
+
+    @classmethod
+    def from_plan(cls, plan, backend: str = "topk_shared",
+                  sensitive_backend: Optional[str] = None,
+                  sensitive_frac: float = 0.25,
+                  k_max_frac: Optional[float] = None,
+                  **kw) -> "SparsityPolicy":
+        """Policy for a calibrated :class:`repro.core.pipeline.SparsePlan`.
+
+        ``k_max_frac`` defaults to the plan's largest per-layer keep ratio
+        (the tightest static bound that never truncates the traced
+        ``keep_frac``).  With ``sensitive_backend`` set, the blocks with
+        the *lowest* prune ratios — the ones the evolutionary search found
+        most sensitive — get that backend (e.g. ``"mask"`` for paper-exact
+        numerics) while the rest run ``backend``: a mixed per-block map
+        derived from ``plan.block_ratios``.
+        """
+        ratios = np.asarray(plan.block_ratios, dtype=float)
+        if k_max_frac is None:
+            layer_ratios = getattr(plan, "layer_ratios", None) or {}
+            prune_min = min(layer_ratios.values()) if layer_ratios \
+                else (float(ratios.min()) if ratios.size else 0.0)
+            k_max_frac = float(np.clip(1.0 - prune_min, 1e-3, 1.0))
+        block_backends = ()
+        if sensitive_backend is not None and ratios.size:
+            n_sens = max(1, int(round(ratios.size * sensitive_frac)))
+            order = np.argsort(ratios, kind="stable")
+            sens = sorted(int(i) for i in order[:n_sens])
+            block_backends = _merge_ranges(sens, sensitive_backend)
+        return cls(backend=backend, k_max_frac=k_max_frac,
+                   block_backends=block_backends, **kw)
+
+    # ------------------------------------------------------------------
+    # resolution
+    # ------------------------------------------------------------------
+    def backend_at(self, depth: Optional[int] = None,
+                   role: Optional[str] = None) -> str:
+        """Backend for a projection at ``depth`` with role ``role``.
+        Role overrides win, then depth ranges, then the default."""
+        if role is not None:
+            leaf = role.rsplit("/", 1)[-1]
+            for r, b in self.role_backends:
+                if role == r or leaf == r:
+                    return b
+        if depth is not None:
+            for s, e, b in self.block_backends:
+                if s <= depth < e:
+                    return b
+        return self.backend
+
+    def resolve_depth(self, depth: int) -> "SparsityPolicy":
+        """Fold the depth-range map into the default backend for one
+        block — the per-layer policy the scan body dispatches on."""
+        if not self.block_backends:
+            return self
+        return dataclasses.replace(
+            self, backend=self.backend_at(depth=depth), block_backends=())
+
+    def off(self) -> "SparsityPolicy":
+        """This policy with every projection forced dense (phase/shape
+        config like ``block``/``interpret`` is preserved)."""
+        if self.backend == "off" and not self.role_backends \
+                and not self.block_backends:
+            return self
+        return dataclasses.replace(self, backend="off", role_backends=(),
+                                   block_backends=())
+
+    def for_phase(self, phase: str) -> "SparsityPolicy":
+        """Policy for one serving phase — the §5.1 switch, expressed as a
+        value instead of mode-string surgery.  Phases listed in
+        ``dense_phases`` (default: just ``"prefill_dense"``) run dense;
+        the others run this policy unchanged.  Equal policies stay equal
+        (and hash-equal), so each (phase, policy) pair compiles once."""
+        if phase not in PHASES:
+            raise ValueError(
+                f"unknown phase {phase!r}; valid phases: {', '.join(PHASES)}")
+        return self.off() if phase in self.dense_phases else self
+
+    @property
+    def is_dense(self) -> bool:
+        return self.backend == "off" and not self.role_backends \
+            and not self.block_backends
+
+    # ------------------------------------------------------------------
+    # self-contained artifact (policy + sp tree, including g)
+    # ------------------------------------------------------------------
+    def save(self, path: str, sp=None) -> None:
+        """Persist a versioned, *self-contained* npz artifact: the policy
+        config plus (optionally) the stacked sp tree — ratios, alphas,
+        taus **and the weight-column norms g** — so a plan calibrated
+        offline ships to a serving fleet without the model checkpoint."""
+        meta = {
+            "version": ARTIFACT_VERSION,
+            "policy": {
+                "backend": self.backend,
+                "k_max_frac": self.k_max_frac,
+                "block": self.block,
+                "interpret": self.interpret,
+                "role_backends": [list(e) for e in self.role_backends],
+                "block_backends": [list(e) for e in self.block_backends],
+                "dense_phases": list(self.dense_phases),
+            },
+        }
+        arrays = {}
+        if sp is not None:
+            arrays = {f"sp/{k}": v for k, v in _flatten_sp(sp).items()}
+        with open(path, "wb") as f:
+            np.savez(f, __meta__=np.array(json.dumps(meta)), **arrays)
+
+    @classmethod
+    def load(cls, path: str):
+        """Load a saved artifact -> ``(policy, sp_or_None)``.  Needs no
+        model params: the sp tree (g included) comes from the file."""
+        z = np.load(path)
+        if "__meta__" not in z.files:
+            raise ValueError(f"{path} is not a SparsityPolicy artifact")
+        meta = json.loads(str(z["__meta__"][()]))
+        version = meta.get("version")
+        if version != ARTIFACT_VERSION:
+            raise ValueError(
+                f"unsupported SparsityPolicy artifact version {version!r} "
+                f"(this build reads version {ARTIFACT_VERSION})")
+        p = meta["policy"]
+        pol = cls(
+            backend=p["backend"], k_max_frac=p["k_max_frac"],
+            block=p["block"], interpret=p["interpret"],
+            role_backends=tuple(tuple(e) for e in p["role_backends"]),
+            block_backends=tuple(tuple(e) for e in p["block_backends"]),
+            dense_phases=tuple(p["dense_phases"]))
+        flat = {k[len("sp/"):]: z[k] for k in z.files if k.startswith("sp/")}
+        return pol, (_unflatten_sp(flat) if flat else None)
+
+
+def _merge_ranges(depths, backend: str):
+    """Sorted depth list -> ((start, end, backend), ...) contiguous runs."""
+    out, start, prev = [], None, None
+    for d in depths:
+        if start is None:
+            start = prev = d
+        elif d == prev + 1:
+            prev = d
+        else:
+            out.append((start, prev + 1, backend))
+            start = prev = d
+    if start is not None:
+        out.append((start, prev + 1, backend))
+    return tuple(out)
+
+
+def _flatten_sp(sp) -> dict:
+    """Nested list/dict sp tree -> {"0/l0/attn/wq/g": ndarray, ...}."""
+    flat = {}
+
+    def rec(node, prefix):
+        if node is None:
+            return
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k], f"{prefix}{k}/")
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, f"{prefix}{i}/")
+        else:
+            flat[prefix[:-1]] = np.asarray(node)
+
+    rec(sp, "")
+    return flat
+
+
+def _unflatten_sp(flat: dict):
+    """Inverse of :func:`_flatten_sp` for stacked sp trees (a list over
+    layer groups of nested dicts of arrays)."""
+    import jax.numpy as jnp
+    groups = {}
+    for key, arr in flat.items():
+        parts = key.split("/")
+        gi = int(parts[0])
+        node = groups.setdefault(gi, {})
+        for p in parts[1:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+    return [groups[i] for i in range(len(groups))]

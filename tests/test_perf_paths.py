@@ -1,5 +1,5 @@
-"""Coverage for the perf-phase execution paths (EXPERIMENTS.md §Perf):
-aligned batched decode, balanced grouped top-k gather, fused projections."""
+"""Coverage for the perf-phase execution paths: aligned batched decode,
+balanced grouped top-k gather, fused projections."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -35,9 +35,8 @@ def test_aligned_decode_matches_unaligned():
     pos = jnp.full((B,), S - 1, jnp.int32)
     lo, c0 = M.forward(params, cfg, tokens=toks[:, -1], mode="decode",
                        caches=caches, positions=pos)
-    with M.aligned_decode():
-        la, c1 = M.forward(params, cfg, tokens=toks[:, -1], mode="decode",
-                           caches=caches, positions=pos)
+    la, c1 = M.forward(params, cfg, tokens=toks[:, -1], mode="decode",
+                       caches=caches, positions=pos, aligned=True)
     np.testing.assert_allclose(np.asarray(lo), np.asarray(la), atol=1e-5)
     jax.tree_util.tree_map(
         lambda a, b: np.testing.assert_allclose(np.asarray(a),
@@ -54,10 +53,10 @@ def test_aligned_decode_rolling_window():
     full, _ = M.forward(params, cfg, tokens=toks, mode="train")
     _, caches = M.forward(params, cfg, tokens=toks[:, :-1], mode="prefill")
     caches = _pad_caches(cfg, caches, B, 64)
-    with M.aligned_decode():
-        logits, _ = M.forward(params, cfg, tokens=toks[:, -1], mode="decode",
-                              caches=caches,
-                              positions=jnp.full((B,), S - 1, jnp.int32))
+    logits, _ = M.forward(params, cfg, tokens=toks[:, -1], mode="decode",
+                          caches=caches,
+                          positions=jnp.full((B,), S - 1, jnp.int32),
+                          aligned=True)
     np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, -1]),
                                atol=2e-5)
 
@@ -71,9 +70,9 @@ def test_grouped_gather_matches_global_budget():
     w = jax.random.normal(jax.random.fold_in(k, 1), (n, m)) * 0.1
     sp = sl.default_sp(w)
     sp = {**sp, "keep_frac": jnp.float32(0.5)}
-    with sl.sparsity_mode("topk_shared", k_max_frac=0.5):
-        y_global = sl._topk_gather(x, w, sp, sl.current_mode(), groups=1)
-        y_grouped = sl._topk_gather(x, w, sp, sl.current_mode(), groups=G)
+    pol = sl.SparsityPolicy.uniform("topk_shared", k_max_frac=0.5)
+    y_global = sl._topk_gather(x, w, sp, pol, groups=1)
+    y_grouped = sl._topk_gather(x, w, sp, pol, groups=G)
     y_dense = x @ w
     # both sparse outputs approximate dense comparably
     e_g = float(jnp.linalg.norm(y_global - y_dense))
@@ -81,8 +80,8 @@ def test_grouped_gather_matches_global_budget():
     assert e_b < 2.0 * e_g + 1e-6
     # full keep: both are exact
     sp1 = {**sp, "keep_frac": jnp.float32(1.0)}
-    with sl.sparsity_mode("topk_shared", k_max_frac=1.0):
-        yg = sl._topk_gather(x, w, sp1, sl.current_mode(), groups=G)
+    pol1 = sl.SparsityPolicy.uniform("topk_shared", k_max_frac=1.0)
+    yg = sl._topk_gather(x, w, sp1, pol1, groups=G)
     np.testing.assert_allclose(np.asarray(yg), np.asarray(y_dense),
                                rtol=2e-4, atol=2e-4)
 

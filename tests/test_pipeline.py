@@ -113,6 +113,22 @@ def test_plan_save_load(tmp_path, ctx):
     assert set(layers) == set(plan.layer_ratios)
 
 
+def test_plan_save_load_pipe_in_path(tmp_path):
+    """Keys split once on "|": a path component containing "|" survives
+    the round-trip instead of silently truncating."""
+    weird = {(0, "attn/wq"): 0.5, (1, "exp|0/wi_gate"): 0.25}
+    plan = pipeline.SparsePlan(
+        cfg=None, p_target=0.5, block_ratios=np.array([0.5, 0.25]),
+        layer_ratios=dict(weird), alphas={k: 1.0 for k in weird},
+        taus={k: 0.1 for k in weird}, per_depth_sp=[], stacked_sp=[])
+    f = str(tmp_path / "plan.json")
+    plan.save(f)
+    _, _, layers, alphas, taus = pipeline.SparsePlan.load_ratios(f)
+    assert set(layers) == set(weird)
+    assert set(alphas) == set(weird) and set(taus) == set(weird)
+    assert layers[(1, "exp|0/wi_gate")] == 0.25
+
+
 def test_stacked_sp_matches_unstacked_numerics(ctx):
     """The re-stacked sp tree drives the scan model to the same logits as
     the unstacked calibration model."""

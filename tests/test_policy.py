@@ -1,0 +1,263 @@
+"""SparsityPolicy: eager validation, phase derivation, per-role/per-block
+backend resolution, the self-contained save/load artifact, policy
+isolation across interleaved/threaded engines, and bit-exact parity of
+the explicit-policy path against the deprecated thread-local shims."""
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import sparse_linear as sl
+from repro.core.sp_schema import default_sp_stacked
+from repro.data import DataConfig, SyntheticLM
+from repro.models import api, model as M
+from repro.serving import Engine, EngineConfig
+from repro.sparsity import PHASES, VALID_BACKENDS, SparsityPolicy
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    return params, cfg
+
+
+def _prompts(cfg, n, seq, step=0):
+    return np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, seq, n)).batch(step))
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation (fail fast, not inside a jit trace)
+# ---------------------------------------------------------------------------
+
+def test_policy_validates_backends_eagerly():
+    with pytest.raises(ValueError, match="topk_sharedd.*valid backends"):
+        SparsityPolicy(backend="topk_sharedd")
+    with pytest.raises(ValueError, match="valid backends"):
+        SparsityPolicy(role_backends=(("attn/wq", "maskk"),))
+    with pytest.raises(ValueError, match="valid backends"):
+        SparsityPolicy(block_backends=((0, 2, "nope"),))
+    with pytest.raises(ValueError, match="start < end"):
+        SparsityPolicy(block_backends=((2, 2, "mask"),))
+    with pytest.raises(ValueError, match="k_max_frac"):
+        SparsityPolicy(k_max_frac=0.0)
+    with pytest.raises(ValueError, match="valid phases"):
+        SparsityPolicy(dense_phases=("warmup",))
+
+
+def test_engine_config_validates_eagerly(model):
+    import dataclasses
+    with pytest.raises(ValueError, match="valid backends"):
+        EngineConfig(mode="topk_sharedd")
+    # conflicting explicit policy + deprecated knobs never discard silently
+    with pytest.raises(ValueError, match="conflicting"):
+        EngineConfig(mode="mask",
+                     policy=SparsityPolicy.uniform("topk_shared"))
+    with pytest.raises(ValueError, match="conflicting"):
+        EngineConfig(k_max_frac=0.3,
+                     policy=SparsityPolicy.uniform("topk_shared"))
+    with pytest.raises(TypeError):
+        EngineConfig(policy="mask")
+    # the shim maps mode/k_max_frac onto a validated policy
+    e = EngineConfig(mode="topk_shared", k_max_frac=0.5)
+    assert e.policy == SparsityPolicy.uniform("topk_shared", k_max_frac=0.5)
+    assert e.mode == "topk_shared" and e.k_max_frac == 0.5
+    # dataclasses.replace keeps working on constructed (back-filled)
+    # configs, both legacy- and policy-built
+    for base in (e, EngineConfig(policy=SparsityPolicy.uniform("mask"))):
+        e2 = dataclasses.replace(base, max_len=1024)
+        assert e2.policy == base.policy and e2.max_len == 1024
+
+
+def test_backend_resolution_precedence():
+    pol = SparsityPolicy(
+        backend="topk_shared",
+        role_backends=(("mlp/wo", "mask"), ("wq", "off")),
+        block_backends=((0, 2, "pallas"),))
+    # role beats depth beats default; leaf-name entries match any scope
+    assert pol.backend_at(depth=0, role="mlp/wo") == "mask"
+    assert pol.backend_at(depth=5, role="attn/wq") == "off"
+    assert pol.backend_at(depth=1, role="attn/wk") == "pallas"
+    assert pol.backend_at(depth=5, role="attn/wk") == "topk_shared"
+    # depth-resolved per-layer policies keep role overrides
+    lp = pol.resolve_depth(1)
+    assert lp.backend == "pallas" and lp.block_backends == ()
+    assert lp.backend_at(role="mlp/wo") == "mask"
+
+
+def test_for_phase_is_stable_for_jit_caching():
+    pol = SparsityPolicy.uniform("topk_shared", k_max_frac=0.5)
+    for ph in PHASES:
+        assert pol.for_phase(ph) == pol.for_phase(ph)
+        assert hash(pol.for_phase(ph)) == hash(pol.for_phase(ph))
+    assert pol.for_phase("prefill_dense").is_dense
+    assert pol.for_phase("decode") == pol
+    with pytest.raises(ValueError, match="valid phases"):
+        pol.for_phase("warmup")
+    # every backend is constructible + phase-derivable
+    for b in VALID_BACKENDS:
+        SparsityPolicy.uniform(b).for_phase("decode")
+
+
+# ---------------------------------------------------------------------------
+# explicit policy == deprecated thread-local shims, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,keep", [("off", 1.0), ("mask", 1.0),
+                                          ("topk_shared", 0.5),
+                                          ("topk_block", 0.5)])
+def test_policy_matches_legacy_context_bitwise(model, backend, keep):
+    params, cfg = model
+    toks = jnp.asarray(_prompts(cfg, 2, 16))
+    sp = default_sp_stacked(params, cfg, keep_frac=keep)
+    with sl.sparsity_mode(backend, k_max_frac=keep):
+        ref, _ = M.forward(params, cfg, tokens=toks, mode="train", sp=sp)
+    new, _ = M.forward(params, cfg, tokens=toks, mode="train", sp=sp,
+                       policy=SparsityPolicy.uniform(backend,
+                                                     k_max_frac=keep))
+    assert (np.asarray(ref) == np.asarray(new)).all()
+
+
+def test_mixed_block_policy_matches_per_depth_reference(model):
+    """Per-block mixed backends through the scanned model equal the
+    unstacked per-depth reference (dense blocks = sp dropped)."""
+    from repro.core import unstacked as U
+    params, cfg = model
+    toks = jnp.asarray(_prompts(cfg, 2, 16, step=5))
+    L = cfg.num_layers
+    assert L >= 2
+    sp = default_sp_stacked(params, cfg, keep_frac=0.5)
+    mixed = SparsityPolicy.uniform("topk_shared", k_max_frac=0.5,
+                                   block_backends=((0, L // 2, "off"),))
+    got, _ = M.forward(params, cfg, tokens=toks, mode="train", sp=sp,
+                       policy=mixed)
+    # reference: python-loop model, sp=None on the dense blocks
+    layers = U.unstack_layers(cfg, params)
+    per_depth = []
+    for dl in layers:
+        if dl.depth < L // 2:
+            per_depth.append(None)
+        else:
+            per_depth.append(jax.tree_util.tree_map(
+                lambda a, r=dl.rep: a[r], sp[dl.group][f"l{dl.pos}"]))
+    ref, _ = U.forward_unstacked(
+        params, cfg, toks, per_depth_sp=per_depth,
+        policy=SparsityPolicy.uniform("topk_shared", k_max_frac=0.5))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# policy isolation: the regression the thread-local removal fixes
+# ---------------------------------------------------------------------------
+
+def _run_alone(params, cfg, policy, sp, prompts, gen=5):
+    eng = Engine(params, cfg, EngineConfig(max_slots=2, max_len=32,
+                                           prefill_chunk=8, policy=policy),
+                 sp)
+    for b in range(2):
+        eng.submit(prompts[b], gen)
+    return eng.run(), eng
+
+
+def test_policy_isolation_interleaved_and_threaded(model):
+    """Two engines with different policies — interleaved step-by-step and
+    on separate threads — produce bit-identical tokens to each engine run
+    alone."""
+    params, cfg = model
+    prompts = _prompts(cfg, 2, 12, step=23)
+    sp = default_sp_stacked(params, cfg, keep_frac=0.5)
+    pol_a = SparsityPolicy.dense()
+    pol_b = SparsityPolicy.uniform("topk_shared", k_max_frac=0.5)
+
+    ref_a, _ = _run_alone(params, cfg, pol_a, None, prompts)
+    ref_b, _ = _run_alone(params, cfg, pol_b, sp, prompts)
+    assert ref_a != ref_b          # the policies genuinely diverge
+
+    # interleaved stepping on one thread
+    engs = []
+    for pol, s in ((pol_a, None), (pol_b, sp)):
+        e = Engine(params, cfg, EngineConfig(max_slots=2, max_len=32,
+                                             prefill_chunk=8, policy=pol), s)
+        for b in range(2):
+            e.submit(prompts[b], 5)
+        engs.append(e)
+    while any(e.scheduler.has_work() for e in engs):
+        for e in engs:
+            if e.scheduler.has_work():
+                e.step()
+    assert {r: s.tokens for r, s in engs[0].states.items()} == ref_a
+    assert {r: s.tokens for r, s in engs[1].states.items()} == ref_b
+    assert engs[0].decode_traces == 1 and engs[1].decode_traces == 1
+
+    # concurrent threads
+    outs = {}
+
+    def drive(name, pol, s):
+        outs[name] = _run_alone(params, cfg, pol, s, prompts)[0]
+
+    ts = [threading.Thread(target=drive, args=("a", pol_a, None)),
+          threading.Thread(target=drive, args=("b", pol_b, sp))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert outs["a"] == ref_a
+    assert outs["b"] == ref_b
+
+
+# ---------------------------------------------------------------------------
+# self-contained artifact
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_reproduces_decode_tokens(tmp_path, model):
+    """A saved policy+sp artifact reloads without model params (g rides in
+    the file) and reproduces the saver's sparse decode tokens exactly."""
+    params, cfg = model
+    prompts = _prompts(cfg, 2, 12, step=31)
+    sp = default_sp_stacked(params, cfg, keep_frac=0.5)
+    pol = SparsityPolicy.uniform("topk_shared", k_max_frac=0.5,
+                                 block_backends=((0, 1, "off"),))
+    ref, _ = _run_alone(params, cfg, pol, sp, prompts, gen=6)
+
+    f = str(tmp_path / "plan.npz")
+    pol.save(f, sp=sp)
+
+    pol2, sp2 = SparsityPolicy.load(f)
+    assert pol2 == pol
+    # the artifact carries g (the piece SparsePlan.save used to drop)
+    leaves = jax.tree_util.tree_leaves_with_path(sp2)
+    assert any(str(p[-1]) == "['g']" or getattr(p[-1], "key", "") == "g"
+               for p, _ in leaves)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)), sp, sp2)
+    out2, _ = _run_alone(params, cfg, pol2, sp2, prompts, gen=6)
+    assert out2 == ref
+
+
+def test_artifact_version_gate(tmp_path):
+    f = str(tmp_path / "bad.npz")
+    import json
+    np.savez(f, __meta__=np.array(json.dumps({"version": 99, "policy": {}})))
+    with pytest.raises(ValueError, match="version"):
+        SparsityPolicy.load(f)
+
+
+def test_from_plan_mixed_backend_map():
+    class FakePlan:
+        block_ratios = np.array([0.1, 0.6, 0.7, 0.2])
+        layer_ratios = {(0, "attn/wq"): 0.1, (1, "mlp/wo"): 0.7}
+    pol = SparsityPolicy.from_plan(FakePlan(), backend="topk_block",
+                                   sensitive_backend="mask",
+                                   sensitive_frac=0.5)
+    # blocks 0 and 3 have the lowest prune ratios -> most sensitive
+    assert pol.backend_at(depth=0) == "mask"
+    assert pol.backend_at(depth=3) == "mask"
+    assert pol.backend_at(depth=1) == "topk_block"
+    # k_max bounds the largest per-layer keep ratio
+    assert pol.k_max_frac == pytest.approx(0.9)
