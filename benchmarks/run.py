@@ -1,6 +1,9 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure (plus the serving
+benchmark, whose default run covers the Poisson scenario sweep *and* the
+SLO-aware adaptive-controller sweep).
 Prints ``name,us_per_call,derived`` CSV rows (stdout) per the repo contract.
 
+    PYTHONPATH=src python -m benchmarks.run --all
     PYTHONPATH=src python -m benchmarks.run [--only table2]
 """
 import argparse
@@ -21,7 +24,12 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered benchmark (the default; "
+                         "spelled out for scripts)")
     args = ap.parse_args()
+    if args.all and args.only:
+        raise SystemExit("pass --only or --all, not both")
     import importlib
     all_rows = []
     failed = []

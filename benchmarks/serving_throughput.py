@@ -21,7 +21,16 @@ typically protect.
 
     PYTHONPATH=src python -m benchmarks.serving_throughput \
         [--modes off,topk_shared,topk_block,mixed] [--requests 16] [--rate 8]
+    PYTHONPATH=src python -m benchmarks.serving_throughput --controller
     PYTHONPATH=src python -m benchmarks.serving_throughput --smoke   # CI
+
+``--controller`` runs the SLO-aware adaptive sweep instead: a *stepped*
+Poisson trace (calm -> burst -> calm) replayed against a fixed-dense
+engine and a ladder engine under an :class:`AdaptiveController`.  The
+p95-TPOT target is set from a dense probe at a fraction dense cannot hold
+at peak; the sweep reports rung residency, p95 TPOT vs the SLO for both
+engines, per-rung vs-dense token agreement, and asserts the controller
+visited >= 2 rungs with zero decode retraces after warmup.
 
 The default model is a reduced-but-not-tiny llama31_8b variant
 (d_model=768, d_ff=6144, 4 layers) — large enough that decode is
@@ -42,9 +51,9 @@ from repro.core.sp_schema import default_sp_stacked
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.serve import generate
 from repro.models import api
-from repro.serving import Engine, EngineConfig, EngineStats
-from repro.serving.metrics import latency_percentiles
-from repro.sparsity import SparsityPolicy
+from repro.serving import Engine, EngineConfig, EngineStats, SLOConfig
+from repro.serving.metrics import latency_percentiles, percentile
+from repro.sparsity import PolicyLadder, SparsityPolicy
 
 
 def bench_config(d_model=768, d_ff=6144, layers=4, vocab=1024):
@@ -60,6 +69,21 @@ def poisson_trace(n_requests, rate_hz, prompt_lens, seed=0):
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_requests))
     lens = rng.choice(prompt_lens, size=n_requests)
+    return arrivals, lens
+
+
+def stepped_trace(segments, prompt_lens, seed=0):
+    """Bursty load: concatenated Poisson segments [(n_requests, rate_hz),
+    ...] — e.g. calm -> burst -> calm.  Returns (arrivals, lens)."""
+    rng = np.random.default_rng(seed)
+    arrivals, t = [], 0.0
+    for n, rate in segments:
+        gaps = rng.exponential(1.0 / rate, size=n)
+        for g in gaps:
+            t += g
+            arrivals.append(t)
+    arrivals = np.asarray(arrivals)
+    lens = rng.choice(prompt_lens, size=len(arrivals))
     return arrivals, lens
 
 
@@ -144,7 +168,7 @@ def _agreement(states_a, states_b):
 def run(log=print, modes=("off", "topk_shared", "topk_block", "mixed"),
         n_requests=16, rate_hz=8.0, gen_tokens=48, max_slots=8,
         sparsity=0.5, seed=0, reps=2, cfg=None, sensitive_frac=0.25,
-        expect_speedup=True):
+        expect_speedup=True, controller=True):
     cfg = cfg or bench_config()
     params = api.init_model(cfg, 0)
     sp_uniform = default_sp_stacked(params, cfg, keep_frac=1.0 - sparsity)
@@ -239,6 +263,143 @@ def run(log=print, modes=("off", "topk_shared", "topk_block", "mixed"),
         log(f"mixed (dense sensitive + topk_shared) vs dense decode "
             f"speedup: x{ratio:.2f} (matched global budget)")
         rows.append(("serving/decode_speedup_mixed", 0.0, f"x{ratio:.3f}"))
+    if controller:
+        log("--- SLO-aware adaptive controller sweep ---")
+        rows.extend(run_controller(log=log, cfg=cfg, seed=seed,
+                                   gen_tokens=gen_tokens,
+                                   max_slots=max_slots))
+    return rows
+
+
+def _request_tpot(rs):
+    """Mean inter-token latency of one finished request, seconds."""
+    n = len(rs.tokens)
+    if n < 2 or rs.finish_time is None or rs.first_token_time is None:
+        return None
+    return (rs.finish_time - rs.first_token_time) / (n - 1)
+
+
+def _tpot_p95(states, ids=None):
+    """p95 over per-request mean TPOT, optionally restricted to request
+    ids (e.g. the burst segment — the peak-load window the SLO is
+    judged on)."""
+    vals = [_request_tpot(s) for s in states
+            if ids is None or s.request.request_id in ids]
+    vals = [v for v in vals if v is not None]
+    return percentile(vals, 95)
+
+
+def _rung_agreement(states, dense_states, num_rungs):
+    """Per-rung mean token agreement vs the dense run: each controller
+    token is attributed to the rung that emitted it."""
+    dense = {s.request.request_id: s.tokens for s in dense_states}
+    eq = [[] for _ in range(num_rungs)]
+    for s in states:
+        ref = dense.get(s.request.request_id, [])
+        for i, (tok, rung) in enumerate(zip(s.tokens, s.token_rungs)):
+            if i < len(ref):
+                eq[rung].append(1.0 if tok == ref[i] else 0.0)
+    return [float(np.mean(e)) if e else float("nan") for e in eq]
+
+
+def run_controller(log=print, cfg=None, budgets=(0.0, 0.5, 0.75),
+                   segments=((6, 2.0), (24, 30.0), (6, 2.0)),
+                   gen_tokens=48, max_slots=8, seed=0,
+                   slo_frac=0.85, max_queue=2, dwell=4,
+                   check=True):
+    """SLO-aware adaptive sweep on a stepped (calm/burst/calm) trace.
+
+    A dense probe replay measures the p95 per-request TPOT the
+    fixed-dense policy delivers for the *burst-segment* requests (the
+    peak-load window); the SLO target is set at ``slo_frac`` of it — an
+    objective dense *cannot* hold at peak by construction — and the
+    ladder engine must hold it by climbing rungs through the burst."""
+    cfg = cfg or bench_config()
+    params = api.init_model(cfg, 0)
+    # every rung prefills dense: on CPU the top-k gather backends pay off
+    # on the wide decode batch but are overhead-bound on a skinny (1, C)
+    # prefill chunk (the weight-row gather copies ~as many bytes as the
+    # dense matmul reads), and burst-time TPOT is decode + interleaved
+    # prefill — sparsifying prefill would *raise* the gap it must shrink
+    ladder = PolicyLadder.uniform(
+        params, cfg, budgets,
+        dense_phases=("prefill_dense", "prefill_sparse"))
+
+    prompt_lens = (24, 32, 48)
+    arrivals, lens = stepped_trace(segments, prompt_lens, seed)
+    n_requests = len(arrivals)
+    pool = np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, max(prompt_lens), n_requests)).batch(0))
+    prompts = [pool[i, :lens[i]] for i in range(n_requests)]
+    max_len = max(prompt_lens) + gen_tokens
+
+    def fresh_engine(slo=None):
+        ecfg = EngineConfig(max_slots=max_slots, max_len=max_len,
+                            prefill_chunk=32, slo=slo)
+        return Engine(params, cfg, ecfg, ladder=ladder)
+
+    # the peak-load window the SLO is judged on: the burst segment's
+    # request ids (submission order == arrival order == segment order)
+    n_head = segments[0][0]
+    burst_ids = set(range(n_head, n_head + segments[1][0])) \
+        if len(segments) > 1 else None
+
+    # --- dense probe: what the fixed-dense policy delivers at peak -------
+    dense_eng = fresh_engine()                    # pinned at rung 0: dense
+    dense_eng.warmup()      # precompile outside the trace; request ids
+    dense_states = replay(dense_eng, prompts, arrivals, gen_tokens)
+    # stay aligned with the controller run's for per-rung agreement
+    dense_p95 = _tpot_p95(dense_states, burst_ids)
+    target = slo_frac * dense_p95
+    log(f"dense probe: burst-request p95 TPOT {dense_p95*1e3:.1f}ms -> "
+        f"SLO target {target*1e3:.1f}ms ({slo_frac:.0%} of dense)")
+
+    # --- adaptive run under the same trace -------------------------------
+    slo = SLOConfig(tpot_p95=target, max_queue=max_queue, dwell=dwell)
+    eng = fresh_engine(slo=slo)                   # warms up all rungs
+    states = replay(eng, prompts, arrivals, gen_tokens)
+    ctl = eng.controller
+    ctl_p95 = _tpot_p95(states, burst_ids)
+    res = ctl.snapshot()["rung_residency"]
+    agree = _rung_agreement(states, dense_states, len(ladder))
+    visited = sum(1 for r in ctl.residency if r > 0)
+    retraces = eng.decode_retraces_after_warmup
+
+    log(f"controller: burst-request p95 TPOT {ctl_p95*1e3:.1f}ms vs "
+        f"target {target*1e3:.1f}ms | rungs visited "
+        f"{visited}/{len(ladder)} | "
+        f"residency {[f'{r:.0%}' for r in res]} | "
+        f"switches {len(ctl.transitions)} | decode retraces {retraces}")
+    for i, b in enumerate(ladder.budgets):
+        log(f"  rung {i} (sparsity {b:.0%}): residency {res[i]:.1%}, "
+            f"vs-dense agreement "
+            f"{'n/a' if np.isnan(agree[i]) else f'{agree[i]:.1%}'}")
+
+    rows = [
+        ("serving/controller/dense_tpot_p95_s", 0.0, f"{dense_p95:.5f}"),
+        ("serving/controller/slo_tpot_p95_s", 0.0, f"{target:.5f}"),
+        ("serving/controller/ctl_tpot_p95_s", 0.0,
+         f"{ctl_p95:.5f};held={ctl_p95 <= target}"),
+        ("serving/controller/rungs_visited", 0.0,
+         f"{visited}/{len(ladder)}"),
+        ("serving/controller/rung_residency", 0.0,
+         ";".join(f"{r:.3f}" for r in res)),
+        ("serving/controller/rung_agreement_vs_dense", 0.0,
+         ";".join("nan" if np.isnan(a) else f"{a:.3f}" for a in agree)),
+        ("serving/controller/decode_retraces_after_warmup", 0.0,
+         str(retraces)),
+    ]
+    if check:
+        assert visited >= 2, \
+            f"controller only visited {visited} rung(s) on the burst trace"
+        assert retraces == 0, \
+            f"{retraces} decode retrace(s) after warmup — rung switches " \
+            "must be compile-cache hits"
+        assert dense_p95 > target, "SLO target not below dense p95?"
+        assert ctl_p95 <= target, \
+            f"controller p95 TPOT {ctl_p95:.4f}s misses the " \
+            f"{target:.4f}s SLO the dense policy also violates " \
+            f"(dense p95 {dense_p95:.4f}s)"
     return rows
 
 
@@ -257,17 +418,35 @@ def main():
                     help="tiny model + trace for CI: exercises every "
                          "scenario (incl. mixed) and the parity gate in "
                          "about a minute; no throughput expectations")
+    ap.add_argument("--controller", action="store_true",
+                    help="run only the SLO-aware adaptive sweep (stepped "
+                         "burst trace, ladder engine vs fixed dense)")
     args = ap.parse_args()
-    kw = dict(modes=tuple(args.modes.split(",")), n_requests=args.requests,
-              rate_hz=args.rate, gen_tokens=args.gen, max_slots=args.slots,
-              sparsity=args.sparsity, seed=args.seed, reps=args.reps,
-              sensitive_frac=args.sensitive_frac)
-    if args.smoke:
-        kw.update(cfg=bench_config(d_model=128, d_ff=512, layers=4,
-                                   vocab=512),
-                  n_requests=4, gen_tokens=8, max_slots=4, reps=1,
-                  expect_speedup=False)
-    rows = run(**kw)
+    if args.controller:
+        if args.smoke:
+            rows = run_controller(
+                cfg=bench_config(d_model=128, d_ff=512, layers=4,
+                                 vocab=512),
+                budgets=(0.0, 0.5), segments=((2, 4.0), (8, 50.0),
+                                              (2, 4.0)),
+                gen_tokens=10, max_slots=2, seed=args.seed,
+                max_queue=1, dwell=2, check=False)
+        else:
+            rows = run_controller(gen_tokens=args.gen,
+                                  max_slots=args.slots, seed=args.seed)
+    else:
+        kw = dict(modes=tuple(args.modes.split(",")),
+                  n_requests=args.requests,
+                  rate_hz=args.rate, gen_tokens=args.gen,
+                  max_slots=args.slots,
+                  sparsity=args.sparsity, seed=args.seed, reps=args.reps,
+                  sensitive_frac=args.sensitive_frac)
+        if args.smoke:
+            kw.update(cfg=bench_config(d_model=128, d_ff=512, layers=4,
+                                       vocab=512),
+                      n_requests=4, gen_tokens=8, max_slots=4, reps=1,
+                      expect_speedup=False, controller=False)
+        rows = run(**kw)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,9 +1,15 @@
-"""Serving example: calibrate WiSparse offline, save a *self-contained*
-policy artifact, reload it in a "serving fleet" process (no checkpoint
-needed to rebuild the sparsity params — the artifact carries ratios,
-alphas, taus and the weight-column norms g) and run batched greedy
-decoding with the weight-aware sparse path (paper §5.1 recipe: dense
-prefill half, sparse decode), comparing outputs against the dense server.
+"""Serving example: calibrate a WiSparse *policy ladder* offline, save it
+as one self-contained artifact, reload it in a "serving fleet" process
+(no checkpoint needed — the artifact carries every rung's policy, its
+ratios/alphas/taus and the shared weight-column norms g) and serve with
+the SLO-aware adaptive controller switching rungs under load.
+
+Lifecycle demonstrated (the README's "Adaptive serving" section):
+  1. calibrate  — one calibration context, warm-started evolutionary
+                  search per budget rung (paper §4.3 + ladder warm start)
+  2. save/load  — one versioned npz for the whole ladder
+  3. serve      — pinned-rung quality check, then the adaptive engine
+                  under a request burst (rung switches, zero retraces)
 
     PYTHONPATH=src python examples/calibrate_and_serve.py
 """
@@ -19,43 +25,60 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import pipeline
 from repro.core.allocation import EvoConfig
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.serve import generate
 from repro.models import api
-from repro.sparsity import SparsityPolicy
+from repro.serving import Engine, EngineConfig, SLOConfig
+from repro.sparsity import PolicyLadder, calibrate_ladder
 
 cfg = reduced(get_config("llama31_8b"))
 params = api.init_model(cfg, 0)
 data_cfg = DataConfig(cfg.vocab_size, 48, 4)
 
-# --- offline calibration (one-time, per model) -----------------------------
+# --- 1. offline calibration (one-time, per model) --------------------------
+# One context, three budgets: rung 0 dense, rungs 1-2 warm-started from
+# their denser neighbour (tiny evolutionary budgets for the CPU demo).
 calib = {"tokens": jnp.asarray(SyntheticLM(data_cfg).batch(0))}
-plan = pipeline.run_pipeline(
-    params, cfg, calib, p_target=0.5,
+ladder = calibrate_ladder(
+    params, cfg, calib, budgets=(0.0, 0.3, 0.6),
+    backend="mask",                     # paper-exact numerics for the demo
     evo=EvoConfig(generations=2, offspring=4, eps=0.1),
-    delta=0.25, coord_passes=0, log=print)
+    warm_generations=1, delta=0.25, log=print)
 
-# the policy: paper-exact mask numerics on the most sensitive blocks
-# (lowest evolutionary prune ratios), mask everywhere else for this demo
-policy = plan.to_policy(backend="mask", sensitive_backend="mask")
 artifact = tempfile.NamedTemporaryFile(suffix=".npz", delete=False).name
-policy.save(artifact, sp=plan.stacked_sp)
-print(f"self-contained artifact saved to {artifact} "
-      f"(block ratios {np.round(plan.block_ratios, 2)})")
+ladder.save(artifact)
+print(f"ladder artifact saved to {artifact}; per-rung block prune ratios:")
+for b, r in zip(ladder.budgets, ladder.block_ratios):
+    print(f"  budget {b:.1f}: {np.round(r, 2)}")
 
-# --- serving fleet: reload without the calibration context -----------------
-policy2, sp2 = SparsityPolicy.load(artifact)
-assert policy2 == policy
+# --- 2. serving fleet: reload without the calibration context --------------
+ladder2 = PolicyLadder.load(artifact)
+assert ladder2.policies == ladder.policies
 
+# --- 3a. pinned-rung quality check vs the dense server ---------------------
 prompts = jnp.asarray(SyntheticLM(
     dataclasses.replace(data_cfg, seq_len=32)).batch(7))
-dense = generate(params, cfg, prompts, 16, None,
-                 policy=SparsityPolicy.dense())
-sparse = generate(params, cfg, prompts, 16, sp2, policy=policy2)
-agree = float((dense == sparse).mean())
-print(f"generated {dense.size} tokens; "
-      f"sparse/dense token agreement: {agree:.1%}")
-print("dense :", np.asarray(dense[0])[:12])
-print("sparse:", np.asarray(sparse[0])[:12])
+dense = generate(params, cfg, prompts, 16, None)
+for i in range(1, len(ladder2)):
+    pol, sp = ladder2.rung(i)
+    sparse = generate(params, cfg, prompts, 16, sp, policy=pol)
+    agree = float((dense == sparse).mean())
+    print(f"rung {i} (budget {ladder2.budgets[i]:.1f}): "
+          f"vs-dense token agreement {agree:.1%}")
+
+# --- 3b. adaptive serving: the controller rides the burst ------------------
+slo = SLOConfig(tpot_p95=1.0, max_queue=1, dwell=2)   # queue-driven demo
+engine = Engine(params, cfg,
+                EngineConfig(max_slots=2, max_len=48, prefill_chunk=8,
+                             slo=slo),
+                ladder=ladder2)                        # precompiles rungs
+burst = np.asarray(SyntheticLM(
+    dataclasses.replace(data_cfg, seq_len=16, global_batch=8)).batch(3))
+for b in range(8):
+    engine.submit(burst[b], 8)
+out = engine.run()
+print(f"adaptive engine: {sum(len(t) for t in out.values())} tokens, "
+      f"controller {engine.controller.snapshot()}, "
+      f"decode retraces after warmup "
+      f"{engine.decode_retraces_after_warmup}")

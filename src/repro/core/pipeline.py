@@ -97,9 +97,16 @@ def run_pipeline(params, cfg: ModelConfig, calib_batch, p_target: float,
                  alpha_default: float = 1.0, coord_passes: int = 1,
                  skip_coarse: bool = False, skip_fine: bool = False,
                  skip_alpha: bool = False, log=None,
-                 ctx: Optional[CalibContext] = None) -> SparsePlan:
+                 ctx: Optional[CalibContext] = None,
+                 warm_start: Optional["SparsePlan"] = None,
+                 generations: Optional[int] = None) -> SparsePlan:
     """Full WiSparse calibration.  The skip_* flags reproduce the paper's
-    Table-2 ablation rows (activation-only / +weight / +coarse / +fine)."""
+    Table-2 ablation rows (activation-only / +weight / +coarse / +fine).
+
+    ``warm_start``: a plan calibrated at an adjacent (lower) budget — both
+    search stages start from (and never undercut) its ratios, which is
+    what makes a calibrated ladder monotone per block.  ``generations``
+    caps the evolutionary budget for that refinement search."""
     log = log or (lambda *_: None)
     if ctx is None:
         log("building calibration context ...")
@@ -110,23 +117,39 @@ def run_pipeline(params, cfg: ModelConfig, calib_batch, p_target: float,
     base_alpha = {(d, p): alpha_default for d in range(ctx.num_blocks)
                   for p in ctx.keys_by_depth[d]}
 
+    p_init = p_min = layer_init = None
+    if warm_start is not None:
+        if warm_start.p_target > p_target:
+            raise ValueError(
+                f"warm_start plan budget {warm_start.p_target} exceeds "
+                f"p_target {p_target}; ladder budgets must be ascending")
+        p_init = p_min = np.asarray(warm_start.block_ratios, np.float64)
+        layer_init = dict(warm_start.layer_ratios)
+
     if skip_coarse:
         p_block = np.full(ctx.num_blocks, p_target)
+        if p_init is not None:
+            p_block = np.maximum(p_block, p_init)
     else:
         log("coarse search: evolutionary block-level allocation (Alg. 3)")
-        p_block = allocation.block_level_allocation(ctx, p_target, evo,
-                                                    base_alpha, log)
+        p_block = allocation.block_level_allocation(
+            ctx, p_target, evo, base_alpha, log,
+            p_init=p_init, p_min=p_min, generations=generations)
 
     layer_ratios: Dict[Key, float] = {}
     if skip_fine:
         for d in range(ctx.num_blocks):
             for p in ctx.keys_by_depth[d]:
                 layer_ratios[(d, p)] = float(p_block[d])
+        if layer_init is not None:
+            for k, v in layer_init.items():
+                layer_ratios[k] = max(layer_ratios.get(k, 0.0), v)
     else:
         log("fine search: greedy intra-block allocation (Alg. 4)")
         for d in range(ctx.num_blocks):
             layer_ratios.update(allocation.intra_block_allocation(
-                ctx, d, float(p_block[d]), delta, base_alpha))
+                ctx, d, float(p_block[d]), delta, base_alpha,
+                p_init=layer_init))
 
     keep_ratios = {k: 1.0 - v for k, v in layer_ratios.items()}
 

@@ -16,18 +16,13 @@ layer-role, per block range), the static top-k bound, the Pallas block
 size/interpret flag, and the optional calibration capture hook.  Because
 backends differ in lowering, the policy is a hashable static jit argument
 — never ambient state — so concurrent engines with different policies can
-never share a trace.
-
-Deprecated shims (one release): the thread-local ``sparsity_mode``,
-``capture_inputs`` and ``token_weights`` contexts still work for callers
-that do not pass ``policy=`` / ``token_weights=`` explicitly; explicit
-arguments always win.
+never share a trace.  ``policy=None`` means dense execution; the
+thread-local ``sparsity_mode``/``capture_inputs``/``token_weights``
+contexts that used to fill unspecified state are gone (see the README
+migration notes).
 """
 from __future__ import annotations
 
-import contextlib
-import dataclasses
-import threading
 from typing import Optional
 
 import jax
@@ -36,142 +31,12 @@ import jax.numpy as jnp
 from repro.sparsity import CaptureSink, SparsityPolicy, VALID_BACKENDS
 
 __all__ = [
-    "SparsityPolicy", "CaptureSink", "VALID_BACKENDS", "project", "scores",
-    "column_norms", "default_sp", "resolve_execution",
-    # deprecated shims
-    "SparsityMode", "sparsity_mode", "current_mode", "capture_inputs",
-    "capture_active", "token_weights", "current_token_weights", "record",
+    "SparsityPolicy", "CaptureSink", "VALID_BACKENDS", "DENSE", "project",
+    "scores", "column_norms", "default_sp",
 ]
 
-# sentinel distinguishing "argument not given -> consult the deprecated
-# thread-local context" from an explicit None ("no token weights")
-_UNSET = object()
-
-
-# ---------------------------------------------------------------------------
-# Deprecated thread-local shims (kept one release; see SparsityPolicy)
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class SparsityMode:
-    """Deprecated: use :class:`SparsityPolicy`.  Kept so existing
-    ``sparsity_mode(...)`` callers keep working for one release."""
-    mode: str = "off"            # off|mask|topk_shared|topk_block|pallas
-    k_max_frac: float = 1.0      # static upper bound on kept fraction
-    block: int = 128             # channel-block size (TPU lane width)
-    interpret: bool = True       # Pallas interpret mode (CPU container)
-
-    @property
-    def backend(self) -> str:
-        return self.mode
-
-
-_STATE = threading.local()
-
-
-def current_mode() -> SparsityMode:
-    """Deprecated: read the thread-local mode context."""
-    return getattr(_STATE, "mode", None) or SparsityMode()
-
-
-@contextlib.contextmanager
-def sparsity_mode(mode: str = "mask", k_max_frac: float = 1.0,
-                  block: int = 128, interpret: bool = True):
-    """Deprecated: prefer passing an explicit ``SparsityPolicy`` (e.g.
-    ``SparsityPolicy.uniform(mode, k_max_frac=...)``) to ``forward`` /
-    ``project``.  This context only affects calls that do not receive a
-    policy argument."""
-    import warnings
-    warnings.warn(
-        "sparsity_mode(...) is deprecated; pass "
-        "policy=SparsityPolicy.uniform(...) explicitly",
-        DeprecationWarning, stacklevel=3)
-    prev = getattr(_STATE, "mode", None)
-    _STATE.mode = SparsityMode(mode, k_max_frac, block, interpret)
-    try:
-        yield _STATE.mode
-    finally:
-        _STATE.mode = prev
-
-
-@contextlib.contextmanager
-def capture_inputs():
-    """Deprecated calibration hook: prefer a :class:`CaptureSink` on the
-    policy (``SparsityPolicy.dense(capture=CaptureSink())``).  Records
-    (id(w), x) for every projection executed eagerly inside this context
-    that does not receive an explicit policy."""
-    import warnings
-    warnings.warn(
-        "capture_inputs() is deprecated; attach a CaptureSink to the "
-        "policy (SparsityPolicy.dense(capture=CaptureSink()))",
-        DeprecationWarning, stacklevel=3)
-    prev = getattr(_STATE, "capture", None)
-    _STATE.capture = []
-    try:
-        yield _STATE.capture
-    finally:
-        _STATE.capture = prev
-
-
-def capture_active() -> bool:
-    """Deprecated: query the thread-local capture context."""
-    return getattr(_STATE, "capture", None) is not None
-
-
-@contextlib.contextmanager
-def token_weights(w):
-    """Deprecated serving hook: prefer passing ``token_weights=`` through
-    ``M.forward`` / the step factories.  Weights each token row's
-    contribution to the shared top-k saliency aggregate; with all-ones
-    weights the ranking (and the floats) match the unweighted mean
-    exactly.  w: (rows,) or None."""
-    import warnings
-    warnings.warn(
-        "the token_weights(...) context is deprecated; pass "
-        "token_weights= through M.forward / the step factories",
-        DeprecationWarning, stacklevel=3)
-    prev = getattr(_STATE, "tok_w", None)
-    _STATE.tok_w = w
-    try:
-        yield
-    finally:
-        _STATE.tok_w = prev
-
-
-def current_token_weights():
-    """Deprecated: read the thread-local token-weights context."""
-    return getattr(_STATE, "tok_w", None)
-
-
-def record(w, x):
-    """Deprecated: append to the thread-local capture context (the policy
-    ``capture`` sink replaces this)."""
-    cap = getattr(_STATE, "capture", None)
-    if cap is not None and not isinstance(x, jax.core.Tracer):
-        cap.append((id(w), x))
-
-
-def _policy_from_context() -> SparsityPolicy:
-    """Build a policy from the deprecated thread-local contexts — the one
-    place the legacy ambient state is still consulted."""
-    m = current_mode()
-    cap = getattr(_STATE, "capture", None)
-    return SparsityPolicy(
-        backend=m.mode, k_max_frac=m.k_max_frac, block=m.block,
-        interpret=m.interpret,
-        capture=CaptureSink(cap) if cap is not None else None)
-
-
-def resolve_execution(policy: Optional[SparsityPolicy], tok_w=None):
-    """Fill unspecified execution state from the deprecated thread-local
-    contexts (explicit arguments always win).  Model entry points call
-    this exactly once at the forward boundary, so nothing below it ever
-    reads ambient state."""
-    if policy is None:
-        policy = _policy_from_context()
-    if tok_w is None:
-        tok_w = current_token_weights()
-    return policy, tok_w
+# the default execution when no policy is passed: plain dense matmuls
+DENSE = SparsityPolicy.dense()
 
 
 # ---------------------------------------------------------------------------
@@ -223,10 +88,10 @@ def scores(x, g, alpha):
 
 def project(x, w, sp: Optional[dict] = None, row_parallel: bool = False, *,
             policy: Optional[SparsityPolicy] = None,
-            role: Optional[str] = None, token_weights=_UNSET):
+            role: Optional[str] = None, token_weights=None):
     """Dispatch one projection under ``policy`` (per-block depth ranges
     are already folded in by the model's scan driver; only role overrides
-    remain to resolve here).
+    remain to resolve here).  ``policy=None`` runs dense.
 
     row_parallel statically marks weights whose *input* dim is
     model-sharded (o_proj/down_proj/out_proj).  The top-k gather backends
@@ -235,9 +100,7 @@ def project(x, w, sp: Optional[dict] = None, row_parallel: bool = False, *,
     (see ``_topk_gather_grouped``).
     """
     if policy is None:
-        policy = _policy_from_context()              # deprecated shim
-    if token_weights is _UNSET:
-        token_weights = current_token_weights()      # deprecated shim
+        policy = DENSE
     if policy.capture is not None:
         policy.capture.record(w, x)
     backend = policy.backend_at(role=role)
@@ -276,8 +139,7 @@ def _topk_gather(x, w, sp, policy, *, backend: Optional[str] = None,
     beyond the layer's own traced keep_frac, gather the corresponding
     weight rows and run a compact matmul.  FLOPs ~ k/n of dense.
 
-    ``policy`` supplies the static knobs (k_max_frac, block); it may be a
-    SparsityPolicy or a legacy SparsityMode (both expose ``.backend``).
+    ``policy`` supplies the static knobs (k_max_frac, block).
 
     groups > 1: balanced per-shard selection for row-parallel weights —
     the channel budget is split evenly across `groups` contiguous input

@@ -122,10 +122,10 @@ def forward_unstacked(params, cfg: ModelConfig, tokens, *, layers=None,
                       collect_block_inputs=False, policy=None):
     """Full forward via the python-loop layer list.  Returns
     (logits, block_inputs or None).  ``policy``: the SparsityPolicy driving
-    every projection (depth ranges resolve per layer here; None falls back
-    to the deprecated thread-local contexts)."""
+    every projection (depth ranges resolve per layer here; None runs
+    dense)."""
     from repro.core import sparse_linear as _sl
-    policy, _ = _sl.resolve_execution(policy, None)
+    policy = policy if policy is not None else _sl.DENSE
     layers = layers or unstack_layers(cfg, params)
     enc_out = None
     if cfg.family == "encdec" and frames is not None:
@@ -153,7 +153,7 @@ def block_forward(dl: DepthLayer, x, cfg: ModelConfig, sp=None, enc_out=None,
                   policy=None):
     """One transformer block (paper's unit of sensitivity analysis)."""
     from repro.core import sparse_linear as _sl
-    policy, _ = _sl.resolve_execution(policy, None)
+    policy = policy if policy is not None else _sl.DENSE
     out, _ = M.layer_apply(dl.params, x, cfg, dl.kind, sp, None, None,
                            "train", enc_out,
                            policy=policy.resolve_depth(dl.depth))

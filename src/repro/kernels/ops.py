@@ -9,8 +9,7 @@ This is the ``backend="pallas"`` path of ``repro.core.sparse_linear``:
   3. block-gather matmul over exactly the kept blocks (sparse_matmul).
 
 All execution state arrives as explicit arguments (``k_frac``,
-``token_weights``); the thread-local fallbacks below are one-release
-deprecation shims for callers that predate ``SparsityPolicy``.
+``token_weights``) — typically from the caller's ``SparsityPolicy``.
 """
 from __future__ import annotations
 
@@ -19,12 +18,10 @@ import jax.numpy as jnp
 
 from repro.kernels import sparse_matmul as K
 
-_UNSET = object()
 
-
-def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = None,
+def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = 1.0,
                      interpret: bool = True, per_seq: bool = False,
-                     token_weights=_UNSET):
+                     token_weights=None):
     """x: (..., n); w: (n, *out).  Returns x W with WiSparse block sparsity.
 
     token_weights: per-row weights for the shared block-score aggregate
@@ -38,12 +35,6 @@ def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = None,
     while n % blk:
         blk -= 1
     nb = n // blk
-    if k_frac is None:                                  # deprecated shim
-        from repro.core.sparse_linear import current_mode
-        k_frac = current_mode().k_max_frac
-    if token_weights is _UNSET:                         # deprecated shim
-        from repro.core.sparse_linear import current_token_weights
-        token_weights = current_token_weights()
     kb = max(1, min(nb, round(nb * k_frac)))
 
     tw = token_weights

@@ -11,10 +11,18 @@ TPU-shaped execution.  Greedy decoding over the slot-pool KV-cache path;
 ``--legacy`` runs the original static-batch loop (kept as the numerics
 reference — the engine matches it token-for-token for equal-length
 prompts under the whole-prompt prefill strategy).
+
+Adaptive serving: ``--ladder plan.npz`` loads a calibrated
+``PolicyLadder`` artifact (see ``repro.sparsity.calibrate_ladder`` /
+``examples/calibrate_and_serve.py``) and ``--slo-tpot-p95`` arms the
+feedback controller that moves between rungs under load; ``--rung`` pins
+one rung instead.  ``--metrics-out`` appends JSONL engine/controller
+snapshots while the engine runs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -25,7 +33,7 @@ from repro.configs import get_config, reduced
 from repro.core import pipeline as wis_pipeline
 from repro.data import DataConfig, SyntheticLM
 from repro.models import api, model as M
-from repro.sparsity import SparsityPolicy
+from repro.sparsity import PolicyLadder, SparsityPolicy
 
 
 def _pad_caches(cfg, caches, batch, total_len):
@@ -42,28 +50,15 @@ def _pad_caches(cfg, caches, batch, total_len):
     return jax.tree_util.tree_map(fit, caches, target)
 
 
-def generate(params, cfg, prompts, gen_tokens: int, sp_stacked=None,
-             mode: str = None, k_max_frac: float = None,
-             prefill_sparse_frac: float = 0.5, *, policy=None):
+def generate(params, cfg, prompts, gen_tokens: int, sp_stacked=None, *,
+             prefill_sparse_frac: float = 0.5, policy=None):
     """prompts: (B, P) int32.  Returns (B, gen_tokens) greedy tokens.
 
-    ``policy`` (keyword-only): the SparsityPolicy for sparse phases.
-    ``mode``/``k_max_frac`` are the deprecated string-mode parameters
-    (one release, old positions preserved for positional callers): they
-    build a uniform policy when no explicit policy is given."""
+    ``policy``: the SparsityPolicy for the sparse phases (None = the
+    paper-exact ``mask`` backend, which is dense-equivalent without
+    calibrated thresholds in ``sp_stacked``)."""
     if policy is None:
-        if mode is not None or k_max_frac is not None:
-            import warnings
-            warnings.warn(
-                "generate(mode=..., k_max_frac=...) is deprecated; pass "
-                "policy=SparsityPolicy.uniform(...) instead",
-                DeprecationWarning, stacklevel=2)
-        policy = SparsityPolicy.uniform(
-            mode or "mask", k_max_frac=1.0 if k_max_frac is None
-            else k_max_frac)
-    elif mode is not None or k_max_frac is not None:
-        raise ValueError("pass either policy= or the deprecated "
-                         "mode=/k_max_frac=, not both")
+        policy = SparsityPolicy.uniform("mask")
     B, P = prompts.shape
     total = P + gen_tokens
 
@@ -126,6 +121,23 @@ def main():
                          "(requires --calib-quick)")
     ap.add_argument("--sensitive-frac", type=float, default=0.25,
                     help="fraction of blocks treated as sensitive")
+    ap.add_argument("--ladder", default=None,
+                    help="PolicyLadder npz artifact for adaptive serving "
+                         "(overrides --sparsity/--mode)")
+    ap.add_argument("--rung", type=int, default=0,
+                    help="ladder rung to start on (and to pin, without "
+                         "--slo-tpot-p95)")
+    ap.add_argument("--slo-tpot-p95", type=float, default=0.0,
+                    help="target p95 inter-token latency in seconds; > 0 "
+                         "arms the adaptive controller (needs --ladder)")
+    ap.add_argument("--slo-max-queue", type=int, default=8,
+                    help="queued requests beyond which the controller "
+                         "escalates")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append engine/controller snapshots to this "
+                         "JSONL file while serving")
+    ap.add_argument("--metrics-every", type=int, default=16,
+                    help="engine steps between JSONL snapshots")
     args = ap.parse_args()
 
     if not 0.0 <= args.sparsity <= 1.0:
@@ -141,9 +153,21 @@ def main():
     if args.sensitive_backend is not None and not args.calib_quick:
         raise SystemExit("--sensitive-backend needs a calibrated plan: "
                          "add --calib-quick")
+    if args.slo_tpot_p95 > 0 and args.ladder is None:
+        raise SystemExit("--slo-tpot-p95 needs --ladder: the controller "
+                         "switches between ladder rungs")
+    if args.rung != 0 and args.ladder is None:
+        raise SystemExit("--rung needs --ladder: a fixed-policy engine "
+                         "has only rung 0")
+
+    ladder = None
+    if args.ladder is not None:
+        ladder = PolicyLadder.load(args.ladder)
+        print(f"loaded {len(ladder)}-rung ladder "
+              f"(budgets {list(ladder.budgets)}) from {args.ladder}")
 
     sp, policy = None, SparsityPolicy.dense()
-    if args.sparsity > 0:
+    if ladder is None and args.sparsity > 0:
         if args.calib_quick:
             from repro.core.allocation import EvoConfig
             plan = wis_pipeline.run_pipeline(
@@ -177,18 +201,24 @@ def main():
         print("sample:", np.asarray(toks[0])[:16])
         return
 
-    from repro.serving import Engine, EngineConfig
+    from repro.serving import Engine, EngineConfig, SLOConfig
     from repro.serving.metrics import latency_percentiles
+    slo = None
+    if args.slo_tpot_p95 > 0:
+        slo = SLOConfig(tpot_p95=args.slo_tpot_p95,
+                        max_queue=args.slo_max_queue)
     ecfg = EngineConfig(
         max_slots=args.max_slots or args.batch,
         max_len=args.max_len or args.prompt_len + args.gen,
-        prefill_chunk=args.chunk, policy=policy,
-        prefill_strategy=args.prefill_strategy)
-    engine = Engine(params, cfg, ecfg, sp)
+        prefill_chunk=args.chunk,
+        policy=None if ladder is not None else policy,
+        prefill_strategy=args.prefill_strategy,
+        slo=slo, initial_rung=args.rung)
+    engine = Engine(params, cfg, ecfg, sp, ladder=ladder)
     t0 = time.time()
     for b in range(args.batch):
         engine.submit(np.asarray(prompts[b]), args.gen)
-    out = engine.run()
+    out = run_with_metrics(engine, args.metrics_out, args.metrics_every)
     dt = time.time() - t0
     n = sum(len(t) for t in out.values())
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s on CPU)")
@@ -196,7 +226,28 @@ def main():
     print("latency:", {k: round(v, 3) for k, v in
                        latency_percentiles(engine.states.values()).items()
                        if v is not None})
+    if engine.controller is not None:
+        print("controller:", engine.controller.snapshot())
+        print("decode retraces after warmup:",
+              engine.decode_retraces_after_warmup)
     print("sample:", out[0][:16])
+
+
+def run_with_metrics(engine, metrics_out=None, every: int = 16):
+    """Drive the engine to completion, appending a JSONL snapshot every
+    ``every`` steps (and one final snapshot) when ``metrics_out`` is
+    set."""
+    if metrics_out is None:
+        return engine.run()
+    steps = 0
+    with open(metrics_out, "a") as f:
+        while engine.scheduler.has_work():
+            engine.step()
+            steps += 1
+            if steps % every == 0:
+                f.write(json.dumps(engine.snapshot()) + "\n")
+        f.write(json.dumps(engine.snapshot()) + "\n")
+    return {rid: rs.tokens for rid, rs in engine.states.items()}
 
 
 if __name__ == "__main__":

@@ -4,7 +4,7 @@ rotary embeddings, activations.
 Every linear projection in the model zoo routes through ``dense()`` — the
 single integration point for WiSparse (repro.core.sparse_linear decides
 whether/how to sparsify based on the per-layer sparsity params ``sp`` and
-the active sparsity mode context).
+the explicit SparsityPolicy).
 """
 from __future__ import annotations
 
@@ -17,7 +17,7 @@ from repro.core import sparse_linear
 
 
 def dense(x, w, sp=None, row_parallel: bool = False, *, policy=None,
-          role=None, token_weights=sparse_linear._UNSET):
+          role=None, token_weights=None):
     """y = x @ W, optionally channel-sparsified per WiSparse.
 
     x: (..., n_in); w: (n_in, *out_dims); sp: per-layer sparsity params

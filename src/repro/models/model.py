@@ -11,12 +11,10 @@ Modes: "train" (full seq, no cache), "prefill" (full seq, emits caches),
 
 Execution state is explicit: ``forward`` takes a static
 ``SparsityPolicy`` (``repro.sparsity``) selecting the projection backend
-per role / per block range, a traced ``token_weights`` row-weight vector
-for the serving engine's shared saliency, and a static ``aligned`` flag
-for the single-DUS batched decode cache write.  Nothing on the forward
-path reads ambient thread-local state; legacy context callers are
-resolved once at the forward boundary by
-``sparse_linear.resolve_execution`` (a one-release deprecation shim).
+per role / per block range (``None`` = dense), a traced ``token_weights``
+row-weight vector for the serving engine's shared saliency, and a static
+``aligned`` flag for the single-DUS batched decode cache write.  Nothing
+on the forward path reads ambient thread-local state.
 """
 from __future__ import annotations
 
@@ -247,11 +245,9 @@ def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
     decode caches ride through xs/ys with update-only in-place writes.
 
     ``policy`` is the depth-resolved SparsityPolicy for this block (per-
-    block ranges already folded by ``run_groups``); None falls back to the
-    deprecated thread-local contexts via ``resolve_execution``."""
+    block ranges already folded by ``run_groups``); None runs dense."""
     if policy is None:
-        policy, token_weights = sparse_linear.resolve_execution(
-            policy, token_weights)
+        policy = sparse_linear.DENSE
     mixer, ffn = kind
     sp = sp or {}
     cache = cache or {}
@@ -449,9 +445,9 @@ def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
                    chunk-start offset, slot () pool slot, caches = the full
                    slot pool (serving engine's chunked prefill).
 
-    policy: static SparsityPolicy (None -> the deprecated thread-local
-    contexts, resolved once here).  token_weights: per-row weights for the
-    shared top-k saliency (serving active-slot / real-token masks).
+    policy: static SparsityPolicy (None runs dense).  token_weights:
+    per-row weights for the shared top-k saliency (serving active-slot /
+    real-token masks).
     aligned: static flag — all decode rows share one position, so cache
     writes collapse to a single dynamic_update_slice.
 
@@ -461,8 +457,8 @@ def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
       decode -> logits (B,V), caches updated
       chunk  -> logits (B,C,V) all chunk positions, pool caches updated
     """
-    policy, token_weights = sparse_linear.resolve_execution(
-        policy, token_weights)
+    if policy is None:
+        policy = sparse_linear.DENSE
     enc_out = None
     if cfg.family == "encdec" and frames is not None:
         enc_out = encode(params, frames, cfg, sp=sp_enc, remat=remat,

@@ -92,12 +92,8 @@ def moe_apply(p, x, cfg, sp=None, policy=None):
         s = sp.get(name)
         if s is None:
             def apply_dense(h):
-                if policy is not None:
-                    if policy.capture is not None:
-                        policy.capture.record(w, h)        # calibration hook
-                else:                # deprecated shim: legacy context only
-                    from repro.core import sparse_linear
-                    sparse_linear.record(w, h)
+                if policy is not None and policy.capture is not None:
+                    policy.capture.record(w, h)            # calibration hook
                 return jnp.einsum("becd,edf->becf", h, w)
             return apply_dense
         # per-expert WiSparse: vmap the sparse projection over experts.

@@ -5,16 +5,22 @@ the engine's whole lifetime), admits requests FIFO, interleaves chunked
 prefill with batched decode, and drives the paper's §5.1 recipe (dense
 first half of prefill, sparse decode) by deriving a static
 ``SparsityPolicy`` per phase (``policy.for_phase(...)``) — an explicit jit
-argument, so concurrent engines never share execution state."""
+argument, so concurrent engines never share execution state.
+
+Adaptive serving: hand the engine a calibrated ``PolicyLadder`` and an
+``SLOConfig`` and the ``AdaptiveController`` turns the sparsity level into
+a runtime resource — rung switches under load, retrace-free."""
+from repro.serving.controller import AdaptiveController, SLOConfig
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.kv_pool import SlotKVPool
-from repro.serving.metrics import EngineStats, percentile
+from repro.serving.metrics import EngineStats, RingBuffer, percentile
 from repro.serving.request import FinishReason, Request, RequestState, Status
 from repro.serving.scheduler import Scheduler
-from repro.sparsity import SparsityPolicy
+from repro.sparsity import PolicyLadder, SparsityPolicy
 
 __all__ = [
-    "Engine", "EngineConfig", "SlotKVPool", "EngineStats", "percentile",
-    "Request", "RequestState", "Status", "FinishReason", "Scheduler",
-    "SparsityPolicy",
+    "Engine", "EngineConfig", "SlotKVPool", "EngineStats", "RingBuffer",
+    "percentile", "Request", "RequestState", "Status", "FinishReason",
+    "Scheduler", "SparsityPolicy", "PolicyLadder", "AdaptiveController",
+    "SLOConfig",
 ]

@@ -1,0 +1,179 @@
+"""SLO-aware adaptive sparsity controller.
+
+The engine serves a :class:`repro.sparsity.PolicyLadder` — rung 0 is the
+densest (highest quality) policy, the last rung the sparsest (fastest).
+The controller closes the loop: after every decode step it reads the
+engine's load signals (per-request inter-token gaps = TPOT, queue depth;
+slot occupancy rides along as telemetry — FIFO admission saturates the
+pool before the queue grows, so queue depth subsumes it) against an
+:class:`SLOConfig` and decides which rung the *next* step should run.  Rung switches are retrace-free by construction:
+the engine precompiles every rung's phase executables at start, and a
+switch only changes which (static policy, traced sp tree) pair the next
+jit call uses.
+
+Stability machinery, because a bang-bang controller on a noisy latency
+signal will oscillate:
+
+* **EWMA smoothing** of the TPOT signal (reset on each switch so the old
+  rung's latencies don't bleed into the new rung's estimate);
+* **hysteresis** — escalate when the EWMA exceeds the target, but only
+  de-escalate when it is *comfortably* below (``target * (1 -
+  hysteresis)``) and the queue has drained;
+* **dwell time** — a minimum number of decode steps between switches, so
+  each rung's EWMA converges before it is judged;
+* **per-rung TPOT memory** — de-escalation to a rung whose last measured
+  EWMA violated the target is refused until that estimate expires
+  (``estimate_ttl`` steps), which prevents the classic down-up limit
+  cycle when the lower rung fundamentally cannot meet the SLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Service-level objectives + controller tuning.
+
+    tpot_p95      target p95 inter-token latency, seconds.  The EWMA of
+                  observed gaps is compared against it (an EWMA tracks
+                  the bulk of the distribution; the benchmark reports
+                  the true p95 against this same number).
+    max_queue     queued (unadmitted) requests beyond which the
+                  controller escalates regardless of latency.
+    ewma_alpha    smoothing factor for the TPOT EWMA.
+    hysteresis    de-escalation headroom: step down only when the EWMA
+                  is below ``tpot_p95 * (1 - hysteresis)``.
+    dwell         minimum decode steps between rung switches.
+    estimate_ttl  decode steps a per-rung TPOT estimate stays trusted
+                  when deciding whether a lower rung would hold the SLO.
+    """
+
+    tpot_p95: float
+    max_queue: int = 8
+    ewma_alpha: float = 0.25
+    hysteresis: float = 0.25
+    dwell: int = 12
+    estimate_ttl: int = 500
+
+    def __post_init__(self):
+        if self.tpot_p95 <= 0:
+            raise ValueError(f"tpot_p95 must be > 0, got {self.tpot_p95}")
+        if not 0.0 < self.ewma_alpha <= 1.0:
+            raise ValueError(
+                f"ewma_alpha must be in (0, 1], got {self.ewma_alpha}")
+        if not 0.0 <= self.hysteresis < 1.0:
+            raise ValueError(
+                f"hysteresis must be in [0, 1), got {self.hysteresis}")
+        if self.dwell < 1:
+            raise ValueError(f"dwell must be >= 1, got {self.dwell}")
+
+
+class AdaptiveController:
+    """Feedback controller mapping load signals to a ladder rung index.
+
+    Drive it with :meth:`update` once per decode step.  It is plain
+    python over plain numbers — the engine feeds it real measurements,
+    tests feed it synthetic traces."""
+
+    def __init__(self, num_rungs: int, slo: SLOConfig,
+                 initial_rung: int = 0):
+        if num_rungs < 1:
+            raise ValueError("controller needs at least one rung")
+        if not 0 <= initial_rung < num_rungs:
+            raise ValueError(
+                f"initial_rung {initial_rung} outside [0, {num_rungs})")
+        self.num_rungs = num_rungs
+        self.slo = slo
+        self.rung = initial_rung
+        self.step = 0
+        self._since_switch = slo.dwell        # free to act immediately
+        self._ewma: Optional[float] = None
+        # last converged EWMA seen at each rung + the step it was recorded
+        self._rung_est: List[Optional[Tuple[float, int]]] = \
+            [None] * num_rungs
+        self.residency = [0] * num_rungs      # decode steps spent per rung
+        self.transitions: List[Tuple[int, int, int, str]] = \
+            []                                # (step, from, to, reason)
+        self.last_occupancy = 0               # telemetry (see update())
+
+    # ------------------------------------------------------------------
+    @property
+    def tpot_ewma(self) -> Optional[float]:
+        return self._ewma
+
+    def _observe(self, gaps: Sequence[float]) -> None:
+        a = self.slo.ewma_alpha
+        for g in gaps:
+            self._ewma = g if self._ewma is None else \
+                (1 - a) * self._ewma + a * g
+        if self._ewma is not None:
+            self._rung_est[self.rung] = (self._ewma, self.step)
+
+    def _switch(self, to: int, reason: str) -> None:
+        self.transitions.append((self.step, self.rung, to, reason))
+        self.rung = to
+        self._since_switch = 0
+        self._ewma = None          # old rung's latencies don't carry over
+
+    def _lower_rung_would_hold(self) -> bool:
+        """Trust a fresh estimate of the rung below; with no (or a stale)
+        estimate, probing down is allowed — the queue is empty, so a
+        brief violation is cheap and refreshes the estimate."""
+        est = self._rung_est[self.rung - 1]
+        if est is None:
+            return True
+        value, at = est
+        if self.step - at > self.slo.estimate_ttl:
+            return True
+        return value <= self.slo.tpot_p95 * (1.0 - self.slo.hysteresis)
+
+    # ------------------------------------------------------------------
+    def update(self, gaps: Sequence[float], queue_depth: int,
+               occupancy: int = 0) -> int:
+        """One control tick (call after each decode step).
+
+        gaps: the step's observed inter-token gaps, seconds (one per
+        active request that emitted a non-first token).  Returns the rung
+        the next step should run.
+
+        occupancy is recorded for telemetry (:meth:`snapshot`) but does
+        not actuate: FIFO admission fills free slots before the queue can
+        grow, so whenever ``queue_depth`` exceeds the threshold the pool
+        is already saturated — queue depth subsumes occupancy as the
+        admission-pressure signal."""
+        self.last_occupancy = occupancy
+        self.step += 1
+        self.residency[self.rung] += 1
+        self._since_switch += 1
+        self._observe(gaps)
+        if self._since_switch < self.slo.dwell:
+            return self.rung
+
+        slo = self.slo
+        ewma = self._ewma
+        over_tpot = ewma is not None and ewma > slo.tpot_p95
+        over_queue = queue_depth > slo.max_queue
+        if (over_tpot or over_queue) and self.rung < self.num_rungs - 1:
+            self._switch(self.rung + 1,
+                         "tpot" if over_tpot else "queue")
+        elif (self.rung > 0 and queue_depth == 0
+              and ewma is not None
+              and ewma < slo.tpot_p95 * (1.0 - slo.hysteresis)
+              and self._lower_rung_would_hold()):
+            self._switch(self.rung - 1, "idle")
+        return self.rung
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Controller state for metrics/JSONL export."""
+        total = max(1, sum(self.residency))
+        return {
+            "rung": self.rung,
+            "tpot_ewma_s": None if self._ewma is None
+            else round(self._ewma, 6),
+            "occupancy": self.last_occupancy,
+            "switches": len(self.transitions),
+            "rung_residency": [round(r / total, 4) for r in self.residency],
+        }

@@ -11,6 +11,15 @@ its executable, and two engines with different policies can run
 interleaved (or on separate threads) without ever sharing or leaking a
 trace.
 
+Adaptive serving: instead of one policy the engine can serve a
+:class:`repro.sparsity.PolicyLadder` — a calibrated family of policies at
+ascending sparsity budgets.  With an :class:`SLOConfig` an
+:class:`AdaptiveController` switches the decode/prefill-sparse phases
+between rungs as load changes.  Every rung's executables are precompiled
+at engine start, and because compilation is keyed on the static (phase,
+policy) pair while rung sp trees share one schema, a rung switch is
+retrace-free (``decode_retraces_after_warmup`` asserts this).
+
 Prefill strategies:
   * "chunked": fixed-size chunks written straight into the pool slot via
     ``mode="chunk"`` forwards (jit-stable across prompt lengths; plain
@@ -31,12 +40,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import api
+from repro.serving.controller import AdaptiveController, SLOConfig
 from repro.serving.kv_pool import SlotKVPool
-from repro.serving.metrics import EngineStats
+from repro.serving.metrics import EngineStats, percentile
 from repro.serving.request import (FinishReason, Request, RequestState,
                                    Status)
 from repro.serving.scheduler import Scheduler
-from repro.sparsity import SparsityPolicy
+from repro.sparsity import PolicyLadder, SparsityPolicy
 
 _CHUNKABLE_MIXERS = ("attn", "global")
 
@@ -44,55 +54,35 @@ _CHUNKABLE_MIXERS = ("attn", "global")
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """``policy`` is the engine's execution policy (validated eagerly at
-    construction — a typo'd backend fails here with the list of valid
-    backends, not deep inside a jit trace of ``project()``).
+    construction; ``None`` means dense).  Ladder serving ignores it — the
+    rung policies come from the ladder passed to :class:`Engine`.
 
-    ``mode``/``k_max_frac`` are the deprecated string-mode constructor
-    args, kept one release: they build a uniform policy.  Passing both
-    ``policy`` and ``mode`` is an error."""
+    ``slo`` enables the adaptive controller (requires a ladder);
+    ``initial_rung`` is the rung a ladder engine starts on (and stays on
+    when no SLO is configured — a pinned rung)."""
     max_slots: int = 8
     max_len: int = 512
     prefill_chunk: int = 32
     policy: Optional[SparsityPolicy] = None
-    mode: Optional[str] = None       # deprecated: uniform backend string
-    k_max_frac: Optional[float] = None  # deprecated: goes with ``mode``
     prefill_dense_frac: float = 0.5  # §5.1: first fraction of prompt dense
     prefill_strategy: str = "auto"   # auto|chunked|whole
     eos_id: Optional[int] = None     # default per-request EOS
+    slo: Optional[SLOConfig] = None  # adaptive serving objectives
+    initial_rung: int = 0            # ladder rung at engine start
 
     def __post_init__(self):
         pol = self.policy
-        if pol is not None:
-            if not isinstance(pol, SparsityPolicy):
-                raise TypeError(
-                    f"policy must be a SparsityPolicy, got {type(pol)!r}")
-            # mode/k_max_frac matching the policy are tolerated so
-            # dataclasses.replace() on a constructed (back-filled) config
-            # keeps working; genuinely conflicting values are an error,
-            # never a silent discard
-            if (self.mode is not None and self.mode != pol.backend) or \
-                    (self.k_max_frac is not None
-                     and self.k_max_frac != pol.k_max_frac):
-                raise ValueError(
-                    "conflicting policy= and deprecated mode=/k_max_frac= "
-                    "(to change the policy of an existing EngineConfig, "
-                    "also pass mode=None, k_max_frac=None)")
-        else:
-            if self.mode is not None or self.k_max_frac is not None:
-                import warnings
-                warnings.warn(
-                    "EngineConfig(mode=..., k_max_frac=...) is deprecated; "
-                    "pass policy=SparsityPolicy.uniform(...) instead",
-                    DeprecationWarning, stacklevel=3)
-            # deprecated shim: uniform policy from the mode string —
-            # SparsityPolicy validates the backend eagerly here
-            pol = SparsityPolicy.uniform(
-                self.mode or "off",
-                k_max_frac=1.0 if self.k_max_frac is None else self.k_max_frac)
+        if pol is None:
+            pol = SparsityPolicy.dense()
+        elif not isinstance(pol, SparsityPolicy):
+            raise TypeError(
+                f"policy must be a SparsityPolicy, got {type(pol)!r}")
         object.__setattr__(self, "policy", pol)
-        # keep the legacy field readable for introspection/logs
-        object.__setattr__(self, "mode", pol.backend)
-        object.__setattr__(self, "k_max_frac", pol.k_max_frac)
+        if self.slo is not None and not isinstance(self.slo, SLOConfig):
+            raise TypeError(f"slo must be an SLOConfig, got {type(self.slo)!r}")
+        if self.initial_rung < 0:
+            raise ValueError(
+                f"initial_rung must be >= 0, got {self.initial_rung}")
         if not 0 <= self.prefill_dense_frac <= 1:
             raise ValueError(
                 f"prefill_dense_frac must be in [0, 1], "
@@ -104,20 +94,50 @@ class EngineConfig:
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
-                 sp=None):
+                 sp=None, *, ladder: Optional[PolicyLadder] = None):
         if cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
                 f"serving engine supports token-only models, not {cfg.family}")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
-        self.sp = sp
-        # per-phase static policies, derived once so equal phases reuse
-        # equal (hash-equal) jit cache keys
-        self.policy = ecfg.policy
-        self._pol_decode = self.policy.for_phase("decode")
-        self._pol_prefill_sparse = self.policy.for_phase("prefill_sparse")
-        self._pol_prefill_dense = self.policy.for_phase("prefill_dense")
+        self.ladder = ladder
+        if ladder is not None:
+            if not isinstance(ladder, PolicyLadder):
+                raise TypeError(
+                    f"ladder must be a PolicyLadder, got {type(ladder)!r}")
+            if sp is not None:
+                raise ValueError(
+                    "pass either a ladder (which carries per-rung sp "
+                    "trees) or a flat sp tree, not both")
+            if not 0 <= ecfg.initial_rung < len(ladder):
+                raise ValueError(
+                    f"initial_rung {ecfg.initial_rung} outside the "
+                    f"{len(ladder)}-rung ladder")
+            self._rung_policies = list(ladder.policies)
+            self._rung_sp = list(ladder.sps)
+        else:
+            if ecfg.slo is not None:
+                raise ValueError(
+                    "EngineConfig.slo needs a PolicyLadder: the controller "
+                    "switches rungs, a single policy has none")
+            if ecfg.initial_rung != 0:
+                raise ValueError(
+                    f"initial_rung={ecfg.initial_rung} needs a "
+                    "PolicyLadder; a fixed-policy engine has only rung 0")
+            self._rung_policies = [ecfg.policy]
+            self._rung_sp = [sp]
+        # per-rung per-phase static policies, derived once so equal
+        # phases reuse equal (hash-equal) jit cache keys
+        self._rung_phases = [
+            (pol.for_phase("prefill_dense"), pol.for_phase("prefill_sparse"),
+             pol.for_phase("decode")) for pol in self._rung_policies]
+        self._rung = ecfg.initial_rung if ladder is not None else 0
+        self.controller = None
+        if ecfg.slo is not None:
+            self.controller = AdaptiveController(
+                len(self._rung_policies), ecfg.slo,
+                initial_rung=self._rung)
         # the pool holds one chunk of slack past max_len: pad tokens of a
         # request's final prefill chunk land in [max_len, pool_len-1), and
         # the last position is scratch — inactive slots in a decode step
@@ -133,6 +153,7 @@ class Engine:
         self._next_id = 0
         self._decode_traces = 0      # python-side retrace counter
         self._chunk_traces = 0
+        self._warm_traces: Optional[int] = None
 
         mixers = {m for m, _ in cfg.layer_kinds()}
         chunkable = mixers <= set(_CHUNKABLE_MIXERS)
@@ -171,6 +192,79 @@ class Engine:
         self._cstep = jax.jit(_chunk, static_argnames=("policy",),
                               donate_argnums=(4,))
         self._pstep = jax.jit(_prefill, static_argnames=("policy",))
+
+        if self.controller is not None:
+            self.warmup()
+
+    # ------------------------------------------------------------------
+    # ladder rungs
+    # ------------------------------------------------------------------
+    @property
+    def rung(self) -> int:
+        return self._rung
+
+    @property
+    def num_rungs(self) -> int:
+        return len(self._rung_policies)
+
+    @property
+    def policy(self) -> SparsityPolicy:
+        """The currently active rung's policy."""
+        return self._rung_policies[self._rung]
+
+    @property
+    def sp(self):
+        return self._rung_sp[self._rung]
+
+    def set_rung(self, i: int) -> None:
+        if not 0 <= i < self.num_rungs:
+            raise ValueError(f"rung {i} outside [0, {self.num_rungs})")
+        self._rung = i
+
+    def warmup(self) -> None:
+        """Precompile every rung's decode (and chunked-prefill) phase
+        executables, then zero the post-warmup retrace baseline.  Only
+        valid on an idle engine: the warmup chunk writes garbage into
+        slot 0's cache prefix, which is harmless *before* any admission
+        (the slot's real prefill overwrites it) but would corrupt a live
+        request.  Rung switches after this never trace
+        (``decode_retraces_after_warmup`` stays 0) — except whole-prompt
+        prefill executables, which are keyed on prompt length and cannot
+        be precompiled here; on "whole"-strategy archs (SSM/local
+        mixers) a rung switch can still compile a fresh prefill, decode
+        stays retrace-free."""
+        if self.scheduler.has_work() or self.pool.num_occupied:
+            raise RuntimeError(
+                "warmup() on a busy engine would corrupt live KV state; "
+                "call it before submitting requests")
+        S = self.ecfg.max_slots
+        C = self.ecfg.prefill_chunk
+        tokens = jnp.zeros((S,), jnp.int32)
+        positions = jnp.full((S,), self.pool_len - 1, jnp.int32)
+        inactive = jnp.zeros((S,), jnp.float32)
+        for (pd, ps, dec), sp in zip(self._rung_phases, self._rung_sp):
+            logits, self.pool.caches = self._dstep(
+                self.params, tokens, positions, self.pool.caches, sp,
+                inactive, policy=dec)
+            logits.block_until_ready()
+            if self.prefill_strategy == "chunked":
+                for pol in (pd, ps):
+                    logits, self.pool.caches = self._cstep(
+                        self.params, jnp.zeros((1, C), jnp.int32),
+                        jnp.zeros((1,), jnp.int32), jnp.int32(0),
+                        self.pool.caches, sp, jnp.zeros((C,), jnp.float32),
+                        policy=pol)
+                    logits.block_until_ready()
+        self._warm_traces = (self._decode_traces, self._chunk_traces)
+
+    @property
+    def decode_retraces_after_warmup(self) -> Optional[int]:
+        """Decode (re)traces since :meth:`warmup`; None before warmup.
+        The adaptive-serving invariant is that this stays 0 no matter how
+        often the controller switches rungs."""
+        if self._warm_traces is None:
+            return None
+        return self._decode_traces - self._warm_traces[0]
 
     # ------------------------------------------------------------------
     # submission
@@ -221,9 +315,15 @@ class Engine:
     # ------------------------------------------------------------------
     def _phase_policy(self, offset: int, prompt_len: int) -> SparsityPolicy:
         """§5.1: chunks starting before the dense boundary run dense."""
+        pd, ps, _ = self._rung_phases[self._rung]
         dense_end = int(np.ceil(prompt_len * self.ecfg.prefill_dense_frac))
-        return self._pol_prefill_dense if offset < dense_end \
-            else self._pol_prefill_sparse
+        return pd if offset < dense_end else ps
+
+    def _emit(self, rs: RequestState, token: int) -> None:
+        rs.emit(token)
+        if self.ladder is not None:
+            rs.token_rungs.append(self._rung)
+        self.stats.decode_tokens += 1
 
     def _prefill_chunk(self, rs: RequestState) -> None:
         C = self.ecfg.prefill_chunk
@@ -241,7 +341,9 @@ class Engine:
             jnp.int32(rs.slot), self.pool.caches, self.sp,
             jnp.asarray(weights), policy=policy)
         logits.block_until_ready()
-        self.stats.prefill_time += self._now() - t0
+        dt = self._now() - t0
+        self.stats.prefill_time += dt
+        self.stats.prefill_step_s.append(dt)
         self.stats.prefill_chunks += 1
         self.stats.prefill_tokens += real
         rs.next_offset = off + real
@@ -256,13 +358,15 @@ class Engine:
         # whole-prompt prefill can't split tokens by phase: any dense
         # fraction > 0 makes the whole prompt dense (the conservative
         # accuracy choice, matching the legacy serve path)
-        policy = self._pol_prefill_sparse \
-            if self.ecfg.prefill_dense_frac <= 0.0 else self._pol_prefill_dense
+        pd, ps, _ = self._rung_phases[self._rung]
+        policy = ps if self.ecfg.prefill_dense_frac <= 0.0 else pd
         t0 = self._now()
         logits, caches = self._pstep(self.params, jnp.asarray(tokens),
                                      self.sp, policy=policy)
         logits.block_until_ready()
-        self.stats.prefill_time += self._now() - t0
+        dt = self._now() - t0
+        self.stats.prefill_time += dt
+        self.stats.prefill_step_s.append(dt)
         self.stats.prefill_chunks += 1
         self.stats.prefill_tokens += P * len(group)
         first = np.asarray(jnp.argmax(logits, axis=-1))
@@ -273,8 +377,8 @@ class Engine:
 
     def _start_decode(self, rs: RequestState, first_token: int) -> None:
         rs.first_token_time = self._now()
-        rs.emit(first_token)
-        self.stats.decode_tokens += 1
+        rs.last_token_time = rs.first_token_time
+        self._emit(rs, first_token)
         self.scheduler.to_decode(rs)
         self._maybe_finish(rs, first_token)
 
@@ -291,20 +395,33 @@ class Engine:
             tokens[slot] = rs.last_token
             positions[slot] = rs.position
             active[slot] = 1.0
+        _, _, dec_policy = self._rung_phases[self._rung]
         t0 = self._now()
         logits, self.pool.caches = self._dstep(
             self.params, jnp.asarray(tokens), jnp.asarray(positions),
             self.pool.caches, self.sp, jnp.asarray(active),
-            policy=self._pol_decode)
+            policy=dec_policy)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        self.stats.decode_time += self._now() - t0
+        t1 = self._now()
+        self.stats.decode_time += t1 - t0
+        self.stats.decode_step_s.append(t1 - t0)
         self.stats.decode_steps += 1
+        gaps = []
         for slot, rs in list(decoding.items()):
             tok = int(nxt[slot])
-            rs.emit(tok)
+            if rs.last_token_time is not None:
+                gaps.append(t1 - rs.last_token_time)
+                self.stats.tpot_s.append(gaps[-1])
+            rs.last_token_time = t1
+            self._emit(rs, tok)
             self.pool.lengths[slot] += 1
-            self.stats.decode_tokens += 1
             self._maybe_finish(rs, tok)
+        if self.controller is not None:
+            new_rung = self.controller.update(
+                gaps, queue_depth=len(self.scheduler.queue),
+                occupancy=self.pool.num_occupied)
+            if new_rung != self._rung:
+                self.set_rung(new_rung)
 
     def _maybe_finish(self, rs: RequestState, token: int) -> None:
         req = rs.request
@@ -318,6 +435,30 @@ class Engine:
         self.scheduler.finish(rs)
         self.pool.free(rs.slot)
         self.stats.finished += 1
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """One metrics record (JSONL-friendly): engine load, latency
+        signals and — under a controller — rung state."""
+        s = self.stats
+        out = {
+            "t": self._now(),
+            "queue_depth": len(self.scheduler.queue),
+            "occupancy": self.pool.num_occupied,
+            "submitted": s.submitted,
+            "finished": s.finished,
+            "decode_steps": s.decode_steps,
+            "decode_tokens": s.decode_tokens,
+            "decode_tps": round(s.decode_tps, 1),
+            "tpot_p95_s": None if not s.tpot_s
+            else round(percentile(s.tpot_s, 95), 6),
+        }
+        if self.ladder is not None:
+            out["rung"] = self._rung
+            out["budget"] = self.ladder.budgets[self._rung]
+        if self.controller is not None:
+            out.update(self.controller.snapshot())
+        return out
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -1,11 +1,71 @@
 """Engine statistics: per-phase step counts/latencies, throughput, queue
-depth and slot occupancy, plus request-latency percentiles."""
+depth and slot occupancy, request-latency percentiles, and the decode
+inter-token (TPOT) signal the adaptive controller steers on.
+
+Every per-sample series is a fixed-capacity :class:`RingBuffer` — a
+long-running server samples queue depth and step latencies millions of
+times, and the old unbounded lists grew without limit.  The ring keeps
+the most recent window for percentiles while tracking the *whole-run*
+count and sum, so the summary means are exact (and identical to the old
+list-based output) at any run length."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, Optional
 
 from repro.serving.request import RequestState
+
+
+class RingBuffer:
+    """Append-only numeric series keeping the last ``capacity`` samples
+    plus exact whole-run ``count``/``total`` aggregates.
+
+    Iteration yields the retained window in insertion order; for runs
+    shorter than the capacity that is the full series, so downstream
+    summaries are unchanged by the capping."""
+
+    __slots__ = ("capacity", "_buf", "_start", "count", "total")
+
+    def __init__(self, capacity: int = 4096):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = capacity
+        self._buf = []
+        self._start = 0          # index of the oldest retained sample
+        self.count = 0           # whole-run samples seen
+        self.total = 0.0         # whole-run sum
+
+    def append(self, v) -> None:
+        v = float(v)
+        if len(self._buf) < self.capacity:
+            self._buf.append(v)
+        else:
+            self._buf[self._start] = v
+            self._start = (self._start + 1) % self.capacity
+        self.count += 1
+        self.total += v
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self):
+        n = len(self._buf)
+        for i in range(n):
+            yield self._buf[(self._start + i) % n]
+
+    def __bool__(self) -> bool:
+        return bool(self._buf)
+
+    @property
+    def mean(self) -> float:
+        """Whole-run mean (exact, not windowed)."""
+        return self.total / self.count if self.count else 0.0
+
+    @property
+    def last(self) -> Optional[float]:
+        if not self._buf:
+            return None
+        return self._buf[(self._start - 1) % len(self._buf)]
 
 
 def percentile(values: Iterable[float], p: float) -> float:
@@ -27,8 +87,16 @@ class EngineStats:
     decode_tokens: int = 0                   # generated tokens (incl. first)
     prefill_time: float = 0.0                # seconds in prefill steps
     decode_time: float = 0.0                 # seconds in decode steps
-    queue_depth: List[int] = dataclasses.field(default_factory=list)
-    occupancy: List[int] = dataclasses.field(default_factory=list)
+    queue_depth: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    occupancy: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    # per-phase step latencies (seconds per jitted step)
+    decode_step_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    prefill_step_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    # per-request inter-token gaps (seconds between consecutive emitted
+    # tokens — the true TPOT signal: it includes interleaved prefill work,
+    # so it rises under admission pressure even when the batched decode
+    # step itself is constant-time)
+    tpot_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
 
     def sample(self, queue_depth: int, occupied_slots: int) -> None:
         self.queue_depth.append(queue_depth)
@@ -43,10 +111,11 @@ class EngineStats:
         return (self.prefill_tokens / self.prefill_time
                 if self.prefill_time else 0.0)
 
+    def tpot_percentile(self, p: float) -> float:
+        return percentile(self.tpot_s, p)
+
     def summary(self) -> Dict[str, float]:
-        occ = self.occupancy or [0]
-        q = self.queue_depth or [0]
-        return {
+        out = {
             "submitted": self.submitted,
             "finished": self.finished,
             "prefill_chunks": self.prefill_chunks,
@@ -57,9 +126,13 @@ class EngineStats:
             "decode_time_s": round(self.decode_time, 4),
             "prefill_tps": round(self.prefill_tps, 1),
             "decode_tps": round(self.decode_tps, 1),
-            "mean_occupancy": round(sum(occ) / len(occ), 2),
-            "mean_queue_depth": round(sum(q) / len(q), 2),
+            "mean_occupancy": round(self.occupancy.mean, 2),
+            "mean_queue_depth": round(self.queue_depth.mean, 2),
         }
+        if self.tpot_s:
+            out["tpot_p50_s"] = round(self.tpot_percentile(50), 5)
+            out["tpot_p95_s"] = round(self.tpot_percentile(95), 5)
+        return out
 
 
 def latency_percentiles(states: Iterable[RequestState],

@@ -51,7 +51,11 @@ class RequestState:
     last_token: int = -1
     finish_reason: Optional[FinishReason] = None
     first_token_time: Optional[float] = None
+    last_token_time: Optional[float] = None   # TPOT: previous emit wallclock
     finish_time: Optional[float] = None
+    # ladder serving: rung index active when each token was emitted
+    # (parallel to ``tokens``; stays empty on fixed-policy engines)
+    token_rungs: List[int] = dataclasses.field(default_factory=list)
     # streaming hook: called as on_token(request_id, token) per new token
     on_token: Optional[Callable[[int, int], None]] = None
 

@@ -1,8 +1,10 @@
 """First-class sparsity policies: the static execution config for WiSparse
-projections, threaded explicitly through the model/serving stack instead of
-ambient thread-local mode state."""
+projections, threaded explicitly through the model/serving stack — plus the
+calibrated policy *ladder* that makes the sparsity level a runtime resource
+(``repro.serving.controller`` switches rungs against SLOs)."""
+from repro.sparsity.ladder import PolicyLadder, calibrate_ladder
 from repro.sparsity.policy import (ARTIFACT_VERSION, PHASES, VALID_BACKENDS,
                                    CaptureSink, SparsityPolicy)
 
 __all__ = ["SparsityPolicy", "CaptureSink", "VALID_BACKENDS", "PHASES",
-           "ARTIFACT_VERSION"]
+           "ARTIFACT_VERSION", "PolicyLadder", "calibrate_ladder"]

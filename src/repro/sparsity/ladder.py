@@ -1,0 +1,233 @@
+"""Policy ladder: a monotone family of calibrated sparsity policies.
+
+WiSparse's mixed-granularity allocation (paper §4.3) turns a global
+sparsity budget into a quality-ranked execution policy.  A
+:class:`PolicyLadder` calibrates that trade-off at *several* budgets at
+once — rung 0 is the densest (usually fully dense), the last rung the
+sparsest — so a serving controller (``repro.serving.controller``) can
+treat sparsity as a runtime resource and move between rungs as load
+changes.
+
+Calibration cost stays near a single cold search: each rung's
+evolutionary block allocation warm-starts from the adjacent rung's block
+ratios (uniformly shifted to the new budget) with the previous ratios as
+a per-block floor, and its greedy intra-block stage starts from the
+previous rung's per-linear ratios.  The floor also *guarantees* the
+ladder invariant: a higher-budget rung never keeps more channels than a
+lower one in any block.
+
+The whole ladder ships as one self-contained versioned npz artifact
+(policy-artifact v2, ``kind="ladder"``): rung policies in the JSON meta,
+rung 0's full sp tree plus per-rung deltas for the calibrated leaves
+(``alpha``/``tau``/``keep_frac``) — the weight-column norms ``g`` are a
+property of the checkpoint, identical across rungs, and stored once.  A
+serving fleet loads the ladder without the model checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sparsity.policy import (ARTIFACT_VERSION, SparsityPolicy,
+                                   _flatten_sp, _read_artifact,
+                                   _unflatten_sp)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyLadder:
+    """Ordered rungs of (budget, policy, stacked sp tree), densest first.
+
+    budgets       global prune-ratio targets, strictly ascending
+    policies      one :class:`SparsityPolicy` per rung
+    sps           one stacked sp tree per rung (rungs share ``g`` arrays)
+    block_ratios  per-rung per-block prune ratios from calibration
+                  (None for uniform/uncalibrated ladders)
+    """
+
+    budgets: Tuple[float, ...]
+    policies: Tuple[SparsityPolicy, ...]
+    sps: tuple
+    block_ratios: Optional[tuple] = None
+
+    def __post_init__(self):
+        for f in ("budgets", "policies", "sps"):
+            v = getattr(self, f)
+            if not isinstance(v, tuple):
+                object.__setattr__(self, f, tuple(v))
+        if self.block_ratios is not None and \
+                not isinstance(self.block_ratios, tuple):
+            object.__setattr__(self, "block_ratios",
+                               tuple(self.block_ratios))
+        n = len(self.budgets)
+        if n == 0:
+            raise ValueError("a ladder needs at least one rung")
+        if len(self.policies) != n or len(self.sps) != n:
+            raise ValueError(
+                f"ladder rung count mismatch: {n} budgets, "
+                f"{len(self.policies)} policies, {len(self.sps)} sp trees")
+        for a, b in zip(self.budgets, self.budgets[1:]):
+            if not a < b:
+                raise ValueError(
+                    f"ladder budgets must be strictly ascending, got "
+                    f"{self.budgets}")
+        for i, pol in enumerate(self.policies):
+            if not isinstance(pol, SparsityPolicy):
+                raise TypeError(
+                    f"rung {i} policy must be a SparsityPolicy, "
+                    f"got {type(pol)!r}")
+
+    def __len__(self) -> int:
+        return len(self.budgets)
+
+    def rung(self, i: int):
+        """(policy, sp) for rung ``i`` (0 = densest)."""
+        return self.policies[i], self.sps[i]
+
+    # ------------------------------------------------------------------
+    # builders
+    # ------------------------------------------------------------------
+    @classmethod
+    def uniform(cls, params, cfg, budgets: Sequence[float] = (0.0, 0.5, 0.7),
+                backend: str = "topk_shared", **kw) -> "PolicyLadder":
+        """Uncalibrated ladder: uniform keep ratios per rung over the
+        default sp schema — sparsity as a pure speed dial, no offline
+        calibration (rung 0 at budget 0.0 runs dense).  The calibrated
+        path is :func:`calibrate_ladder`."""
+        from repro.core.sp_schema import default_sp_stacked
+        budgets = tuple(float(b) for b in budgets)
+        policies, sps = [], []
+        for b in budgets:
+            sps.append(default_sp_stacked(params, cfg, keep_frac=1.0 - b))
+            if b <= 0.0:
+                policies.append(SparsityPolicy.dense(**kw))
+            else:
+                policies.append(SparsityPolicy.uniform(
+                    backend, k_max_frac=max(1.0 - b, 1e-6), **kw))
+        return cls(budgets=budgets, policies=tuple(policies),
+                   sps=tuple(sps))
+
+    # ------------------------------------------------------------------
+    # self-contained artifact (v2, kind="ladder")
+    # ------------------------------------------------------------------
+    def save(self, path: str) -> None:
+        """One versioned npz for the whole ladder.  Rung 0's sp tree is
+        stored in full; later rungs store only the leaves that differ
+        from rung 0 (in practice the calibrated ``alpha``/``tau``/
+        ``keep_frac`` scalars — the ``g`` norms are shared)."""
+        meta = {
+            "version": ARTIFACT_VERSION,
+            "kind": "ladder",
+            "budgets": list(self.budgets),
+            "policies": [p.to_dict() for p in self.policies],
+            "block_ratios": None if self.block_ratios is None else
+            [np.asarray(r, float).tolist() for r in self.block_ratios],
+        }
+        arrays = {}
+        base = _flatten_sp(self.sps[0])
+        for k, v in base.items():
+            arrays[f"sp0/{k}"] = v
+        for i, sp in enumerate(self.sps[1:], start=1):
+            flat = _flatten_sp(sp)
+            if flat.keys() != base.keys():
+                raise ValueError(
+                    f"rung {i} sp tree structure differs from rung 0; "
+                    "ladder rungs must share one sp schema")
+            for k, v in flat.items():
+                if not np.array_equal(v, base[k]):
+                    arrays[f"sp{i}/{k}"] = v
+        with open(path, "wb") as f:
+            np.savez(f, __meta__=np.array(json.dumps(meta)), **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "PolicyLadder":
+        """Rebuild a ladder from its artifact — no checkpoint needed."""
+        meta, z = _read_artifact(path)
+        if meta.get("kind") != "ladder":
+            raise ValueError(
+                f"{path} is a {meta.get('kind', 'policy')!r} artifact; "
+                "load it with repro.sparsity.SparsityPolicy.load")
+        policies = tuple(SparsityPolicy.from_dict(p)
+                         for p in meta["policies"])
+        base = {k[len("sp0/"):]: z[k] for k in z.files
+                if k.startswith("sp0/")}
+        sps = [_unflatten_sp(base)]
+        for i in range(1, len(policies)):
+            flat = dict(base)
+            pre = f"sp{i}/"
+            for k in z.files:
+                if k.startswith(pre):
+                    flat[k[len(pre):]] = z[k]
+            sps.append(_unflatten_sp(flat))
+        br = meta.get("block_ratios")
+        return cls(budgets=tuple(meta["budgets"]), policies=policies,
+                   sps=tuple(sps),
+                   block_ratios=None if br is None else
+                   tuple(np.asarray(r) for r in br))
+
+
+def calibrate_ladder(params, cfg, calib_batch,
+                     budgets: Sequence[float] = (0.0, 0.3, 0.5, 0.7), *,
+                     backend: str = "topk_shared",
+                     sensitive_backend: Optional[str] = None,
+                     sensitive_frac: float = 0.25,
+                     evo=None, warm_generations: Optional[int] = None,
+                     delta: float = 0.05, coord_passes: int = 0,
+                     ctx=None, log=None) -> PolicyLadder:
+    """Calibrate a monotone policy ladder at several global budgets.
+
+    The calibration context is built once; the first sparse rung runs the
+    full evolutionary search and every later rung warm-starts from the
+    previous rung's plan with ``warm_generations`` generations (default:
+    a quarter of the cold budget).  Budget 0.0 is the dense rung: no
+    search, alphas 0, keep 1 — but the *same* sp tree schema, so a
+    serving engine can swap rung sp trees without retracing.
+    """
+    from repro.core import unstacked as U
+    from repro.core.allocation import EvoConfig
+    from repro.core.calibration import build_context
+    from repro.core.pipeline import run_pipeline
+
+    log = log or (lambda *_: None)
+    evo = evo or EvoConfig()
+    budgets = tuple(float(b) for b in budgets)
+    if any(b < 0.0 or b >= 1.0 for b in budgets):
+        raise ValueError(f"ladder budgets must be in [0, 1), got {budgets}")
+
+    if ctx is None:
+        log("building calibration context ...")
+        ctx = build_context(params, cfg, calib_batch)
+
+    policies, sps, block_ratios = [], [], []
+    prev_plan = None
+    for i, b in enumerate(sorted(budgets)):
+        if b <= 0.0:
+            log(f"rung {i}: dense (budget 0)")
+            ratios = {(d, p): 1.0 for d in range(ctx.num_blocks)
+                      for p in ctx.keys_by_depth[d]}
+            sp = U.restack_sp(cfg, ctx.make_sp({}, ratios))
+            policies.append(SparsityPolicy.dense())
+            sps.append(sp)
+            block_ratios.append(np.zeros(ctx.num_blocks))
+            continue
+        gens = None if prev_plan is None else (
+            warm_generations if warm_generations is not None
+            else max(1, evo.generations // 4))
+        log(f"rung {i}: budget {b:.2f} "
+            f"({'warm, %d gens' % gens if gens is not None else 'cold'})")
+        plan = run_pipeline(params, cfg, calib_batch, b, evo=evo,
+                            delta=delta, coord_passes=coord_passes,
+                            log=log, ctx=ctx, warm_start=prev_plan,
+                            generations=gens)
+        policies.append(plan.to_policy(
+            backend=backend, sensitive_backend=sensitive_backend,
+            sensitive_frac=sensitive_frac))
+        sps.append(plan.stacked_sp)
+        block_ratios.append(np.asarray(plan.block_ratios, float))
+        prev_plan = plan
+
+    return PolicyLadder(budgets=tuple(sorted(budgets)),
+                        policies=tuple(policies), sps=tuple(sps),
+                        block_ratios=tuple(block_ratios))

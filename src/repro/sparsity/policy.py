@@ -50,7 +50,11 @@ VALID_BACKENDS = ("off", "mask", "topk_shared", "topk_block", "pallas")
 # sparse later prefill chunks and all decode steps)
 PHASES = ("prefill_dense", "prefill_sparse", "decode")
 
-ARTIFACT_VERSION = 1
+# v1: single policy + sp tree.  v2 adds a "kind" discriminator so one
+# format carries either a single policy ("policy") or a whole calibrated
+# ladder of rungs with shared sp trees ("ladder", repro.sparsity.ladder).
+ARTIFACT_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 class CaptureSink:
@@ -256,15 +260,8 @@ class SparsityPolicy:
         offline ships to a serving fleet without the model checkpoint."""
         meta = {
             "version": ARTIFACT_VERSION,
-            "policy": {
-                "backend": self.backend,
-                "k_max_frac": self.k_max_frac,
-                "block": self.block,
-                "interpret": self.interpret,
-                "role_backends": [list(e) for e in self.role_backends],
-                "block_backends": [list(e) for e in self.block_backends],
-                "dense_phases": list(self.dense_phases),
-            },
+            "kind": "policy",
+            "policy": self.to_dict(),
         }
         arrays = {}
         if sp is not None:
@@ -272,28 +269,54 @@ class SparsityPolicy:
         with open(path, "wb") as f:
             np.savez(f, __meta__=np.array(json.dumps(meta)), **arrays)
 
+    def to_dict(self) -> dict:
+        """JSON-serializable policy config (artifact meta form)."""
+        return {
+            "backend": self.backend,
+            "k_max_frac": self.k_max_frac,
+            "block": self.block,
+            "interpret": self.interpret,
+            "role_backends": [list(e) for e in self.role_backends],
+            "block_backends": [list(e) for e in self.block_backends],
+            "dense_phases": list(self.dense_phases),
+        }
+
     @classmethod
-    def load(cls, path: str):
-        """Load a saved artifact -> ``(policy, sp_or_None)``.  Needs no
-        model params: the sp tree (g included) comes from the file."""
-        z = np.load(path)
-        if "__meta__" not in z.files:
-            raise ValueError(f"{path} is not a SparsityPolicy artifact")
-        meta = json.loads(str(z["__meta__"][()]))
-        version = meta.get("version")
-        if version != ARTIFACT_VERSION:
-            raise ValueError(
-                f"unsupported SparsityPolicy artifact version {version!r} "
-                f"(this build reads version {ARTIFACT_VERSION})")
-        p = meta["policy"]
-        pol = cls(
+    def from_dict(cls, p: dict) -> "SparsityPolicy":
+        return cls(
             backend=p["backend"], k_max_frac=p["k_max_frac"],
             block=p["block"], interpret=p["interpret"],
             role_backends=tuple(tuple(e) for e in p["role_backends"]),
             block_backends=tuple(tuple(e) for e in p["block_backends"]),
             dense_phases=tuple(p["dense_phases"]))
+
+    @classmethod
+    def load(cls, path: str):
+        """Load a saved artifact -> ``(policy, sp_or_None)``.  Needs no
+        model params: the sp tree (g included) comes from the file."""
+        meta, z = _read_artifact(path)
+        if meta.get("kind", "policy") != "policy":
+            raise ValueError(
+                f"{path} is a {meta['kind']!r} artifact; load it with "
+                "repro.sparsity.PolicyLadder.load")
+        pol = cls.from_dict(meta["policy"])
         flat = {k[len("sp/"):]: z[k] for k in z.files if k.startswith("sp/")}
         return pol, (_unflatten_sp(flat) if flat else None)
+
+
+def _read_artifact(path: str):
+    """Shared npz artifact reader -> (meta dict, npz handle); validates
+    the version gate for both policy and ladder kinds."""
+    z = np.load(path)
+    if "__meta__" not in z.files:
+        raise ValueError(f"{path} is not a repro.sparsity artifact")
+    meta = json.loads(str(z["__meta__"][()]))
+    version = meta.get("version")
+    if version not in _READABLE_VERSIONS:
+        raise ValueError(
+            f"unsupported sparsity artifact version {version!r} "
+            f"(this build reads versions {_READABLE_VERSIONS})")
+    return meta, z
 
 
 def _merge_ranges(depths, backend: str):

@@ -1,0 +1,201 @@
+"""Adaptive sparsity controller: synthetic-trace rung dynamics
+(escalation under pressure, de-escalation when idle, hysteresis against
+oscillation) and ladder-serving engine integration (pinned-rung parity,
+retrace-free rung switches)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, SyntheticLM
+from repro.models import api
+from repro.serving import (AdaptiveController, Engine, EngineConfig,
+                           SLOConfig)
+from repro.sparsity import PolicyLadder
+
+
+# ---------------------------------------------------------------------------
+# controller unit tests (plain numbers, no engine)
+# ---------------------------------------------------------------------------
+
+def _slo(**kw):
+    base = dict(tpot_p95=1.0, max_queue=4, ewma_alpha=0.5, hysteresis=0.3,
+                dwell=2)
+    base.update(kw)
+    return SLOConfig(**base)
+
+
+def test_queue_pressure_up_then_idle_down():
+    """A synthetic load trace: sustained queue pressure climbs the ladder
+    one rung per dwell; a drained queue with low latency walks back
+    down."""
+    c = AdaptiveController(3, _slo())
+    for _ in range(12):
+        c.update(gaps=[0.1], queue_depth=10)
+    assert c.rung == 2
+    assert [t[3] for t in c.transitions] == ["queue", "queue"]
+    for _ in range(12):
+        c.update(gaps=[0.1], queue_depth=0)
+    assert c.rung == 0
+    assert [t[3] for t in c.transitions][-2:] == ["idle", "idle"]
+    assert sum(c.residency) == 24
+
+
+def test_tpot_violation_escalates():
+    c = AdaptiveController(2, _slo())
+    for _ in range(6):
+        c.update(gaps=[2.0], queue_depth=0)     # p95 target is 1.0
+    assert c.rung == 1
+    assert c.transitions[0][3] == "tpot"
+
+
+def test_hysteresis_prevents_oscillation():
+    """Noisy TPOT inside the hysteresis band [target*(1-h), target]
+    produces zero switches."""
+    rng = np.random.default_rng(0)
+    c = AdaptiveController(3, _slo(), initial_rung=1)
+    for _ in range(200):
+        gap = rng.uniform(0.75, 0.98)           # inside [0.7, 1.0]
+        c.update(gaps=[gap], queue_depth=0)
+    assert c.rung == 1
+    assert c.transitions == []
+
+
+def test_no_limit_cycle_after_tpot_escalation():
+    """After escalating *because* the lower rung violated the target, the
+    controller refuses to bounce back down while that rung's estimate is
+    fresh — the classic down-up limit cycle."""
+    c = AdaptiveController(2, _slo(estimate_ttl=1000))
+    for _ in range(6):
+        c.update(gaps=[2.0], queue_depth=0)     # rung 0 measured at 2.0
+    assert c.rung == 1
+    for _ in range(100):
+        c.update(gaps=[0.1], queue_depth=0)     # rung 1 is comfortable
+    assert c.rung == 1                          # but rung 0 is known-bad
+    # once the estimate expires, a probe down is allowed again
+    c2 = AdaptiveController(2, _slo(estimate_ttl=20))
+    for _ in range(6):
+        c2.update(gaps=[2.0], queue_depth=0)
+    for _ in range(100):
+        c2.update(gaps=[0.1], queue_depth=0)
+    assert c2.rung == 0
+
+
+def test_dwell_limits_switch_rate():
+    c = AdaptiveController(4, _slo(dwell=10))
+    for _ in range(15):
+        c.update(gaps=[5.0], queue_depth=50)
+    # first decision is free, then one switch per dwell window: steps 1
+    # and 11 under constant overload
+    assert c.rung == 2
+    assert len(c.transitions) == 2
+
+
+def test_slo_validation():
+    with pytest.raises(ValueError, match="tpot_p95"):
+        SLOConfig(tpot_p95=0.0)
+    with pytest.raises(ValueError, match="hysteresis"):
+        SLOConfig(tpot_p95=1.0, hysteresis=1.0)
+    with pytest.raises(ValueError, match="dwell"):
+        SLOConfig(tpot_p95=1.0, dwell=0)
+    with pytest.raises(ValueError, match="initial_rung"):
+        AdaptiveController(2, _slo(), initial_rung=5)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    ladder = PolicyLadder.uniform(params, cfg, budgets=(0.0, 0.5))
+    return params, cfg, ladder
+
+
+def _prompts(cfg, n, seq, step=0):
+    return np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, seq, n)).batch(step))
+
+
+def test_pinned_rung_matches_fixed_policy_engine(model):
+    """A ladder engine pinned at rung r emits bit-identical tokens to a
+    fixed-policy engine built from that rung's (policy, sp)."""
+    params, cfg, ladder = model
+    prompts = _prompts(cfg, 2, 12, step=5)
+    outs = []
+    for mode in ("pinned", "fixed"):
+        if mode == "pinned":
+            eng = Engine(params, cfg,
+                         EngineConfig(max_slots=2, max_len=32,
+                                      prefill_chunk=8, initial_rung=1),
+                         ladder=ladder)
+            assert eng.rung == 1 and eng.controller is None
+        else:
+            pol, sp = ladder.rung(1)
+            eng = Engine(params, cfg,
+                         EngineConfig(max_slots=2, max_len=32,
+                                      prefill_chunk=8, policy=pol), sp)
+        for b in range(2):
+            eng.submit(prompts[b], 6)
+        outs.append(eng.run())
+    assert outs[0] == outs[1]
+
+
+def test_controller_switches_rungs_without_retrace(model):
+    """Queue pressure drives the engine up the ladder mid-run, the drain
+    brings it back down, rung indices are recorded per token, and no
+    decode step retraces after the warmup precompile."""
+    params, cfg, ladder = model
+    slo = SLOConfig(tpot_p95=1e6, max_queue=1, dwell=2, hysteresis=0.25)
+    eng = Engine(params, cfg,
+                 EngineConfig(max_slots=2, max_len=32, prefill_chunk=8,
+                              slo=slo), ladder=ladder)
+    assert eng.decode_retraces_after_warmup == 0
+    prompts = _prompts(cfg, 8, 10, step=9)
+    for b in range(8):                    # 8 requests into 2 slots: queue
+        eng.submit(prompts[b], 10)
+    out = eng.run()
+    assert all(len(t) == 10 for t in out.values())
+    c = eng.controller
+    assert sum(1 for r in c.residency if r > 0) >= 2   # visited >= 2 rungs
+    reasons = [t[3] for t in c.transitions]
+    assert "queue" in reasons             # escalated under pressure
+    assert "idle" in reasons              # and came back down
+    assert eng.rung == 0                  # drained -> densest rung
+    # the compile-cache assertion: switches never retraced decode
+    assert eng.decode_retraces_after_warmup == 0
+    # every emitted token knows the rung that produced it
+    for rs in eng.states.values():
+        assert len(rs.token_rungs) == len(rs.tokens)
+    assert {r for rs in eng.states.values() for r in rs.token_rungs} == \
+        {0, 1}
+
+
+def test_ladder_engine_rejects_bad_wiring(model):
+    params, cfg, ladder = model
+    with pytest.raises(ValueError, match="not both"):
+        Engine(params, cfg, EngineConfig(), sp=ladder.sps[1],
+               ladder=ladder)
+    with pytest.raises(ValueError, match="outside"):
+        Engine(params, cfg, EngineConfig(initial_rung=7), ladder=ladder)
+    with pytest.raises(ValueError, match="needs a PolicyLadder"):
+        Engine(params, cfg, EngineConfig(slo=SLOConfig(tpot_p95=1.0)))
+    # a pinned rung without a ladder is a config error, not a silent rung 0
+    with pytest.raises(ValueError, match="needs a\n?.*PolicyLadder"):
+        Engine(params, cfg, EngineConfig(initial_rung=1))
+
+
+def test_warmup_refuses_busy_engine(model):
+    """warmup() writes garbage into slot 0's cache prefix — legal only
+    while the pool is empty."""
+    params, cfg, ladder = model
+    eng = Engine(params, cfg,
+                 EngineConfig(max_slots=2, max_len=32, prefill_chunk=8),
+                 ladder=ladder)
+    eng.warmup()                              # idle: fine
+    eng.submit(_prompts(cfg, 1, 10)[0], 4)
+    with pytest.raises(RuntimeError, match="busy"):
+        eng.warmup()
+    eng.run()
+    eng.warmup()                              # drained again: fine

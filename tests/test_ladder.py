@@ -1,0 +1,207 @@
+"""Policy-ladder calibration: warm-started allocation invariants (rung
+monotonicity, budget feasibility, fewer-generation convergence) and the
+self-contained multi-rung artifact."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.allocation import (EvoConfig, block_fitness,
+                                   block_level_allocation, weighted_average)
+from repro.models import api
+from repro.sparsity import PolicyLadder, SparsityPolicy, calibrate_ladder
+from repro.sparsity.policy import _flatten_sp
+
+
+# ---------------------------------------------------------------------------
+# search invariants on a synthetic context (fast, deterministic)
+# ---------------------------------------------------------------------------
+
+class FakeCtx:
+    """Minimal CalibContext stand-in with a quadratic fitness: block d
+    contributes sens[d] * p[d]^2 KL, so the optimum prunes insensitive
+    blocks hardest — enough structure for warm starts to matter."""
+
+    def __init__(self, sens):
+        self.sens = np.asarray(sens, float)
+        self.num_blocks = len(self.sens)
+        self.keys_by_depth = {d: ["l"] for d in range(self.num_blocks)}
+
+    def block_weight(self, d):
+        return 1.0
+
+    def make_sp(self, alphas, ratios):
+        return np.array([1.0 - ratios[(d, "l")]
+                         for d in range(self.num_blocks)])
+
+    def fitness(self, p):
+        return float(np.sum(self.sens * np.asarray(p) ** 2))
+
+
+def _sens(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.2, 5.0, size=n)
+
+
+def test_warm_start_respects_floor_and_budget():
+    ctx = FakeCtx(_sens(12, 3))
+    evo = EvoConfig(generations=4, offspring=8, eps=0.02, seed=0)
+    p1 = block_level_allocation(ctx, 0.3, evo)
+    assert weighted_average(ctx, p1) <= 0.3 + 1e-9
+    p2 = block_level_allocation(ctx, 0.6, evo, p_init=p1, p_min=p1,
+                                generations=2)
+    assert weighted_average(ctx, p2) <= 0.6 + 1e-9
+    # monotone: the higher-budget rung never keeps more channels in any
+    # block than the lower one
+    assert (p2 >= p1 - 1e-12).all()
+
+
+def test_warm_start_restores_budget_mass_lost_to_clipping():
+    """A big budget jump clips shifted blocks at max_sparsity; the repair
+    pass must redistribute that mass so the rung actually delivers its
+    labeled budget (not silently less sparsity)."""
+    ctx = FakeCtx(_sens(10, 11))
+    evo = EvoConfig(generations=2, offspring=4, eps=0.02,
+                    max_sparsity=0.95, seed=2)
+    p1 = block_level_allocation(ctx, 0.5, evo)
+    p2 = block_level_allocation(ctx, 0.9, evo, p_init=p1, p_min=p1,
+                                generations=1)
+    assert weighted_average(ctx, p2) <= 0.9 + 1e-9
+    assert weighted_average(ctx, p2) >= 0.9 - evo.eps - 1e-9
+    assert (p2 >= p1 - 1e-12).all()
+
+
+def test_warm_start_infeasible_budget_raises():
+    ctx = FakeCtx(_sens(6, 0))
+    with pytest.raises(ValueError, match="ascending"):
+        block_level_allocation(ctx, 0.2, EvoConfig(generations=1),
+                               p_min=np.full(6, 0.5))
+
+
+def test_warm_start_converges_in_fewer_generations():
+    """Warm-starting from the adjacent rung reaches a better (or equal)
+    fitness in a third of the generations of a cold search at the same
+    budget."""
+    ctx = FakeCtx(_sens(16, 7))
+    evo = EvoConfig(generations=9, offspring=12, eps=0.02, seed=1)
+    p_low = block_level_allocation(ctx, 0.3, evo)
+    cold = block_level_allocation(ctx, 0.6, evo)
+    warm = block_level_allocation(ctx, 0.6, evo, p_init=p_low, p_min=p_low,
+                                  generations=3)
+    assert block_fitness(ctx, warm) <= block_fitness(ctx, cold) + 1e-9
+
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(4, 24), st.integers(0, 2**16),
+           st.floats(0.05, 0.4), st.floats(0.05, 0.4))
+    @settings(deadline=None, max_examples=20)
+    def test_rung_monotonicity_property(n, seed, t1, dt):
+        """Hypothesis: for any budgets t1 < t2 the warm-started rung is
+        elementwise at least as sparse as the lower rung and both meet
+        their budgets."""
+        ctx = FakeCtx(_sens(n, seed))
+        evo = EvoConfig(generations=2, offspring=4, eps=0.03,
+                        seed=seed % 97)
+        t2 = min(t1 + dt, 0.9)
+        p1 = block_level_allocation(ctx, t1, evo)
+        p2 = block_level_allocation(ctx, t2, evo, p_init=p1, p_min=p1,
+                                    generations=1)
+        assert weighted_average(ctx, p1) <= t1 + 1e-9
+        assert weighted_average(ctx, p2) <= t2 + 1e-9
+        assert (p2 >= p1 - 1e-12).all()
+except ImportError:                                  # pragma: no cover
+    pass
+
+
+# ---------------------------------------------------------------------------
+# real-model ladder (tiny budgets)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ladder_setup():
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    ladder = calibrate_ladder(
+        params, cfg, {"tokens": toks}, budgets=(0.0, 0.3, 0.6),
+        evo=EvoConfig(generations=2, offspring=3, eps=0.1),
+        warm_generations=1, delta=0.25, coord_passes=0)
+    return params, cfg, ladder
+
+
+def _keep_leaves(sp):
+    """{path: keep_frac array} for one stacked sp tree."""
+    return {k: v for k, v in _flatten_sp(sp).items()
+            if k.endswith("/keep_frac")}
+
+
+def test_calibrated_ladder_is_monotone(ladder_setup):
+    _, _, ladder = ladder_setup
+    assert len(ladder) == 3
+    assert ladder.policies[0].is_dense
+    # block-level prune ratios never decrease with the budget
+    for lo, hi in zip(ladder.block_ratios, ladder.block_ratios[1:]):
+        assert (np.asarray(hi) >= np.asarray(lo) - 1e-9).all()
+    # per-linear keep fractions never increase with the budget
+    for lo, hi in zip(ladder.sps, ladder.sps[1:]):
+        klo, khi = _keep_leaves(lo), _keep_leaves(hi)
+        assert klo.keys() == khi.keys()
+        for k in klo:
+            assert (khi[k] <= klo[k] + 1e-6).all(), k
+
+
+def test_ladder_artifact_roundtrip(tmp_path, ladder_setup):
+    """The whole ladder round-trips through one npz without the model
+    checkpoint, sharing the g arrays across rungs."""
+    _, _, ladder = ladder_setup
+    f = str(tmp_path / "ladder.npz")
+    ladder.save(f)
+
+    z = np.load(f)
+    # the weight-column norms are stored once (rung 0), not per rung
+    assert any(k.startswith("sp0/") and k.endswith("/g") for k in z.files)
+    assert not any(k.startswith(("sp1/", "sp2/")) and k.endswith("/g")
+                   for k in z.files)
+
+    l2 = PolicyLadder.load(f)
+    assert l2.budgets == ladder.budgets
+    assert l2.policies == ladder.policies
+    for a, b in zip(ladder.sps, l2.sps):
+        fa, fb = _flatten_sp(a), _flatten_sp(b)
+        assert fa.keys() == fb.keys()
+        for k in fa:
+            np.testing.assert_array_equal(np.asarray(fa[k]),
+                                          np.asarray(fb[k]))
+    for a, b in zip(ladder.block_ratios, l2.block_ratios):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_artifact_kind_gates(tmp_path, ladder_setup):
+    _, _, ladder = ladder_setup
+    f = str(tmp_path / "ladder.npz")
+    ladder.save(f)
+    with pytest.raises(ValueError, match="PolicyLadder.load"):
+        SparsityPolicy.load(f)
+    g = str(tmp_path / "policy.npz")
+    ladder.policies[1].save(g, sp=ladder.sps[1])
+    with pytest.raises(ValueError, match="SparsityPolicy.load"):
+        PolicyLadder.load(g)
+    # single-policy artifacts still round-trip under the v2 format
+    pol, sp = SparsityPolicy.load(g)
+    assert pol == ladder.policies[1]
+
+
+def test_ladder_validation():
+    params_cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(params_cfg, 0)
+    lad = PolicyLadder.uniform(params, params_cfg, budgets=(0.0, 0.5))
+    assert len(lad) == 2 and lad.policies[0].is_dense
+    with pytest.raises(ValueError, match="ascending"):
+        PolicyLadder(budgets=(0.5, 0.3), policies=lad.policies,
+                     sps=lad.sps)
+    with pytest.raises(ValueError, match="rung count"):
+        PolicyLadder(budgets=(0.1,), policies=lad.policies, sps=lad.sps)

@@ -94,7 +94,9 @@ def test_fused_qkv_matches_separate():
     toks = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0,
                               cfg.vocab_size)
     fused, _ = M.forward(params, cfg, tokens=toks, mode="train")
-    with sl.capture_inputs():          # capture forces the separate path
-        sep, _ = M.forward(params, cfg, tokens=toks, mode="train")
+    # a capture sink on the policy forces the separate (unfused) path
+    cap_pol = sl.SparsityPolicy.dense(capture=sl.CaptureSink())
+    sep, _ = M.forward(params, cfg, tokens=toks, mode="train",
+                       policy=cap_pol)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(sep),
                                rtol=1e-5, atol=1e-5)

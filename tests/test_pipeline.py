@@ -137,10 +137,10 @@ def test_stacked_sp_matches_unstacked_numerics(ctx):
     from repro.models import model as M
     c, params, cfg, batch = ctx
     plan = pipeline.activation_only_plan(params, cfg, batch, 0.5, ctx=c)
-    with sl.sparsity_mode("mask"):
-        lu, _ = U.forward_unstacked(params, cfg, batch["tokens"],
-                                    per_depth_sp=plan.per_depth_sp)
-        ls, _ = M.forward(params, cfg, tokens=batch["tokens"], mode="train",
-                          sp=plan.stacked_sp)
+    mask = sl.SparsityPolicy.uniform("mask")
+    lu, _ = U.forward_unstacked(params, cfg, batch["tokens"],
+                                per_depth_sp=plan.per_depth_sp, policy=mask)
+    ls, _ = M.forward(params, cfg, tokens=batch["tokens"], mode="train",
+                      sp=plan.stacked_sp, policy=mask)
     np.testing.assert_allclose(np.asarray(lu), np.asarray(ls),
                                rtol=1e-4, atol=1e-4)

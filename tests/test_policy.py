@@ -51,26 +51,34 @@ def test_policy_validates_backends_eagerly():
 
 def test_engine_config_validates_eagerly(model):
     import dataclasses
-    with pytest.raises(ValueError, match="valid backends"):
-        EngineConfig(mode="topk_sharedd")
-    # conflicting explicit policy + deprecated knobs never discard silently
-    with pytest.raises(ValueError, match="conflicting"):
-        EngineConfig(mode="mask",
-                     policy=SparsityPolicy.uniform("topk_shared"))
-    with pytest.raises(ValueError, match="conflicting"):
-        EngineConfig(k_max_frac=0.3,
-                     policy=SparsityPolicy.uniform("topk_shared"))
     with pytest.raises(TypeError):
-        EngineConfig(policy="mask")
-    # the shim maps mode/k_max_frac onto a validated policy
-    e = EngineConfig(mode="topk_shared", k_max_frac=0.5)
-    assert e.policy == SparsityPolicy.uniform("topk_shared", k_max_frac=0.5)
-    assert e.mode == "topk_shared" and e.k_max_frac == 0.5
-    # dataclasses.replace keeps working on constructed (back-filled)
-    # configs, both legacy- and policy-built
-    for base in (e, EngineConfig(policy=SparsityPolicy.uniform("mask"))):
-        e2 = dataclasses.replace(base, max_len=1024)
-        assert e2.policy == base.policy and e2.max_len == 1024
+        EngineConfig(policy="mask")     # mode strings are gone
+    # the removed deprecated knobs are really gone (not silently ignored)
+    with pytest.raises(TypeError):
+        EngineConfig(mode="topk_shared")
+    with pytest.raises(TypeError):
+        EngineConfig(k_max_frac=0.5)
+    # no policy = dense execution
+    assert EngineConfig().policy == SparsityPolicy.dense()
+    # dataclasses.replace keeps working on constructed configs
+    base = EngineConfig(policy=SparsityPolicy.uniform("mask"))
+    e2 = dataclasses.replace(base, max_len=1024)
+    assert e2.policy == base.policy and e2.max_len == 1024
+    # slo without a ladder is rejected at Engine construction
+    from repro.serving import SLOConfig
+    params, cfg = model
+    with pytest.raises(ValueError, match="needs a PolicyLadder"):
+        Engine(params, cfg, EngineConfig(slo=SLOConfig(tpot_p95=0.1)))
+
+
+def test_thread_local_shims_removed():
+    """The one-release deprecation shims are gone: execution state is
+    explicit-only now."""
+    from repro.core import sparse_linear as sl2
+    for name in ("sparsity_mode", "capture_inputs", "token_weights",
+                 "current_mode", "current_token_weights", "record",
+                 "SparsityMode", "resolve_execution"):
+        assert not hasattr(sl2, name), name
 
 
 def test_backend_resolution_precedence():
@@ -104,22 +112,25 @@ def test_for_phase_is_stable_for_jit_caching():
 
 
 # ---------------------------------------------------------------------------
-# explicit policy == deprecated thread-local shims, bit for bit
+# explicit-policy defaults
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend,keep", [("off", 1.0), ("mask", 1.0),
-                                          ("topk_shared", 0.5),
-                                          ("topk_block", 0.5)])
-def test_policy_matches_legacy_context_bitwise(model, backend, keep):
+def test_policy_none_is_dense_bitwise(model):
+    """With the thread-local contexts removed, policy=None must be exactly
+    dense execution (no ambient state left to consult)."""
     params, cfg = model
     toks = jnp.asarray(_prompts(cfg, 2, 16))
-    sp = default_sp_stacked(params, cfg, keep_frac=keep)
-    with sl.sparsity_mode(backend, k_max_frac=keep):
-        ref, _ = M.forward(params, cfg, tokens=toks, mode="train", sp=sp)
-    new, _ = M.forward(params, cfg, tokens=toks, mode="train", sp=sp,
-                       policy=SparsityPolicy.uniform(backend,
-                                                     k_max_frac=keep))
+    sp = default_sp_stacked(params, cfg, keep_frac=0.5)
+    ref, _ = M.forward(params, cfg, tokens=toks, mode="train", sp=sp,
+                       policy=SparsityPolicy.dense())
+    new, _ = M.forward(params, cfg, tokens=toks, mode="train", sp=sp)
     assert (np.asarray(ref) == np.asarray(new)).all()
+    # and at the single-projection level too
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (16, 8)))
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (4, 16)))
+    spd = sl.default_sp(w)
+    y = sl.project(jnp.asarray(x), jnp.asarray(w), spd)
+    np.testing.assert_allclose(np.asarray(y), x @ w, rtol=1e-5, atol=1e-5)
 
 
 def test_mixed_block_policy_matches_per_depth_reference(model):

@@ -35,8 +35,7 @@ def test_mask_mode_equals_masked_dense(data, alpha):
     tau = float(np.median(s))
     sp = {"g": g, "alpha": jnp.float32(alpha), "tau": jnp.float32(tau),
           "keep_frac": jnp.float32(1.0)}
-    with sl.sparsity_mode("mask"):
-        y = sl.project(x, w, sp)
+    y = sl.project(x, w, sp, policy=sl.SparsityPolicy.uniform("mask"))
     m = (s >= tau).astype(np.float32)
     np.testing.assert_allclose(np.asarray(y),
                                (np.asarray(x) * m) @ np.asarray(w),
@@ -73,8 +72,8 @@ def test_topk_shared_exact_on_kept_channels(data, alpha, kf):
     g = sl.column_norms(w)
     sp = {"g": g, "alpha": jnp.float32(alpha),
           "tau": jnp.float32(-jnp.inf), "keep_frac": jnp.float32(kf)}
-    with sl.sparsity_mode("topk_shared", k_max_frac=kf):
-        y = sl.project(x, w, sp)
+    y = sl.project(x, w, sp, policy=sl.SparsityPolicy.uniform(
+        "topk_shared", k_max_frac=kf))
     # reconstruct the same channel set
     sal = np.asarray(sl.scores(x, g, alpha)).reshape(-1, n).mean(0)
     k_max = max(1, round(n * kf))

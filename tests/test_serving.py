@@ -11,6 +11,7 @@ from repro.data import DataConfig, SyntheticLM
 from repro.launch.serve import generate
 from repro.models import api
 from repro.serving import Engine, EngineConfig, SlotKVPool, Status
+from repro.sparsity import SparsityPolicy
 
 
 @pytest.fixture(scope="module")
@@ -26,7 +27,7 @@ def _prompts(cfg, n, seq, step=0):
 
 
 def _engine(params, cfg, sp=None, **kw):
-    defaults = dict(max_slots=4, max_len=32, prefill_chunk=8, mode="off")
+    defaults = dict(max_slots=4, max_len=32, prefill_chunk=8)
     defaults.update(kw)
     return Engine(params, cfg, EngineConfig(**defaults), sp)
 
@@ -35,17 +36,19 @@ def _engine(params, cfg, sp=None, **kw):
 # exact parity with the legacy static-batch loop
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("mode,keep", [("off", 1.0), ("topk_shared", 0.5)])
-def test_engine_matches_legacy_generate(model, mode, keep):
+@pytest.mark.parametrize("backend,keep", [("off", 1.0),
+                                          ("topk_shared", 0.5)])
+def test_engine_matches_legacy_generate(model, backend, keep):
     """Equal-length prompts through the whole-prefill engine produce the
     exact tokens of the legacy generate() loop, dense and sparse."""
     params, cfg = model
     prompts = _prompts(cfg, 4, 16)
     sp = default_sp_stacked(params, cfg, keep_frac=keep) \
-        if mode != "off" else None
+        if backend != "off" else None
+    policy = SparsityPolicy.uniform(backend, k_max_frac=keep)
     legacy = np.asarray(generate(params, cfg, jnp.asarray(prompts), 8, sp,
-                                 mode=mode, k_max_frac=keep))
-    eng = _engine(params, cfg, sp, mode=mode, k_max_frac=keep,
+                                 policy=policy))
+    eng = _engine(params, cfg, sp, policy=policy,
                   prefill_strategy="whole", prefill_dense_frac=1.0)
     for b in range(4):
         eng.submit(prompts[b], 8)
@@ -134,7 +137,8 @@ def test_moe_and_ssm_archs_serve_sparse():
         sp = default_sp_stacked(params, cfg, keep_frac=0.5)
         eng = Engine(params, cfg, EngineConfig(
             max_slots=3, max_len=24, prefill_chunk=8,
-            mode="topk_shared", k_max_frac=0.5), sp)
+            policy=SparsityPolicy.uniform("topk_shared",
+                                          k_max_frac=0.5)), sp)
         prompts = _prompts(cfg, 2, 10, step=17)
         eng.submit(prompts[0], 4)
         eng.submit(prompts[1][:7], 4)        # ragged + a free slot

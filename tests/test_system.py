@@ -56,9 +56,12 @@ def test_serve_generates_with_sparsity(trained):
     prompts = jnp.asarray(SyntheticLM(
         dataclasses.replace(data_cfg, global_batch=2, seq_len=32)).batch(5))
     sp = default_sp_stacked(params, cfg, keep_frac=0.5)
+    from repro.sparsity import SparsityPolicy
     toks_sparse = generate(params, cfg, prompts, 8, sp,
-                           mode="topk_shared", k_max_frac=0.5)
-    toks_dense = generate(params, cfg, prompts, 8, None, mode="off")
+                           policy=SparsityPolicy.uniform("topk_shared",
+                                                         k_max_frac=0.5))
+    toks_dense = generate(params, cfg, prompts, 8, None,
+                          policy=SparsityPolicy.dense())
     assert toks_sparse.shape == (2, 8) == toks_dense.shape
     # a trained model + 50% weight-aware sparsity should mostly agree with
     # the dense decode on easy synthetic text
@@ -71,9 +74,12 @@ def test_decode_equals_prefill_continuation(trained):
     params, cfg, data_cfg, _, _ = trained
     prompts = jnp.asarray(SyntheticLM(
         dataclasses.replace(data_cfg, global_batch=2, seq_len=16)).batch(6))
-    toks = generate(params, cfg, prompts, 4, None, mode="off")
+    from repro.sparsity import SparsityPolicy
+    toks = generate(params, cfg, prompts, 4, None,
+                    policy=SparsityPolicy.dense())
     # re-run with the first generated token appended: next token must match
     ext = jnp.concatenate([prompts, toks[:, :1]], axis=1)
-    toks2 = generate(params, cfg, ext, 3, None, mode="off")
+    toks2 = generate(params, cfg, ext, 3, None,
+                     policy=SparsityPolicy.dense())
     np.testing.assert_array_equal(np.asarray(toks[:, 1:]),
                                   np.asarray(toks2))
