@@ -18,6 +18,14 @@ Adaptive serving: ``--ladder plan.npz`` loads a calibrated
 feedback controller that moves between rungs under load; ``--rung`` pins
 one rung instead.  ``--metrics-out`` appends JSONL engine/controller
 snapshots while the engine runs.
+
+Speculative decoding: ``--spec-gamma N`` (with ``--ladder``) drafts N
+tokens per verify at the ``--spec-drafter`` rung and verifies at the
+pinned ``--rung`` — token-identical output to plain decode at that rung,
+fewer verifier passes per token.  The verifier rung must decode dense
+(rung 0 of a calibrated ladder); the engine rejects sparse verifiers,
+whose shared top-k saliency would break the parity guarantee.
+``--spec-adaptive`` lets the acceptance EWMA tune gamma at runtime.
 """
 from __future__ import annotations
 
@@ -133,6 +141,14 @@ def main():
     ap.add_argument("--slo-max-queue", type=int, default=8,
                     help="queued requests beyond which the controller "
                          "escalates")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="speculative decoding: draft tokens per verify "
+                         "(> 0 arms spec decode; needs --ladder)")
+    ap.add_argument("--spec-drafter", type=int, default=1,
+                    help="ladder rung that drafts (must be sparser than "
+                         "the verifier rung pinned by --rung)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="tune gamma from the acceptance EWMA at runtime")
     ap.add_argument("--metrics-out", default=None,
                     help="append engine/controller snapshots to this "
                          "JSONL file while serving")
@@ -159,6 +175,16 @@ def main():
     if args.rung != 0 and args.ladder is None:
         raise SystemExit("--rung needs --ladder: a fixed-policy engine "
                          "has only rung 0")
+    if args.spec_gamma > 0:
+        if args.ladder is None:
+            raise SystemExit("--spec-gamma needs --ladder: the drafter "
+                             "and verifier are ladder rungs")
+        if args.slo_tpot_p95 > 0:
+            raise SystemExit("--spec-gamma conflicts with --slo-tpot-p95: "
+                             "spec decoding pins the verifier rung")
+    elif args.spec_adaptive or args.spec_drafter != 1:
+        raise SystemExit("--spec-drafter/--spec-adaptive need "
+                         "--spec-gamma > 0 to arm speculative decoding")
 
     ladder = None
     if args.ladder is not None:
@@ -201,19 +227,26 @@ def main():
         print("sample:", np.asarray(toks[0])[:16])
         return
 
-    from repro.serving import Engine, EngineConfig, SLOConfig
+    from repro.serving import Engine, EngineConfig, SLOConfig, SpecConfig
     from repro.serving.metrics import latency_percentiles
     slo = None
     if args.slo_tpot_p95 > 0:
         slo = SLOConfig(tpot_p95=args.slo_tpot_p95,
                         max_queue=args.slo_max_queue)
+    spec = None
+    if args.spec_gamma > 0:
+        spec = SpecConfig(gamma=args.spec_gamma,
+                          drafter_rung=args.spec_drafter,
+                          verifier_rung=args.rung,
+                          adaptive=args.spec_adaptive,
+                          gamma_max=max(4, args.spec_gamma))
     ecfg = EngineConfig(
         max_slots=args.max_slots or args.batch,
         max_len=args.max_len or args.prompt_len + args.gen,
         prefill_chunk=args.chunk,
         policy=None if ladder is not None else policy,
         prefill_strategy=args.prefill_strategy,
-        slo=slo, initial_rung=args.rung)
+        slo=slo, initial_rung=args.rung, spec=spec)
     engine = Engine(params, cfg, ecfg, sp, ladder=ladder)
     t0 = time.time()
     for b in range(args.batch):
@@ -230,6 +263,11 @@ def main():
         print("controller:", engine.controller.snapshot())
         print("decode retraces after warmup:",
               engine.decode_retraces_after_warmup)
+    if engine.spec_decoder is not None:
+        print("spec:", engine.spec_decoder.snapshot())
+        print("retraces after warmup: decode",
+              engine.decode_retraces_after_warmup, "verify",
+              engine.verify_retraces_after_warmup)
     print("sample:", out[0][:16])
 
 

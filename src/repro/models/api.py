@@ -239,6 +239,31 @@ def make_chunk_prefill_step(cfg: ModelConfig):
     return chunk_prefill_step
 
 
+def make_verify_step(cfg: ModelConfig):
+    """Speculative-decoding verify: a fixed-length multi-token decode over
+    the slot pool, reusing the chunk-prefill write-in-place machinery
+    (vmapped over slots).  ``tokens`` (S, gamma+1) — row s is slot s's
+    last committed token followed by its gamma draft tokens — at per-slot
+    start offsets ``positions`` (S,).  K/V for every window position are
+    re-projected under the *verifier* policy and written in place, so the
+    committed cache prefix is always verifier-faithful regardless of what
+    the drafter wrote there.  ``weights`` (S, gamma+1) masks inactive
+    slots out of the shared top-k saliency like decode's ``active`` mask.
+    Returns logits for every window position (S, gamma+1, V) —
+    ``logits[s, i]`` is the verifier's next-token distribution after
+    consuming row s's i-th token — plus the updated pool.  Jit compiles
+    once per (gamma, policy): the token shape pins gamma, the policy is
+    static."""
+    def verify_step(params, tokens, positions, caches, sp=None,
+                    weights=None, policy=None):
+        logits, caches = M.forward(
+            params, cfg, tokens=tokens, mode="verify", caches=caches,
+            positions=positions, sp=sp, policy=policy,
+            token_weights=weights)
+        return logits, caches
+    return verify_step
+
+
 def step_for_shape(cfg: ModelConfig, shape: ShapeConfig,
                    opt_cfg: Optional[adamw.AdamWConfig] = None,
                    remat: str = "none", policy=None, aligned: bool = False):

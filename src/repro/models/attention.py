@@ -138,7 +138,7 @@ def decode_attention(q, k_cache, v_cache, positions, k_new=None, v_new=None,
 
     q: (B,H,hd); k_cache: (B,KV,hd,T); v_cache: (B,KV,T,hd) — the layouts
     the decode dots want, so XLA never materializes a transposed copy of
-    the cache (EXPERIMENTS.md SSPerf iteration A4).  k_new/v_new (B,KV,hd)
+    the cache (measured in the decode dry-runs).  k_new/v_new (B,KV,hd)
     carry the current token, which is attended explicitly and written to
     the cache independently (so the cache write can be an update-only DUS
     into the carried stack).  Cache slots at `positions` and beyond are
@@ -193,9 +193,11 @@ def chunk_attention(q, k_cache, v_cache, offset, *, attn_softcap: float = 0.0):
 
     q: (B,C,H,hd); k_cache: (B,KV,hd,T); v_cache: (B,KV,T,hd) — the same
     pre-transposed decode layouts, so chunked prefill reads the pool cache
-    without materializing transposed copies.  offset: scalar int32 start
-    position of the chunk.  Slots beyond offset+C hold stale data and are
-    masked out.
+    without materializing transposed copies.  offset: int32 start position
+    of the chunk — a scalar shared across the batch (chunked prefill) or a
+    (B,) vector of per-row offsets (the speculative-decoding verify
+    forward, where every slot verifies its own window).  Slots beyond
+    offset+C hold stale data and are masked out.
     """
     B, C, H, hd = q.shape
     KV, T = k_cache.shape[1], k_cache.shape[3]
@@ -206,9 +208,13 @@ def chunk_attention(q, k_cache, v_cache, offset, *, attn_softcap: float = 0.0):
                    preferred_element_type=jnp.float32) * scale
     if attn_softcap:
         s = attn_softcap * jnp.tanh(s / attn_softcap)
-    qpos = offset + jnp.arange(C)
-    valid = jnp.arange(T)[None, :] <= qpos[:, None]              # (C,T)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    offset = jnp.asarray(offset)
+    if offset.ndim:                              # per-row offsets: (B,C)
+        qpos = offset[:, None] + jnp.arange(C)
+    else:
+        qpos = (offset + jnp.arange(C))[None]    # shared offset: (1,C)
+    valid = jnp.arange(T) <= qpos[..., None]     # (B|1,C,T)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bKGqt,bKtd->bKGqd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)

@@ -114,7 +114,15 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
     ``positions`` (B,) its chunk-start offset.  The chunk's K/V are written
     in place at (slot, offset) via dynamic_update_slice and attention runs
     against the slot's full cache row, so every chunk reuses one compiled
-    step regardless of prompt length or pool occupancy."""
+    step regardless of prompt length or pool occupancy.
+
+    mode "verify" is the speculative-decoding verify forward: x's batch
+    dim *is* the pool's slot dim, row s carrying slot s's (gamma+1)-token
+    verify window starting at per-slot offset ``positions[s]``.  The same
+    write-in-place machinery as "chunk", vmapped over slots, re-projects
+    every window position's K/V under the verifier policy before
+    attention, so whatever the drafter wrote there is overwritten and the
+    committed cache prefix stays verifier-faithful."""
     sp = sp or {}
     B, S, D = x.shape
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -171,7 +179,7 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
     if cfg.rope_theta:
         if mode == "decode":
             cos, sin = rope_angles(positions[:, None], hd, cfg.rope_theta)
-        elif mode == "chunk":
+        elif mode in ("chunk", "verify"):
             cos, sin = rope_angles(positions[:, None] + jnp.arange(S)[None],
                                    hd, cfg.rope_theta)
         else:
@@ -179,6 +187,28 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
     q = constrain(q, "batch", None, "heads", None)
+
+    if mode == "verify":
+        if win:
+            raise NotImplementedError(
+                "speculative verify does not support local-attention "
+                "layers (rolling-window caches cannot roll back)")
+        kc, vc = cache["k"], cache["v"]          # pool: (S,KV,hd,T)/(S,KV,T,hd)
+        kn = k.transpose(0, 2, 3, 1).astype(kc.dtype)        # (S,KV,hd,C)
+        vn = v.transpose(0, 2, 1, 3).astype(vc.dtype)        # (S,KV,C,hd)
+
+        def wk(c, n, off):                       # c: (KV,hd,T)
+            return jax.lax.dynamic_update_slice(c, n, (0, 0, off))
+
+        def wv(c, n, off):                       # c: (KV,T,hd)
+            return jax.lax.dynamic_update_slice(c, n, (0, off, 0))
+
+        kc = jax.vmap(wk)(kc, kn, positions)
+        vc = jax.vmap(wv)(vc, vn, positions)
+        out = attn_lib.chunk_attention(q, kc, vc, positions,
+                                       attn_softcap=cfg.attn_softcap)
+        y = proj("wo", out.reshape(B, S, H * hd), row_parallel=True)
+        return y, {"k": kc, "v": vc}
 
     if mode == "chunk":
         if win:
@@ -251,7 +281,7 @@ def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
     mixer, ffn = kind
     sp = sp or {}
     cache = cache or {}
-    decode = mode in ("decode", "chunk")
+    decode = mode in ("decode", "chunk", "verify")
     new_cache = dict(cache) if decode else {}
     if mixer in ATTN_KINDS:
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
@@ -263,10 +293,10 @@ def layer_apply(p, x, cfg: ModelConfig, kind, sp=None, cache=None,
             new_cache["self"] = nc
         x = x + h
     elif mixer == "mamba":
-        if mode == "chunk":
+        if mode in ("chunk", "verify"):
             raise NotImplementedError(
-                "chunked prefill does not support SSM layers; use the "
-                "engine's whole-prompt prefill strategy")
+                "chunked prefill / speculative verify do not support SSM "
+                "layers; use the engine's whole-prompt prefill strategy")
         h = rmsnorm(x, p["ln1"], cfg.norm_eps)
         h, nc = mamba_apply(p["mamba"], h, cfg, sp.get("mamba"),
                             cache.get("ssm"), mode, policy=policy,
@@ -444,6 +474,9 @@ def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
     chunk:         tokens (B,C) one request's prefill chunk, positions (B,)
                    chunk-start offset, slot () pool slot, caches = the full
                    slot pool (serving engine's chunked prefill).
+    verify:        tokens (S,C) one C-token verify window per pool slot,
+                   positions (S,) per-slot window start, caches = the full
+                   slot pool (speculative decoding; batch dim == slot dim).
 
     policy: static SparsityPolicy (None runs dense).  token_weights:
     per-row weights for the shared top-k saliency (serving active-slot /
@@ -456,6 +489,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
       prefill-> logits (B,V) last position, caches filled
       decode -> logits (B,V), caches updated
       chunk  -> logits (B,C,V) all chunk positions, pool caches updated
+      verify -> logits (S,C,V) all window positions, pool caches updated
     """
     if policy is None:
         policy = sparse_linear.DENSE
@@ -464,10 +498,10 @@ def forward(params, cfg: ModelConfig, *, tokens=None, frames=None,
         enc_out = encode(params, frames, cfg, sp=sp_enc, remat=remat,
                          policy=policy)
 
-    if mode == "chunk":
+    if mode in ("chunk", "verify"):
         x = embed_tokens(params, tokens, cfg)
         x, new_caches = run_groups(
-            params["groups"], x, cfg, cfg.layer_groups(), mode="chunk",
+            params["groups"], x, cfg, cfg.layer_groups(), mode=mode,
             caches=caches, positions=positions, sp=sp, slot=slot,
             policy=policy, token_weights=token_weights)
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)

@@ -9,18 +9,26 @@ argument, so concurrent engines never share execution state.
 
 Adaptive serving: hand the engine a calibrated ``PolicyLadder`` and an
 ``SLOConfig`` and the ``AdaptiveController`` turns the sparsity level into
-a runtime resource — rung switches under load, retrace-free."""
-from repro.serving.controller import AdaptiveController, SLOConfig
-from repro.serving.engine import Engine, EngineConfig
+a runtime resource — rung switches under load, retrace-free.
+
+Speculative decoding: ``EngineConfig.spec`` (a ``SpecConfig``) turns the
+ladder's cheap rungs into drafters for the dense verifier rung — same
+output tokens, fewer verifier passes per token (``repro.serving.spec``)."""
+from repro.serving.controller import (AdaptiveController, SLOConfig,
+                                      SpecController)
+from repro.serving.engine import (SNAPSHOT_SCHEMA_VERSION, Engine,
+                                  EngineConfig)
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import EngineStats, RingBuffer, percentile
 from repro.serving.request import FinishReason, Request, RequestState, Status
 from repro.serving.scheduler import Scheduler
+from repro.serving.spec import SpecConfig, SpecDecoder
 from repro.sparsity import PolicyLadder, SparsityPolicy
 
 __all__ = [
     "Engine", "EngineConfig", "SlotKVPool", "EngineStats", "RingBuffer",
     "percentile", "Request", "RequestState", "Status", "FinishReason",
     "Scheduler", "SparsityPolicy", "PolicyLadder", "AdaptiveController",
-    "SLOConfig",
+    "SLOConfig", "SpecConfig", "SpecDecoder", "SpecController",
+    "SNAPSHOT_SCHEMA_VERSION",
 ]

@@ -27,6 +27,14 @@ Prefill strategies:
   * "whole":   the legacy whole-prompt prefill (batched over same-length
     requests) + pool insertion; supports every cached arch (local windows,
     SSM) at the cost of one executable per prompt length.
+
+Speculative decoding: with ``EngineConfig.spec`` the decode action runs
+draft/verify rounds instead of single batched steps — a sparse ladder
+rung drafts gamma tokens per slot, the verifier rung checks them in one
+batched multi-token forward, and the KV pool rolls rejected drafts back
+(``repro.serving.spec``).  Output tokens are identical to verifier-only
+decode; warmup() additionally precompiles a verify executable per
+reachable gamma so gamma/drafter switches stay retrace-free.
 """
 from __future__ import annotations
 
@@ -46,9 +54,16 @@ from repro.serving.metrics import EngineStats, percentile
 from repro.serving.request import (FinishReason, Request, RequestState,
                                    Status)
 from repro.serving.scheduler import Scheduler
+from repro.serving.spec import SpecConfig, SpecDecoder
 from repro.sparsity import PolicyLadder, SparsityPolicy
 
 _CHUNKABLE_MIXERS = ("attn", "global")
+
+# Engine.snapshot() JSONL format version.  v1 (implicit, pre-versioned):
+# load/latency/rung fields.  v2: adds "schema_version" itself plus the
+# speculative-decoding fields (spec_gamma, spec_drafter_rung,
+# spec_accept_ewma, spec_accept_rate) when spec decoding is armed.
+SNAPSHOT_SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,7 +74,13 @@ class EngineConfig:
 
     ``slo`` enables the adaptive controller (requires a ladder);
     ``initial_rung`` is the rung a ladder engine starts on (and stays on
-    when no SLO is configured — a pinned rung)."""
+    when no SLO is configured — a pinned rung).
+
+    ``spec`` arms self-speculative decoding (requires a ladder: the
+    drafter and verifier are rungs).  The engine then serves at the
+    verifier rung and its decode actions run draft/verify rounds —
+    token-identical output to verifier-only decode, fewer verifier
+    passes per token (``repro.serving.spec``)."""
     max_slots: int = 8
     max_len: int = 512
     prefill_chunk: int = 32
@@ -69,6 +90,7 @@ class EngineConfig:
     eos_id: Optional[int] = None     # default per-request EOS
     slo: Optional[SLOConfig] = None  # adaptive serving objectives
     initial_rung: int = 0            # ladder rung at engine start
+    spec: Optional[SpecConfig] = None  # self-speculative decoding
 
     def __post_init__(self):
         pol = self.policy
@@ -80,6 +102,9 @@ class EngineConfig:
         object.__setattr__(self, "policy", pol)
         if self.slo is not None and not isinstance(self.slo, SLOConfig):
             raise TypeError(f"slo must be an SLOConfig, got {type(self.slo)!r}")
+        if self.spec is not None and not isinstance(self.spec, SpecConfig):
+            raise TypeError(
+                f"spec must be a SpecConfig, got {type(self.spec)!r}")
         if self.initial_rung < 0:
             raise ValueError(
                 f"initial_rung must be >= 0, got {self.initial_rung}")
@@ -138,14 +163,56 @@ class Engine:
             self.controller = AdaptiveController(
                 len(self._rung_policies), ecfg.slo,
                 initial_rung=self._rung)
-        # the pool holds one chunk of slack past max_len: pad tokens of a
-        # request's final prefill chunk land in [max_len, pool_len-1), and
-        # the last position is scratch — inactive slots in a decode step
-        # must still write *somewhere*, and every real position (< max_len)
-        # may belong to a mid-prefill prompt span that a garbage write
-        # would corrupt.  Scratch is beyond every reachable position, so
-        # the decode valid-mask never admits it.
-        self.pool_len = ecfg.max_len + ecfg.prefill_chunk
+        mixers = {m for m, _ in cfg.layer_kinds()}
+        chunkable = mixers <= set(_CHUNKABLE_MIXERS)
+        if ecfg.spec is not None:
+            if ladder is None:
+                raise ValueError(
+                    "EngineConfig.spec needs a PolicyLadder: the drafter "
+                    "and verifier are ladder rungs")
+            if ecfg.slo is not None:
+                raise ValueError(
+                    "spec and slo are mutually exclusive: the spec "
+                    "controller adapts gamma/drafter from acceptance, and "
+                    "the verifier rung is pinned")
+            if not chunkable:
+                raise ValueError(
+                    "speculative decoding needs plain-attention mixers "
+                    f"(got {mixers}): the verify forward reuses the "
+                    "chunked write-in-place path and rollback needs "
+                    "full-length caches")
+            if ecfg.spec.drafter_rung >= len(ladder):
+                raise ValueError(
+                    f"drafter_rung {ecfg.spec.drafter_rung} outside the "
+                    f"{len(ladder)}-rung ladder")
+            if ecfg.initial_rung != ecfg.spec.verifier_rung:
+                raise ValueError(
+                    "a spec engine serves at the verifier rung; set "
+                    f"initial_rung == verifier_rung "
+                    f"({ecfg.spec.verifier_rung})")
+            ver_pol = self._rung_phases[ecfg.spec.verifier_rung][2]
+            if not ver_pol.is_dense:
+                raise ValueError(
+                    f"verifier rung {ecfg.spec.verifier_rung} decodes "
+                    "under a sparse policy; the token-parity guarantee "
+                    "needs a dense verifier — shared top-k saliency "
+                    "depends on the call's token rows, so a multi-token "
+                    "verify forward and single-token decode would pick "
+                    "different channel sets and diverge")
+        # the pool holds slack past max_len: pad tokens of a request's
+        # final prefill chunk land in [max_len, pool_len-1), and the last
+        # position is scratch — inactive slots in a decode step must still
+        # write *somewhere*, and every real position (< max_len) may
+        # belong to a mid-prefill prompt span that a garbage write would
+        # corrupt.  Scratch is beyond every reachable position, so the
+        # decode valid-mask never admits it.  Spec decoding needs the
+        # slack to also fit a (gamma+1)-token verify window (inactive-slot
+        # windows and draft overshoot past a request's budget both land
+        # there).
+        slack = ecfg.prefill_chunk
+        if ecfg.spec is not None:
+            slack = max(slack, ecfg.spec.max_gamma + 1)
+        self.pool_len = ecfg.max_len + slack
         self.pool = SlotKVPool(cfg, ecfg.max_slots, self.pool_len)
         self.scheduler = Scheduler()
         self.stats = EngineStats()
@@ -155,8 +222,6 @@ class Engine:
         self._chunk_traces = 0
         self._warm_traces: Optional[int] = None
 
-        mixers = {m for m, _ in cfg.layer_kinds()}
-        chunkable = mixers <= set(_CHUNKABLE_MIXERS)
         if ecfg.prefill_strategy == "auto":
             self.prefill_strategy = "chunked" if chunkable else "whole"
         else:
@@ -193,7 +258,11 @@ class Engine:
                               donate_argnums=(4,))
         self._pstep = jax.jit(_prefill, static_argnames=("policy",))
 
-        if self.controller is not None:
+        self.spec_decoder: Optional[SpecDecoder] = None
+        if ecfg.spec is not None:
+            self.spec_decoder = SpecDecoder(self, ecfg.spec)
+
+        if self.controller is not None or self.spec_decoder is not None:
             self.warmup()
 
     # ------------------------------------------------------------------
@@ -223,11 +292,13 @@ class Engine:
 
     def warmup(self) -> None:
         """Precompile every rung's decode (and chunked-prefill) phase
-        executables, then zero the post-warmup retrace baseline.  Only
-        valid on an idle engine: the warmup chunk writes garbage into
-        slot 0's cache prefix, which is harmless *before* any admission
-        (the slot's real prefill overwrites it) but would corrupt a live
-        request.  Rung switches after this never trace
+        executables — plus, under spec decoding, the verifier's verify
+        executable for every reachable draft length gamma — then zero the
+        post-warmup retrace baseline.  Only valid on an idle engine: the
+        warmup chunk writes garbage into slot 0's cache prefix, which is
+        harmless *before* any admission (the slot's real prefill
+        overwrites it) but would corrupt a live request.  Rung and gamma
+        switches after this never trace
         (``decode_retraces_after_warmup`` stays 0) — except whole-prompt
         prefill executables, which are keyed on prompt length and cannot
         be precompiled here; on "whole"-strategy archs (SSM/local
@@ -255,16 +326,40 @@ class Engine:
                         self.pool.caches, sp, jnp.zeros((C,), jnp.float32),
                         policy=pol)
                     logits.block_until_ready()
-        self._warm_traces = (self._decode_traces, self._chunk_traces)
+        if self.spec_decoder is not None:
+            sd = self.spec_decoder
+            _, _, ver_pol = self._rung_phases[sd.verifier_rung]
+            ver_sp = self._rung_sp[sd.verifier_rung]
+            for g in self.ecfg.spec.gammas():
+                logits, self.pool.caches = sd._vstep(
+                    self.params, jnp.zeros((S, g + 1), jnp.int32),
+                    jnp.full((S,), self.pool_len - (g + 1), jnp.int32),
+                    self.pool.caches, ver_sp,
+                    jnp.zeros((S, g + 1), jnp.float32), policy=ver_pol)
+                logits.block_until_ready()
+        self._warm_traces = (
+            self._decode_traces, self._chunk_traces,
+            self.spec_decoder._verify_traces
+            if self.spec_decoder is not None else 0)
 
     @property
     def decode_retraces_after_warmup(self) -> Optional[int]:
         """Decode (re)traces since :meth:`warmup`; None before warmup.
         The adaptive-serving invariant is that this stays 0 no matter how
-        often the controller switches rungs."""
+        often the controller switches rungs (draft steps included — they
+        run through the same decode executable at the drafter rung)."""
         if self._warm_traces is None:
             return None
         return self._decode_traces - self._warm_traces[0]
+
+    @property
+    def verify_retraces_after_warmup(self) -> Optional[int]:
+        """Spec verify (re)traces since :meth:`warmup`; None before warmup
+        or without spec decoding.  Stays 0 across gamma switches — every
+        reachable gamma's verify executable precompiles at warmup."""
+        if self._warm_traces is None or self.spec_decoder is None:
+            return None
+        return self.spec_decoder._verify_traces - self._warm_traces[2]
 
     # ------------------------------------------------------------------
     # submission
@@ -301,7 +396,10 @@ class Engine:
             else:
                 self._prefill_whole(self.scheduler.prefill_group())
         elif action == "decode":
-            self._decode_step()
+            if self.spec_decoder is not None:
+                self.spec_decoder.step()
+            else:
+                self._decode_step()
         return action
 
     def run(self) -> Dict[int, List[int]]:
@@ -414,7 +512,7 @@ class Engine:
                 self.stats.tpot_s.append(gaps[-1])
             rs.last_token_time = t1
             self._emit(rs, tok)
-            self.pool.lengths[slot] += 1
+            self.pool.commit(slot, 1)
             self._maybe_finish(rs, tok)
         if self.controller is not None:
             new_rung = self.controller.update(
@@ -439,9 +537,12 @@ class Engine:
     # ------------------------------------------------------------------
     def snapshot(self) -> dict:
         """One metrics record (JSONL-friendly): engine load, latency
-        signals and — under a controller — rung state."""
+        signals and — under a controller — rung state.  Versioned via
+        ``schema_version`` (see :data:`SNAPSHOT_SCHEMA_VERSION`) so
+        downstream metric consumers can detect format changes."""
         s = self.stats
         out = {
+            "schema_version": SNAPSHOT_SCHEMA_VERSION,
             "t": self._now(),
             "queue_depth": len(self.scheduler.queue),
             "occupancy": self.pool.num_occupied,
@@ -458,6 +559,10 @@ class Engine:
             out["budget"] = self.ladder.budgets[self._rung]
         if self.controller is not None:
             out.update(self.controller.snapshot())
+        if self.spec_decoder is not None:
+            out.update(self.spec_decoder.snapshot())
+            out["spec_accept_rate"] = round(
+                s.spec_accepted_tokens / max(1, s.spec_draft_tokens), 4)
         return out
 
     # ------------------------------------------------------------------

@@ -9,7 +9,20 @@ Prefill results enter the pool through ``insert`` — a jitted per-leaf
 ``dynamic_update_slice`` at the slot's batch index (and time offset 0 for
 the KV time dim), driven by the schema's logical axes so every cache
 layout (self-attn KV, rolling-window KV, SSM conv/state) inserts through
-the same code path."""
+the same code path.
+
+Speculative decoding adds per-slot length bookkeeping with
+``commit``/``rollback``: a verify forward writes a whole draft window in
+place, the engine commits it, and ``rollback(slot, n)`` truncates the
+rejected suffix — a donated in-place zeroing of the slot's last ``n``
+cache positions (``rollback_many`` batches a whole round's truncations
+into one dispatch), so rejected draft tokens vanish from the cache and
+the post-rollback state is bit-identical to one that never saw them.
+Slot-state mutators validate eagerly (double ``free``, ``insert`` into an
+unallocated slot, out-of-range ``commit``/``rollback`` all raise with the
+slot id): with rollback in the mix, silent slot-state corruption is far
+too easy to hit.
+"""
 from __future__ import annotations
 
 from typing import List
@@ -40,11 +53,20 @@ class SlotKVPool:
         self._axes = P.logical_axes(schema)
         self._flat_axes = jax.tree_util.tree_leaves(
             self._axes, is_leaf=_axes_leaf)
+        # rollback truncates by absolute time position, which is only
+        # meaningful when every leaf is a full-length self-attn cache
+        # (rolling windows index time mod window; SSM state has no time)
+        self._can_rollback = all(
+            "kv_seq" in axes for axes in self._flat_axes) and all(
+            leaf.shape[axes.index("kv_seq")] == max_len
+            for leaf, axes in zip(jax.tree_util.tree_leaves(self.caches),
+                                  self._flat_axes))
         self._free: List[int] = list(range(max_slots))[::-1]   # pop() -> 0 first
         self.lengths = np.zeros(max_slots, np.int64)
-        # donate the pool into the insert like the decode/chunk steps do —
-        # without it every insertion copies the whole pool tree
+        # donate the pool into the insert/rollback like the decode/chunk
+        # steps do — without it every call copies the whole pool tree
         self._insert_jit = jax.jit(self._insert_tree, donate_argnums=(0,))
+        self._rollback_jit = jax.jit(self._rollback_tree, donate_argnums=(0,))
 
     # ---- slot management -------------------------------------------------
     @property
@@ -55,15 +77,88 @@ class SlotKVPool:
     def num_occupied(self) -> int:
         return self.max_slots - len(self._free)
 
+    def _check_allocated(self, slot: int, op: str) -> None:
+        if not 0 <= slot < self.max_slots:
+            raise ValueError(
+                f"{op}: slot {slot} outside [0, {self.max_slots})")
+        if slot in self._free:
+            raise ValueError(f"{op}: slot {slot} is not allocated")
+
     def alloc(self) -> int:
         if not self._free:
             raise RuntimeError("no free KV slots")
         return self._free.pop()
 
     def free(self, slot: int) -> None:
-        assert 0 <= slot < self.max_slots and slot not in self._free, slot
+        self._check_allocated(slot, "free")      # double-free raises here
         self.lengths[slot] = 0
         self._free.append(slot)
+
+    # ---- length bookkeeping (speculative decoding) ----------------------
+    def commit(self, slot: int, n: int) -> None:
+        """Account ``n`` newly written cache positions to ``slot``
+        (bookkeeping only — the forward already wrote them in place)."""
+        self._check_allocated(slot, "commit")
+        if n < 0:
+            raise ValueError(f"commit: negative token count {n}")
+        new_len = int(self.lengths[slot]) + n
+        if new_len > self.max_len:
+            raise ValueError(
+                f"commit: slot {slot} length {new_len} exceeds the pool's "
+                f"{self.max_len}")
+        self.lengths[slot] = new_len
+
+    def rollback(self, slot: int, n: int) -> None:
+        """Truncate the last ``n`` committed positions of ``slot``: zero
+        their cache entries (donated in-place write, like ``insert``) and
+        shrink the slot's length, so rejected draft tokens leave no
+        trace — the cache is bit-identical to one that never saw them."""
+        self.rollback_many({slot: n})
+
+    def rollback_many(self, per_slot) -> None:
+        """Roll back several slots in one donated device call (the spec
+        engine truncates every rejected draft suffix of a round at once —
+        one dispatch instead of one per slot).  ``per_slot``: {slot: n}.
+        Validates every entry before touching anything."""
+        starts = np.copy(self.lengths)
+        for slot, n in per_slot.items():
+            self._check_allocated(slot, "rollback")
+            length = int(self.lengths[slot])
+            if not 0 <= n <= length:
+                raise ValueError(
+                    f"rollback: slot {slot} cannot roll back {n} of "
+                    f"{length} positions")
+            starts[slot] = length - n
+        if all(n == 0 for n in per_slot.values()):
+            return
+        if not self._can_rollback:
+            raise ValueError(
+                "rollback needs full-length self-attention caches; "
+                "rolling-window and SSM cache layouts cannot truncate by "
+                "position")
+        self.caches = self._rollback_jit(
+            self.caches, jnp.asarray(starts, jnp.int32),
+            jnp.asarray(self.lengths, jnp.int32))
+        for slot in per_slot:
+            self.lengths[slot] = starts[slot]
+
+    def _rollback_tree(self, pool, starts, ends):
+        """Zero time positions [starts[s], ends[s]) of every slot row.
+        Every cache layout stores batch before kv_seq, so the (S, T) keep
+        mask reshapes straight into each leaf's broadcast shape."""
+        pool_leaves, treedef = jax.tree_util.tree_flatten(pool)
+        out = []
+        for pl, axes in zip(pool_leaves, self._flat_axes):
+            b_ax = axes.index("batch")
+            t_ax = axes.index("kv_seq")
+            t = jnp.arange(pl.shape[t_ax])
+            keep = ((t[None, :] < starts[:, None])
+                    | (t[None, :] >= ends[:, None]))       # (S, T)
+            shape = [1] * pl.ndim
+            shape[b_ax] = pl.shape[b_ax]
+            shape[t_ax] = pl.shape[t_ax]
+            out.append(pl * keep.reshape(shape).astype(pl.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     # ---- prefill insertion ----------------------------------------------
     def _insert_tree(self, pool, pref, src, slot):
@@ -84,6 +179,7 @@ class SlotKVPool:
         """Copy request ``src_idx`` of a prefill cache tree (shorter time
         dim allowed) into ``slot``.  Retraces per distinct prefill shape;
         the decode-facing pool shapes never change."""
+        self._check_allocated(slot, "insert")
         self.caches = self._insert_jit(self.caches, prefill_caches,
                                        jnp.int32(src_idx), jnp.int32(slot))
         self.lengths[slot] = length

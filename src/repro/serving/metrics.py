@@ -97,6 +97,21 @@ class EngineStats:
     # so it rises under admission pressure even when the batched decode
     # step itself is constant-time)
     tpot_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    # --- speculative decoding -------------------------------------------
+    spec_rounds: int = 0                     # spec rounds (draft + verify)
+    spec_draft_steps: int = 0                # single-token drafter steps
+    spec_verifies: int = 0                   # per-slot verify outcomes
+    spec_draft_tokens: int = 0               # drafted tokens (gamma/slot)
+    spec_accepted_tokens: int = 0            # drafts surviving verification
+    spec_committed_tokens: int = 0           # emitted by spec (incl. bonus)
+    # per-round phase latencies: one draft sample covers the round's gamma
+    # sequential drafter steps, one verify sample the batched verify forward
+    spec_draft_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    spec_verify_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    # per-slot per-round accepted-draft counts (the acceptance *series*;
+    # the whole-run rate comes from the exact counters above)
+    spec_accepted_per_verify: RingBuffer = dataclasses.field(
+        default_factory=RingBuffer)
 
     def sample(self, queue_depth: int, occupied_slots: int) -> None:
         self.queue_depth.append(queue_depth)
@@ -132,6 +147,22 @@ class EngineStats:
         if self.tpot_s:
             out["tpot_p50_s"] = round(self.tpot_percentile(50), 5)
             out["tpot_p95_s"] = round(self.tpot_percentile(95), 5)
+        if self.spec_rounds:
+            out["spec_rounds"] = self.spec_rounds
+            out["spec_committed_tokens"] = self.spec_committed_tokens
+            out["spec_accept_rate"] = round(
+                self.spec_accepted_tokens / max(1, self.spec_draft_tokens), 4)
+            out["spec_accepted_per_verify"] = round(
+                self.spec_accepted_tokens / max(1, self.spec_verifies), 3)
+            apv = self.spec_accepted_per_verify
+            if apv:
+                out["spec_accepted_per_verify_p50"] = percentile(apv, 50)
+                out["spec_accepted_per_verify_p95"] = percentile(apv, 95)
+            for name, buf in (("spec_draft", self.spec_draft_s),
+                              ("spec_verify", self.spec_verify_s)):
+                if buf:
+                    out[f"{name}_p50_s"] = round(percentile(buf, 50), 5)
+                    out[f"{name}_p95_s"] = round(percentile(buf, 95), 5)
         return out
 
 
