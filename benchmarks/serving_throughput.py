@@ -23,6 +23,7 @@ typically protect.
         [--modes off,topk_shared,topk_block,mixed] [--requests 16] [--rate 8]
     PYTHONPATH=src python -m benchmarks.serving_throughput --controller
     PYTHONPATH=src python -m benchmarks.serving_throughput --spec
+    PYTHONPATH=src python -m benchmarks.serving_throughput --prefix-cache
     PYTHONPATH=src python -m benchmarks.serving_throughput --smoke   # CI
 
 ``--controller`` runs the SLO-aware adaptive sweep instead: a *stepped*
@@ -44,6 +45,13 @@ accept rate per (drafter rung, gamma) so future PRs can tune defaults
 from data, and enforces two hard gates: spec output token-identical to
 verifier-only decode across the whole trace, and zero decode/verify
 retraces after warmup.
+
+``--prefix-cache`` runs the shared-system-prompt sweep: every trace
+request shares one long system prefix plus a short unique suffix, and
+the same Poisson trace replays against a cold-prefill engine and a
+prefix-cache engine.  Hard gates: whole-trace token parity (cache-hit
+generations must be bit-identical to cold prefill), hit rate >= 0.75,
+warm TTFT p50 <= 0.6x cold, and zero decode retraces after warmup.
 
 The default model is a reduced-but-not-tiny llama31_8b variant
 (d_model=768, d_ff=6144, 4 layers) — large enough that decode is
@@ -419,6 +427,104 @@ def run_controller(log=print, cfg=None, budgets=(0.0, 0.5, 0.75),
     return rows
 
 
+def run_prefix(log=print, cfg=None, n_requests=12, rate_hz=8.0,
+               sys_len=160, sfx_lens=(8, 16, 32), gen_tokens=32,
+               max_slots=4, chunk=32, seed=0, reps=2,
+               ttft_gate=0.6, hit_gate=0.75, check=True,
+               check_ttft=True):
+    """Shared-system-prompt sweep: prefix-cache engine vs cold prefill.
+
+    Every trace request is ``system prefix (sys_len tokens) + unique
+    suffix``; one priming request (a suffix outside the trace) is run to
+    completion on both engines before measuring, so the cache is
+    populated and the trace's hit rate is deterministic rather than a
+    race against the first request's prefill.  Reps are interleaved
+    (cold, warm, cold, warm) and each engine keeps its best rep, the
+    same drift-cancelling protocol as ``run()``.  The parity gate runs
+    on EVERY warm rep: dense decode is per-row deterministic, so the
+    warm engine must reproduce the cold engine's tokens exactly no
+    matter how the faster prefill reshuffles batching."""
+    cfg = cfg or bench_config()
+    params = api.init_model(cfg, 0)
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_requests))
+    sfx = rng.choice(sfx_lens, size=n_requests)
+    pool = np.asarray(SyntheticLM(DataConfig(
+        cfg.vocab_size, sys_len + max(sfx_lens), n_requests + 2)).batch(0))
+    system = pool[0, :sys_len]
+    prompts = [np.concatenate([system, pool[i + 1, :sfx[i]]])
+               for i in range(n_requests)]
+    prime = np.concatenate([system, pool[-1, :max(sfx_lens)]])
+    max_len = sys_len + max(sfx_lens) + gen_tokens
+
+    def fresh(prefix: bool) -> Engine:
+        eng = Engine(params, cfg, EngineConfig(
+            max_slots=max_slots, max_len=max_len, prefill_chunk=chunk,
+            prefix_cache=prefix), None)
+        eng.warmup()
+        eng.submit(prime, 2)      # populate the cache / warm executables
+        eng.run()
+        eng.stats = EngineStats()
+        return eng
+
+    engines = {"cold": fresh(False), "warm": fresh(True)}
+    best = {}
+    for rep in range(reps):
+        rep_states = {}
+        for mode, eng in engines.items():
+            eng.stats = EngineStats()
+            states = replay(eng, prompts, arrivals, gen_tokens)
+            rep_states[mode] = states
+            lat = latency_percentiles(states)
+            if mode not in best or lat["ttft_p50"] < best[mode][1]["ttft_p50"]:
+                best[mode] = (eng.stats, lat, states)
+        for i, (sw, sc) in enumerate(zip(rep_states["warm"],
+                                         rep_states["cold"])):
+            assert sw.tokens == sc.tokens, \
+                f"prefix-cache run diverged from cold prefill on trace " \
+                f"request {i} (rep {rep})"
+    log(f"prefix-cache parity vs cold prefill: OK "
+        f"({n_requests} requests x {reps} reps)")
+    rows = [("serving/prefix/parity_vs_cold", 0.0, "ok")]
+
+    warm_stats = best["warm"][0]
+    hit_rate = warm_stats.prefix_hits / max(1, warm_stats.prefix_lookups)
+    retraces = engines["warm"].decode_retraces_after_warmup
+    for mode in engines:
+        s, lat, _ = best[mode]
+        log(f"{mode:6s} ttft p50 {lat['ttft_p50']*1e3:7.1f}ms p95 "
+            f"{lat['ttft_p95']*1e3:7.1f}ms | latency p50 "
+            f"{lat['latency_p50']:.2f}s | prefill {s.prefill_tokens} tok "
+            f"in {s.prefill_time:.2f}s | decode {s.decode_tps:7.1f} tok/s")
+        rows.append((f"serving/prefix/ttft/{mode}", 0.0,
+                     f"p50={lat['ttft_p50']:.4f}s;"
+                     f"p95={lat['ttft_p95']:.4f}s"))
+    ratio = best["warm"][1]["ttft_p50"] / best["cold"][1]["ttft_p50"]
+    log(f"prefix-cache TTFT p50: {ratio:.2f}x cold | hit rate "
+        f"{hit_rate:.1%} | {warm_stats.prefix_tokens_saved} prompt tokens "
+        f"not re-prefilled | decode retraces after warmup {retraces}")
+    rows.append(("serving/prefix/ttft_p50_ratio", 0.0,
+                 f"x{ratio:.3f};gate<={ttft_gate}"))
+    rows.append(("serving/prefix/hit_rate", 0.0,
+                 f"{hit_rate:.3f};tokens_saved="
+                 f"{warm_stats.prefix_tokens_saved}"))
+    rows.append(("serving/prefix/decode_retraces_after_warmup", 0.0,
+                 str(retraces)))
+    if check:
+        assert hit_rate > 0, "prefix cache never hit on a shared-prefix trace"
+        assert retraces == 0, \
+            f"{retraces} decode retrace(s) after warmup — prefix " \
+            "admission must not disturb the decode executable"
+        if check_ttft:
+            assert hit_rate >= hit_gate, \
+                f"hit rate {hit_rate:.2f} below the {hit_gate} gate"
+            assert ratio <= ttft_gate, \
+                f"prefix-cache TTFT p50 is {ratio:.2f}x cold, above the " \
+                f"{ttft_gate}x gate"
+    return rows
+
+
 # the spec sweep's synthetic language: lower Markov branching, denser
 # copy motifs and a steeper Zipf base than the stock defaults.  The
 # paper's premise is a *confident trained* model whose outputs 50%
@@ -595,7 +701,10 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=8.0)
     ap.add_argument("--gen", type=int, default=48)
-    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=None,
+                    help="KV pool slots (default: 8; the --prefix-cache "
+                         "sweep defaults to 4 — the latency-bound regime "
+                         "its TTFT gate is calibrated for)")
     ap.add_argument("--sparsity", type=float, default=0.5)
     ap.add_argument("--sensitive-frac", type=float, default=0.25)
     ap.add_argument("--seed", type=int, default=0)
@@ -611,13 +720,33 @@ def main():
                     help="run only the self-speculative decoding sweep "
                          "(quick-trained model, draft/verify vs plain "
                          "decode, parity + retrace gates)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="run only the shared-system-prompt prefix-cache "
+                         "sweep (warm vs cold prefill, token-parity + "
+                         "TTFT + hit-rate + retrace gates)")
     ap.add_argument("--spec-gamma", type=int, default=2,
                     help="draft length for the main spec scenario")
     ap.add_argument("--spec-train-steps", type=int, default=50,
                     help="quick-train steps before the spec sweep (0 "
                          "skips training; expect ~zero acceptance)")
     args = ap.parse_args()
-    if args.spec:
+    if args.prefix_cache:
+        if args.smoke:
+            # tiny model + trace: exercises admission copy, mid-edge
+            # radix matching, publish and the parity/retrace gates; the
+            # TTFT ratio is too noisy to gate at this scale
+            rows = run_prefix(
+                cfg=bench_config(d_model=128, d_ff=512, layers=4,
+                                 vocab=512),
+                n_requests=4, rate_hz=4.0, sys_len=24, sfx_lens=(4, 8),
+                gen_tokens=6, max_slots=2, chunk=8, seed=args.seed,
+                reps=1, check_ttft=False)
+        else:
+            rows = run_prefix(n_requests=args.requests, rate_hz=args.rate,
+                              gen_tokens=args.gen,
+                              max_slots=args.slots or 4,
+                              seed=args.seed, reps=args.reps)
+    elif args.spec:
         if args.smoke:
             # tiny + untrained: exercises the full draft/verify/rollback
             # path, the parity gate and the retrace gate; no acceptance
@@ -644,12 +773,13 @@ def main():
                 max_queue=1, dwell=2, check=False)
         else:
             rows = run_controller(gen_tokens=args.gen,
-                                  max_slots=args.slots, seed=args.seed)
+                                  max_slots=args.slots or 8,
+                                  seed=args.seed)
     else:
         kw = dict(modes=tuple(args.modes.split(",")),
                   n_requests=args.requests,
                   rate_hz=args.rate, gen_tokens=args.gen,
-                  max_slots=args.slots,
+                  max_slots=args.slots or 8,
                   sparsity=args.sparsity, seed=args.seed, reps=args.reps,
                   sensitive_frac=args.sensitive_frac)
         if args.smoke:

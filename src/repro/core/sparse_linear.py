@@ -13,7 +13,8 @@ WiSparse parameters (all traced arrays so they can ride through
 The *static* execution config is an explicit :class:`SparsityPolicy`
 value (``repro.sparsity``): which backend runs where (globally, per
 layer-role, per block range), the static top-k bound, the Pallas block
-size/interpret flag, and the optional calibration capture hook.  Because
+size/interpret flag (``interpret=None`` auto-detects — compiled on TPU,
+interpreted elsewhere), and the optional calibration capture hook.  Because
 backends differ in lowering, the policy is a hashable static jit argument
 — never ambient state — so concurrent engines with different policies can
 never share a trace.  ``policy=None`` means dense execution; the

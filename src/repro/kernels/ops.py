@@ -20,20 +20,37 @@ from repro.kernels import sparse_matmul as K
 
 
 def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = 1.0,
-                     interpret: bool = True, per_seq: bool = False,
+                     interpret=None, per_seq: bool = False,
                      token_weights=None):
     """x: (..., n); w: (n, *out).  Returns x W with WiSparse block sparsity.
+
+    interpret: Pallas interpret mode — ``None`` (default) auto-detects
+    from the backend (compiled on TPU, interpreted elsewhere), matching
+    ``SparsityPolicy.interpret``.
 
     token_weights: per-row weights for the shared block-score aggregate
     (the serving engine's active-slot / real-token mask, fused into the
     kernel); explicit None disables weighting."""
+    interpret = K._resolve_interpret(interpret)
     n = w.shape[0]
     w2 = w.reshape(n, -1)
     lead = x.shape[:-1]
     xf = x.reshape(-1, n)
     blk = min(block, n)
-    while n % blk:
-        blk -= 1
+    g = sp["g"]
+    pad = -n % blk
+    if pad:
+        # keep full-width channel blocks on non-divisible dims by
+        # zero-padding the channel axis (the old `while n % blk: blk -= 1`
+        # fallback degraded to 1-wide blocks on prime dims, destroying
+        # both MXU tiles and the block-selection granularity).  Exact:
+        # padded channels score |0|*g^a = 0 and multiply zero weight
+        # rows, so the tail block just aggregates fewer real channels —
+        # the same partial-block semantics as the jnp topk_block path.
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+        g = jnp.pad(g, (0, pad))
+        n += pad
     nb = n // blk
     kb = max(1, min(nb, round(nb * k_frac)))
 
@@ -43,7 +60,7 @@ def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = 1.0,
             f"token_weights has {tw.size} rows but the projection sees "
             f"{xf.shape[0]} token rows; pass token_weights=None for "
             "dispatch-reshaped projections")
-    xm, bs = K.score_mask(xf, sp["g"], sp["alpha"], sp["tau"], blk=blk,
+    xm, bs = K.score_mask(xf, g, sp["alpha"], sp["tau"], blk=blk,
                           interpret=interpret, row_weights=tw)
     _, idx = jax.lax.top_k(bs, kb)
     # per-layer budget: zero blocks ranked past keep_frac*nb

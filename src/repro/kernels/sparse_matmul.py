@@ -19,6 +19,7 @@ Two variants:
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +30,46 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLK = 128      # channel-block (lane) size
 DEFAULT_MT = 256       # output tile
 DEFAULT_BT = 8         # batch tile
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU.  Kernel
+    callers that pass ``interpret=None`` get this — so forgetting the
+    kwarg can no longer silently run the interpreter on real TPUs (or
+    crash on CPU with a compiled kernel)."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else interpret
+
+
+def _fit_tile(size: int, want: int) -> int:
+    """Tile for a dim of ``size``: the largest divisor of ``size`` in
+    [want/2, want] if one exists (full-width tiles, zero padding —
+    e.g. 384 under a 256 tile runs at 192), else ``want`` with the
+    caller padding up to a multiple.  Never degrades below want/2, so
+    prime dims pad instead of collapsing to 1-wide tiles."""
+    want = min(want, size)
+    for t in range(want, max(want // 2, 1) - 1, -1):
+        if size % t == 0:
+            return t
+    return want
+
+
+def _pad_dim(a, axis: int, tile: int):
+    """Pad ``axis`` up to a multiple of ``tile`` (zeros).  Returns the
+    padded array and the padded size.  Zero-padding is exact here: extra
+    batch rows compute garbage rows that are sliced away, and extra
+    output columns only ever multiply against zero weight columns."""
+    size = a.shape[axis]
+    pad = -size % tile
+    if pad:
+        pads = [(0, 0)] * a.ndim
+        pads[axis] = (0, pad)
+        a = jnp.pad(a, pads)
+    return a, size + pad
 
 
 def _acc_kernel(idx_ref, x_ref, w_ref, o_ref):
@@ -45,27 +86,32 @@ def _acc_kernel(idx_ref, x_ref, w_ref, o_ref):
 
 def sparse_matmul_shared(x, w, block_idx, *, blk: int = DEFAULT_BLK,
                          mt: int = DEFAULT_MT, bt: int = DEFAULT_BT,
-                         interpret: bool = True):
+                         interpret: Optional[bool] = None):
     """y[b, :] = sum_{kept blocks i} x[b, blk_i] @ w[blk_i, :].
 
     x: (B, n) already per-channel masked; w: (n, m); block_idx: (kb,) int32
     kept channel-block ids (entries may repeat-pad with 0 iff the padded
     lanes of x were zeroed).  Returns (B, m) float32.
+
+    Tiles shrink only to a clean divisor in [tile/2, tile]; otherwise
+    the dim is zero-padded up to a tile multiple and the result sliced
+    back — full-width MXU tiles regardless of shape.  (The old fallback
+    shrank the tile until it divided, which silently degraded to 1-wide
+    tiles on prime dims.)
     """
+    interpret = _resolve_interpret(interpret)
     B, n = x.shape
     m = w.shape[1]
     kb = block_idx.shape[0]
     blk = min(blk, n)
     assert n % blk == 0, (n, blk)
-    mt = min(mt, m)
-    while m % mt:
-        mt -= 1
-    bt = min(bt, B)
-    while B % bt:
-        bt -= 1
+    mt = _fit_tile(m, mt)
+    bt = _fit_tile(B, bt)
+    x, Bp = _pad_dim(x, 0, bt)
+    w, mp = _pad_dim(w, 1, mt)
 
-    grid = (B // bt, m // mt, kb)
-    return pl.pallas_call(
+    grid = (Bp // bt, mp // mt, kb)
+    y = pl.pallas_call(
         _acc_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -76,9 +122,10 @@ def sparse_matmul_shared(x, w, block_idx, *, blk: int = DEFAULT_BLK,
             ],
             out_specs=pl.BlockSpec((bt, mt), lambda b, j, i, idx: (b, j)),
         ),
-        out_shape=jax.ShapeDtypeStruct((B, m), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
         interpret=interpret,
     )(block_idx, x, w)
+    return y[:B, :m] if (Bp, mp) != (B, m) else y
 
 
 def _acc_kernel_perseq(idx_ref, x_ref, w_ref, o_ref):
@@ -93,22 +140,25 @@ def _acc_kernel_perseq(idx_ref, x_ref, w_ref, o_ref):
 
 
 def sparse_matmul_per_seq(x, w, block_idx, *, blk: int = DEFAULT_BLK,
-                          mt: int = DEFAULT_MT, interpret: bool = True):
+                          mt: int = DEFAULT_MT,
+                          interpret: Optional[bool] = None):
     """Per-sequence kept-block sets (paper's per-token masks).
 
     x: (B, n) masked; w: (n, m); block_idx: (B, kb) int32.  Returns (B, m).
+    Non-divisible output dims shrink to a clean divisor tile or pad
+    (see sparse_matmul_shared).
     """
+    interpret = _resolve_interpret(interpret)
     B, n = x.shape
     m = w.shape[1]
     kb = block_idx.shape[1]
     blk = min(blk, n)
     assert n % blk == 0
-    mt = min(mt, m)
-    while m % mt:
-        mt -= 1
+    mt = _fit_tile(m, mt)
+    w, mp = _pad_dim(w, 1, mt)
 
-    grid = (B, m // mt, kb)
-    return pl.pallas_call(
+    grid = (B, mp // mt, kb)
+    y = pl.pallas_call(
         _acc_kernel_perseq,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
@@ -119,9 +169,10 @@ def sparse_matmul_per_seq(x, w, block_idx, *, blk: int = DEFAULT_BLK,
             ],
             out_specs=pl.BlockSpec((1, mt), lambda b, j, i, idx: (b, j)),
         ),
-        out_shape=jax.ShapeDtypeStruct((B, m), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((B, mp), jnp.float32),
         interpret=interpret,
     )(block_idx, x, w)
+    return y[:, :m] if mp != m else y
 
 
 def _score_mask_kernel(ab_ref, x_ref, g_ref, w_ref, xm_ref, bs_ref):
@@ -141,10 +192,11 @@ def _score_mask_kernel(ab_ref, x_ref, g_ref, w_ref, xm_ref, bs_ref):
 
 
 def score_mask(x, g, alpha, tau, *, blk: int = DEFAULT_BLK,
-               interpret: bool = True, row_weights=None):
+               interpret: Optional[bool] = None, row_weights=None):
     """Returns (x_masked (B,n), block_scores (n//blk,)) — Eq. 4/5 fused.
     row_weights (B,) optionally weights each row's block-score
     contribution (the serving engine's active-slot / real-token mask)."""
+    interpret = _resolve_interpret(interpret)
     B, n = x.shape
     blk = min(blk, n)
     assert n % blk == 0

@@ -26,6 +26,14 @@ fewer verifier passes per token.  The verifier rung must decode dense
 (rung 0 of a calibrated ladder); the engine rejects sparse verifiers,
 whose shared top-k saliency would break the parity guarantee.
 ``--spec-adaptive`` lets the acceptance EWMA tune gamma at runtime.
+
+Prefix caching: ``--prefix-cache`` arms radix-tree KV reuse across
+requests sharing a prompt prefix (``repro.serving.prefix_cache``) —
+admissions copy the matched prefix into their slot and prefill only the
+un-cached suffix.  ``--prefix-cache-tokens N`` bounds the cached tokens
+(LRU eviction; 0 = unbounded).  Requires chunked prefill and a
+prefix-deterministic prefill policy (dense or ``mask``) — the engine
+validates and the hit path stays token-identical to cold prefill.
 """
 from __future__ import annotations
 
@@ -149,6 +157,13 @@ def main():
                          "the verifier rung pinned by --rung)")
     ap.add_argument("--spec-adaptive", action="store_true",
                     help="tune gamma from the acceptance EWMA at runtime")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse KV across requests sharing a prompt "
+                         "prefix (radix tree over token ids; needs "
+                         "chunked prefill + dense/mask prefill policy)")
+    ap.add_argument("--prefix-cache-tokens", type=int, default=0,
+                    help="cached-token budget for --prefix-cache "
+                         "(LRU eviction; 0 = unbounded)")
     ap.add_argument("--metrics-out", default=None,
                     help="append engine/controller snapshots to this "
                          "JSONL file while serving")
@@ -185,6 +200,12 @@ def main():
     elif args.spec_adaptive or args.spec_drafter != 1:
         raise SystemExit("--spec-drafter/--spec-adaptive need "
                          "--spec-gamma > 0 to arm speculative decoding")
+    if args.prefix_cache and args.legacy:
+        raise SystemExit("--prefix-cache needs the engine path, not "
+                         "--legacy")
+    if args.prefix_cache_tokens and not args.prefix_cache:
+        raise SystemExit("--prefix-cache-tokens needs --prefix-cache to "
+                         "arm the prefix cache")
 
     ladder = None
     if args.ladder is not None:
@@ -246,7 +267,9 @@ def main():
         prefill_chunk=args.chunk,
         policy=None if ladder is not None else policy,
         prefill_strategy=args.prefill_strategy,
-        slo=slo, initial_rung=args.rung, spec=spec)
+        slo=slo, initial_rung=args.rung, spec=spec,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_tokens=args.prefix_cache_tokens)
     engine = Engine(params, cfg, ecfg, sp, ladder=ladder)
     t0 = time.time()
     for b in range(args.batch):
@@ -268,6 +291,8 @@ def main():
         print("retraces after warmup: decode",
               engine.decode_retraces_after_warmup, "verify",
               engine.verify_retraces_after_warmup)
+    if engine.prefix_cache is not None:
+        print("prefix cache:", engine.prefix_cache.snapshot())
     print("sample:", out[0][:16])
 
 

@@ -74,6 +74,16 @@ def cache_schema(cfg: ModelConfig, batch: int, cache_len: int):
     return groups
 
 
+def prefix_segment_schema(cfg: ModelConfig, length: int):
+    """Schema of one slot's KV *prefix segment* — the immutable unit the
+    serving prefix cache (``repro.serving.prefix_cache``) extracts from
+    and copies into the slot pool: the cache tree for a single sequence
+    (batch=1) truncated to ``length`` positions.  Deriving it from
+    :func:`cache_schema` keeps segment layouts and pool layouts in
+    lockstep by construction."""
+    return cache_schema(cfg, 1, length)
+
+
 # ---------------------------------------------------------------------------
 # Input specs (ShapeDtypeStruct stand-ins, no allocation)
 # ---------------------------------------------------------------------------
@@ -228,7 +238,12 @@ def make_chunk_prefill_step(cfg: ModelConfig):
     (1,C) at chunk-start ``offset`` for pool slot ``slot``.  Pad tokens in
     the final chunk carry zero weight in the shared saliency (explicit
     ``weights`` argument).  Returns logits for every chunk position (the
-    engine reads the last real one) and the updated pool."""
+    engine reads the last real one) and the updated pool.
+
+    ``offset`` need not be 0 for the first chunk: under prefix caching
+    the slot's positions ``[0, offset)`` hold a reused cached prefix and
+    prefill starts at the matched length — the chunk attends the cached
+    span through the same causal mask as its own earlier chunks."""
     def chunk_prefill_step(params, tokens, offset, slot, caches, sp=None,
                            weights=None, policy=None):
         logits, caches = M.forward(

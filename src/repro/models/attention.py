@@ -197,7 +197,11 @@ def chunk_attention(q, k_cache, v_cache, offset, *, attn_softcap: float = 0.0):
     of the chunk — a scalar shared across the batch (chunked prefill) or a
     (B,) vector of per-row offsets (the speculative-decoding verify
     forward, where every slot verifies its own window).  Slots beyond
-    offset+C hold stale data and are masked out.
+    offset+C hold stale data and are masked out; this masking is also
+    what makes a prefix-cache admission's copied tail (segment data
+    past the matched length) unobservable — every position is rewritten
+    by the suffix prefill or decode before any query can reach it, and
+    masked until then.
     """
     B, C, H, hd = q.shape
     KV, T = k_cache.shape[1], k_cache.shape[3]

@@ -114,7 +114,10 @@ def attn_apply(p, x, cfg: ModelConfig, kind: str, sp=None, cache=None,
     ``positions`` (B,) its chunk-start offset.  The chunk's K/V are written
     in place at (slot, offset) via dynamic_update_slice and attention runs
     against the slot's full cache row, so every chunk reuses one compiled
-    step regardless of prompt length or pool occupancy.
+    step regardless of prompt length or pool occupancy.  The slot's
+    positions before the offset may equally be a prefix-cache copy
+    (``repro.serving.prefix_cache``) rather than this request's own
+    earlier chunks — the causal mask treats both identically.
 
     mode "verify" is the speculative-decoding verify forward: x's batch
     dim *is* the pool's slot dim, row s carrying slot s's (gamma+1)-token

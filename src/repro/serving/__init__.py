@@ -13,13 +13,19 @@ a runtime resource — rung switches under load, retrace-free.
 
 Speculative decoding: ``EngineConfig.spec`` (a ``SpecConfig``) turns the
 ladder's cheap rungs into drafters for the dense verifier rung — same
-output tokens, fewer verifier passes per token (``repro.serving.spec``)."""
+output tokens, fewer verifier passes per token (``repro.serving.spec``).
+
+Prefix caching: ``EngineConfig.prefix_cache`` reuses KV across requests
+that share a prompt prefix (system prompts, few-shot templates) via a
+radix tree over token ids (``repro.serving.prefix_cache``) — cache-hit
+generations stay bit-identical to cold prefill."""
 from repro.serving.controller import (AdaptiveController, SLOConfig,
                                       SpecController)
 from repro.serving.engine import (SNAPSHOT_SCHEMA_VERSION, Engine,
                                   EngineConfig)
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import EngineStats, RingBuffer, percentile
+from repro.serving.prefix_cache import PrefixCache, RadixTree
 from repro.serving.request import FinishReason, Request, RequestState, Status
 from repro.serving.scheduler import Scheduler
 from repro.serving.spec import SpecConfig, SpecDecoder
@@ -30,5 +36,5 @@ __all__ = [
     "percentile", "Request", "RequestState", "Status", "FinishReason",
     "Scheduler", "SparsityPolicy", "PolicyLadder", "AdaptiveController",
     "SLOConfig", "SpecConfig", "SpecDecoder", "SpecController",
-    "SNAPSHOT_SCHEMA_VERSION",
+    "PrefixCache", "RadixTree", "SNAPSHOT_SCHEMA_VERSION",
 ]

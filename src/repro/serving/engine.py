@@ -35,6 +35,16 @@ batched multi-token forward, and the KV pool rolls rejected drafts back
 (``repro.serving.spec``).  Output tokens are identical to verifier-only
 decode; warmup() additionally precompiles a verify executable per
 reachable gamma so gamma/drafter switches stay retrace-free.
+
+Prefix caching: with ``EngineConfig.prefix_cache`` completed prefills
+are published into a radix tree over prompt token ids
+(``repro.serving.prefix_cache``) and admissions that share a cached
+prefix copy it into their slot and chunk-prefill only the un-cached
+suffix — the single largest TTFT lever under shared-system-prompt
+traffic.  Requires chunked prefill and *prefix-deterministic* prefill
+policies (validated eagerly at construction: dense or per-token
+``mask`` backends, identical across rungs and prompt lengths), which is
+what makes a cache-hit generation bit-identical to cold prefill.
 """
 from __future__ import annotations
 
@@ -51,6 +61,7 @@ from repro.models import api
 from repro.serving.controller import AdaptiveController, SLOConfig
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import EngineStats, percentile
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import (FinishReason, Request, RequestState,
                                    Status)
 from repro.serving.scheduler import Scheduler
@@ -63,7 +74,9 @@ _CHUNKABLE_MIXERS = ("attn", "global")
 # load/latency/rung fields.  v2: adds "schema_version" itself plus the
 # speculative-decoding fields (spec_gamma, spec_drafter_rung,
 # spec_accept_ewma, spec_accept_rate) when spec decoding is armed.
-SNAPSHOT_SCHEMA_VERSION = 2
+# v3: adds the prefix-cache fields (prefix_hit_rate, prefix_tokens_saved,
+# prefix_cached_tokens, prefix_segments) when the prefix cache is armed.
+SNAPSHOT_SCHEMA_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +93,15 @@ class EngineConfig:
     drafter and verifier are rungs).  The engine then serves at the
     verifier rung and its decode actions run draft/verify rounds —
     token-identical output to verifier-only decode, fewer verifier
-    passes per token (``repro.serving.spec``)."""
+    passes per token (``repro.serving.spec``).
+
+    ``prefix_cache`` arms radix-tree KV prefix reuse
+    (``repro.serving.prefix_cache``): completed prefills publish into
+    the tree, admissions sharing a cached prefix skip straight to the
+    un-cached suffix.  ``prefix_cache_tokens`` bounds the cached
+    physical tokens (0 = unbounded; LRU eviction of unpinned leaves).
+    Needs chunked prefill and prefix-deterministic prefill policies —
+    validated eagerly at engine construction."""
     max_slots: int = 8
     max_len: int = 512
     prefill_chunk: int = 32
@@ -91,6 +112,8 @@ class EngineConfig:
     slo: Optional[SLOConfig] = None  # adaptive serving objectives
     initial_rung: int = 0            # ladder rung at engine start
     spec: Optional[SpecConfig] = None  # self-speculative decoding
+    prefix_cache: bool = False       # radix-tree KV prefix reuse
+    prefix_cache_tokens: int = 0     # cached-token budget (0 = unbounded)
 
     def __post_init__(self):
         pol = self.policy
@@ -115,6 +138,14 @@ class EngineConfig:
         if self.prefill_strategy not in ("auto", "chunked", "whole"):
             raise ValueError(
                 f"unknown prefill_strategy {self.prefill_strategy!r}")
+        if self.prefix_cache_tokens < 0:
+            raise ValueError(
+                f"prefix_cache_tokens must be >= 0, "
+                f"got {self.prefix_cache_tokens}")
+        if self.prefix_cache and self.prefill_strategy == "whole":
+            raise ValueError(
+                "prefix_cache needs chunked prefill: whole-prompt "
+                "prefill cannot start at a matched prefix length")
 
 
 class Engine:
@@ -230,6 +261,42 @@ class Engine:
                     f"chunked prefill needs plain-attention mixers, got {mixers}")
             self.prefill_strategy = ecfg.prefill_strategy
 
+        self.prefix_cache: Optional[PrefixCache] = None
+        if ecfg.prefix_cache:
+            if self.prefill_strategy != "chunked":
+                raise ValueError(
+                    "prefix_cache needs the chunked prefill strategy "
+                    f"(this arch resolved to {self.prefill_strategy!r}): "
+                    "rolling-window/SSM caches cannot resume mid-prompt")
+            # bit-exact reuse needs every rung's *effective* prefill
+            # policy to be independent of the prompt length and
+            # prefix-deterministic — otherwise a cached prefix would
+            # differ from what a cold prefill of the reusing request
+            # would have computed.  A multi-rung engine must prefill
+            # *dense*: rung sp trees differ, so even the per-token
+            # "mask" backend would make cached KV rung-dependent.
+            effective = [self._effective_prefill_policy(r)
+                         for r in range(len(self._rung_phases))]
+            if len(effective) > 1:
+                if not all(p.is_dense for p in effective):
+                    raise ValueError(
+                        "prefix_cache on a ladder engine needs every "
+                        "rung to prefill dense (a prefix cached at one "
+                        "rung seeds requests served at any rung, and "
+                        "rung sp trees differ); build the ladder with "
+                        "dense_phases=('prefill_dense', 'prefill_sparse')")
+            elif not effective[0].prefix_deterministic():
+                raise ValueError(
+                    f"prefix_cache needs a prefix-deterministic prefill "
+                    f"policy (per-token backends 'off'/'mask'), got "
+                    f"{effective[0].backend!r}: shared top-k saliency "
+                    "depends on the call's token rows, so cached KV "
+                    "would bake in the donor request's chunking and "
+                    "break the token-parity guarantee")
+            self.prefix_cache = PrefixCache(
+                self.pool, ecfg.prefill_chunk, ecfg.prefix_cache_tokens,
+                stats_fn=lambda: self.stats)
+
         slot_decode = api.make_slot_decode_step(cfg)
         chunk_step = api.make_chunk_prefill_step(cfg)
         prefill_step = api.make_prefill_step(cfg)
@@ -262,7 +329,8 @@ class Engine:
         if ecfg.spec is not None:
             self.spec_decoder = SpecDecoder(self, ecfg.spec)
 
-        if self.controller is not None or self.spec_decoder is not None:
+        if self.controller is not None or self.spec_decoder is not None \
+                or self.prefix_cache is not None:
             self.warmup()
 
     # ------------------------------------------------------------------
@@ -290,11 +358,34 @@ class Engine:
             raise ValueError(f"rung {i} outside [0, {self.num_rungs})")
         self._rung = i
 
+    def _effective_prefill_policy(self, rung: int) -> SparsityPolicy:
+        """The one policy every prefill chunk of ``rung`` runs under —
+        well-defined only when the §5.1 phase split cannot produce
+        prompt-length-dependent KV (the prefix-cache precondition)."""
+        pd, ps, _ = self._rung_phases[rung]
+        f = self.ecfg.prefill_dense_frac
+        if f >= 1.0:
+            return pd
+        if f <= 0.0:
+            return ps
+        if pd != ps:
+            raise ValueError(
+                f"prefix_cache with prefill_dense_frac={f} needs rung "
+                f"{rung}'s prefill_dense and prefill_sparse phase "
+                "policies to be equal: the dense/sparse boundary scales "
+                "with the prompt length, so a cached prefix would carry "
+                "a different phase split than a cold prefill of the "
+                "reusing request (set prefill_dense_frac to 0 or 1, or "
+                "make both phases dense)")
+        return pd
+
     def warmup(self) -> None:
         """Precompile every rung's decode (and chunked-prefill) phase
         executables — plus, under spec decoding, the verifier's verify
-        executable for every reachable draft length gamma — then zero the
-        post-warmup retrace baseline.  Only valid on an idle engine: the
+        executable for every reachable draft length gamma, and, under
+        prefix caching, the segment extract/copy executable for every
+        quantized prefix length — then zero the post-warmup retrace
+        baseline.  Only valid on an idle engine: the
         warmup chunk writes garbage into slot 0's cache prefix, which is
         harmless *before* any admission (the slot's real prefill
         overwrites it) but would corrupt a live request.  Rung and gamma
@@ -337,6 +428,11 @@ class Engine:
                     self.pool.caches, ver_sp,
                     jnp.zeros((S, g + 1), jnp.float32), policy=ver_pol)
                 logits.block_until_ready()
+        if self.prefix_cache is not None:
+            # segment extract/copy executables for every reachable
+            # quantized length — the first hit/publish must not stall
+            # live traffic on a compile
+            self.prefix_cache.warm(self.ecfg.max_len - 1)
         self._warm_traces = (
             self._decode_traces, self._chunk_traces,
             self.spec_decoder._verify_traces
@@ -387,7 +483,7 @@ class Engine:
     # ------------------------------------------------------------------
     def step(self) -> str:
         """Admit, then run one scheduler-chosen phase step."""
-        self.scheduler.admit(self.pool)
+        self.scheduler.admit(self.pool, self.prefix_cache)
         self.stats.sample(len(self.scheduler.queue), self.pool.num_occupied)
         action = self.scheduler.next_action()
         if action == "prefill":
@@ -447,6 +543,10 @@ class Engine:
         rs.next_offset = off + real
         self.pool.lengths[rs.slot] = rs.next_offset
         if rs.done_prefill:
+            if self.prefix_cache is not None:
+                # release the admission pin and cache this prompt's
+                # prefix before decode can extend the slot
+                self.prefix_cache.publish(rs)
             first = int(np.asarray(jnp.argmax(logits[0, real - 1])))
             self._start_decode(rs, first)
 
@@ -563,6 +663,8 @@ class Engine:
             out.update(self.spec_decoder.snapshot())
             out["spec_accept_rate"] = round(
                 s.spec_accepted_tokens / max(1, s.spec_draft_tokens), 4)
+        if self.prefix_cache is not None:
+            out.update(self.prefix_cache.snapshot())
         return out
 
     # ------------------------------------------------------------------

@@ -21,11 +21,22 @@ the post-rollback state is bit-identical to one that never saw them.
 Slot-state mutators validate eagerly (double ``free``, ``insert`` into an
 unallocated slot, out-of-range ``commit``/``rollback`` all raise with the
 slot id): with rollback in the mix, silent slot-state corruption is far
-too easy to hit.
+too easy to hit.  Slot-state checks consult a parallel *free-set* so
+they stay O(1) at production slot counts (the free *list* keeps the
+LIFO reuse order; the set mirrors it exactly — tested).
+
+Prefix caching adds an immutable segment layer
+(``repro.serving.prefix_cache``): ``extract_prefix`` copies the first
+``length`` cache positions of a slot out of the pool (one
+``dynamic_slice`` per leaf) and ``write_prefix`` copies a cached
+segment back into a slot at offset 0 (one donated
+``dynamic_update_slice`` per admission).  Segments are never mutated —
+a slot that received one only ever appends *past* the copied prefix —
+so one cached prefix can seed any number of slots.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Set
 
 import jax
 import jax.numpy as jnp
@@ -62,11 +73,20 @@ class SlotKVPool:
             for leaf, axes in zip(jax.tree_util.tree_leaves(self.caches),
                                   self._flat_axes))
         self._free: List[int] = list(range(max_slots))[::-1]   # pop() -> 0 first
+        self._free_set: Set[int] = set(self._free)   # O(1) slot-state checks
         self.lengths = np.zeros(max_slots, np.int64)
         # donate the pool into the insert/rollback like the decode/chunk
         # steps do — without it every call copies the whole pool tree
         self._insert_jit = jax.jit(self._insert_tree, donate_argnums=(0,))
         self._rollback_jit = jax.jit(self._rollback_tree, donate_argnums=(0,))
+        # prefix-segment layer: extract is a read (no donation); write
+        # donates the pool only — the segment is reused across admissions
+        self._segment_traces = 0     # python-side (re)trace counter: the
+        #                              engine warmup precompiles every
+        #                              quantized length, so serving-time
+        #                              hits/publishes must not grow this
+        self._extract_jit = jax.jit(self._extract_tree, static_argnums=(2,))
+        self._write_jit = jax.jit(self._write_tree, donate_argnums=(0,))
 
     # ---- slot management -------------------------------------------------
     @property
@@ -81,18 +101,21 @@ class SlotKVPool:
         if not 0 <= slot < self.max_slots:
             raise ValueError(
                 f"{op}: slot {slot} outside [0, {self.max_slots})")
-        if slot in self._free:
+        if slot in self._free_set:               # set: O(1), not O(max_slots)
             raise ValueError(f"{op}: slot {slot} is not allocated")
 
     def alloc(self) -> int:
         if not self._free:
             raise RuntimeError("no free KV slots")
-        return self._free.pop()
+        slot = self._free.pop()
+        self._free_set.remove(slot)
+        return slot
 
     def free(self, slot: int) -> None:
         self._check_allocated(slot, "free")      # double-free raises here
         self.lengths[slot] = 0
         self._free.append(slot)
+        self._free_set.add(slot)
 
     # ---- length bookkeeping (speculative decoding) ----------------------
     def commit(self, slot: int, n: int) -> None:
@@ -183,3 +206,75 @@ class SlotKVPool:
         self.caches = self._insert_jit(self.caches, prefill_caches,
                                        jnp.int32(src_idx), jnp.int32(slot))
         self.lengths[slot] = length
+
+    # ---- prefix segments (repro.serving.prefix_cache) -------------------
+    @property
+    def can_cache_prefix(self) -> bool:
+        """Prefix segments slice the ``kv_seq`` axis by absolute
+        position — only meaningful for full-length self-attention
+        caches (same precondition as rollback)."""
+        return self._can_rollback
+
+    def _extract_tree(self, pool, slot, length: int):
+        self._segment_traces += 1            # runs only while tracing
+        pool_leaves, treedef = jax.tree_util.tree_flatten(pool)
+        out = []
+        for pl, axes in zip(pool_leaves, self._flat_axes):
+            b_ax = axes.index("batch")
+            t_ax = axes.index("kv_seq")
+            starts = [0] * pl.ndim
+            starts[b_ax] = slot
+            sizes = list(pl.shape)
+            sizes[b_ax] = 1
+            sizes[t_ax] = length
+            out.append(jax.lax.dynamic_slice(pl, tuple(starts), tuple(sizes)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _write_tree(self, pool, seg, slot):
+        self._segment_traces += 1            # runs only while tracing
+        pool_leaves, treedef = jax.tree_util.tree_flatten(pool)
+        seg_leaves = jax.tree_util.tree_leaves(seg)
+        out = []
+        for pl, sl, axes in zip(pool_leaves, seg_leaves, self._flat_axes):
+            b_ax = axes.index("batch")
+            starts = [0] * pl.ndim
+            starts[b_ax] = slot
+            out.append(jax.lax.dynamic_update_slice(
+                pl, sl.astype(pl.dtype), tuple(starts)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def extract_prefix(self, slot: int, length: int):
+        """Copy cache positions ``[0, length)`` of ``slot`` out of the
+        pool as an immutable segment pytree (leaf batch dims become 1).
+        Compiles once per distinct ``length`` — callers quantize."""
+        self._check_allocated(slot, "extract_prefix")
+        if not self.can_cache_prefix:
+            raise ValueError(
+                "extract_prefix needs full-length self-attention caches")
+        if not 0 < length <= self.max_len:
+            raise ValueError(
+                f"extract_prefix: length {length} outside (0, {self.max_len}]")
+        return self._extract_jit(self.caches, jnp.int32(slot), length)
+
+    def write_prefix(self, seg, slot: int) -> None:
+        """Copy a cached segment into ``slot`` at offset 0 — the one
+        donated ``dynamic_update_slice`` a prefix-cache admission costs.
+        The *whole* physical segment is copied, so there is exactly one
+        executable per segment shape (all precompilable at engine
+        warmup): positions past the caller's matched length are either
+        overwritten by the suffix prefill / decode before they become
+        attendable, or masked (see ``chunk_attention``).  The segment
+        itself is never donated or mutated (it seeds arbitrarily many
+        slots)."""
+        self._check_allocated(slot, "write_prefix")
+        if not self.can_cache_prefix:
+            raise ValueError(
+                "write_prefix needs full-length self-attention caches")
+        seg_t = {leaf.shape[axes.index("kv_seq")]
+                 for leaf, axes in zip(jax.tree_util.tree_leaves(seg),
+                                       self._flat_axes)}
+        if len(seg_t) != 1 or not 0 < min(seg_t) <= self.max_len:
+            raise ValueError(
+                f"write_prefix: segment time dims {sorted(seg_t)} do not "
+                f"fit this pool's (0, {self.max_len}] positions")
+        self.caches = self._write_jit(self.caches, seg, jnp.int32(slot))

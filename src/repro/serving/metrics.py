@@ -112,6 +112,13 @@ class EngineStats:
     # the whole-run rate comes from the exact counters above)
     spec_accepted_per_verify: RingBuffer = dataclasses.field(
         default_factory=RingBuffer)
+    # --- prefix caching --------------------------------------------------
+    prefix_lookups: int = 0                  # admissions that consulted it
+    prefix_hits: int = 0                     # admissions that reused KV
+    prefix_tokens_saved: int = 0             # prompt tokens not prefilled
+    prefix_evicted_segments: int = 0         # segments dropped by LRU
+    # matched prefix length per hit (the reuse-depth series)
+    prefix_hit_len: RingBuffer = dataclasses.field(default_factory=RingBuffer)
 
     def sample(self, queue_depth: int, occupied_slots: int) -> None:
         self.queue_depth.append(queue_depth)
@@ -163,6 +170,12 @@ class EngineStats:
                 if buf:
                     out[f"{name}_p50_s"] = round(percentile(buf, 50), 5)
                     out[f"{name}_p95_s"] = round(percentile(buf, 95), 5)
+        if self.prefix_lookups:
+            out["prefix_hit_rate"] = round(
+                self.prefix_hits / self.prefix_lookups, 4)
+            out["prefix_tokens_saved"] = self.prefix_tokens_saved
+            if self.prefix_hit_len:
+                out["prefix_hit_len_p50"] = percentile(self.prefix_hit_len, 50)
         return out
 
 

@@ -1,6 +1,9 @@
 """FIFO admission + prefill/decode interleaving policy.
 
-Admission moves queued requests into free pool slots in arrival order.
+Admission moves queued requests into free pool slots in arrival order,
+consulting the engine's prefix cache (when armed): a cache hit copies
+the matched prefix into the slot and advances the request's prefill
+cursor, so only the un-cached suffix is enqueued for chunked prefill.
 When both prefill and decode work exist the scheduler strictly alternates
 (one prefill chunk, one decode step, ...) so in-flight decodes keep
 streaming while new prompts are absorbed — the continuous-batching
@@ -24,11 +27,13 @@ class Scheduler:
     def enqueue(self, rs: RequestState) -> None:
         self.queue.append(rs)
 
-    def admit(self, pool: SlotKVPool) -> None:
+    def admit(self, pool: SlotKVPool, prefix_cache=None) -> None:
         while self.queue and pool.num_free:
             rs = self.queue.popleft()
             rs.slot = pool.alloc()
-            rs.status = Status.PREFILL
+            if prefix_cache is not None:
+                prefix_cache.admit(rs)      # hit: cursor jumps past the
+            rs.status = Status.PREFILL      # cached prefix
             self.prefilling.append(rs)
 
     def has_work(self) -> bool:

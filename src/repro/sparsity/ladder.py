@@ -149,8 +149,9 @@ class PolicyLadder:
             raise ValueError(
                 f"{path} is a {meta.get('kind', 'policy')!r} artifact; "
                 "load it with repro.sparsity.SparsityPolicy.load")
-        policies = tuple(SparsityPolicy.from_dict(p)
-                         for p in meta["policies"])
+        policies = tuple(
+            SparsityPolicy.from_artifact_dict(p, meta["version"])
+            for p in meta["policies"])
         base = {k[len("sp0/"):]: z[k] for k in z.files
                 if k.startswith("sp0/")}
         sps = [_unflatten_sp(base)]

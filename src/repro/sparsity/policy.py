@@ -53,8 +53,12 @@ PHASES = ("prefill_dense", "prefill_sparse", "decode")
 # v1: single policy + sp tree.  v2 adds a "kind" discriminator so one
 # format carries either a single policy ("policy") or a whole calibrated
 # ladder of rungs with shared sp trees ("ladder", repro.sparsity.ladder).
-ARTIFACT_VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+# v3: "interpret" may be null (= auto-detect from the backend at kernel
+# call time).  Artifacts saved at v<=2 unconditionally baked the old
+# default interpret=true, so the loader normalizes it to auto — without
+# this, a pre-v3 ladder would silently force interpreter mode on TPU.
+ARTIFACT_VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
 
 
 class CaptureSink:
@@ -97,7 +101,11 @@ class SparsityPolicy:
     k_max_frac     static upper bound on the kept channel fraction
                    (gather/pallas backends size their output by it)
     block          channel-block size (TPU lane width)
-    interpret      Pallas interpret mode (CPU containers)
+    interpret      Pallas interpret mode.  ``None`` (the default)
+                   auto-detects from the JAX backend at kernel-call time
+                   — compiled on TPU, interpreted everywhere else — so a
+                   caller that never thinks about it gets the right mode
+                   on real hardware.  ``True``/``False`` force it.
     role_backends  ((role, backend), ...) overrides by projection role;
                    a role is the sp-leaf path within a layer (``"attn/wq"``,
                    ``"mlp/wo"``, ``"mamba/out_proj"``) and an entry matches
@@ -119,7 +127,7 @@ class SparsityPolicy:
     backend: str = "off"
     k_max_frac: float = 1.0
     block: int = 128
-    interpret: bool = True
+    interpret: Optional[bool] = None     # None = auto: interpret off-TPU
     role_backends: Tuple[Tuple[str, str], ...] = ()
     block_backends: Tuple[Tuple[int, int, str], ...] = ()
     dense_phases: Tuple[str, ...] = ("prefill_dense",)
@@ -250,6 +258,20 @@ class SparsityPolicy:
         return self.backend == "off" and not self.role_backends \
             and not self.block_backends
 
+    def prefix_deterministic(self) -> bool:
+        """True when every projection this policy can select runs a
+        *per-token* backend (``off`` dense or the paper-exact ``mask``),
+        so a position's output depends only on the token prefix — never
+        on chunk boundaries, batch composition, or later tokens.  This
+        is the precondition for KV prefix-cache reuse
+        (``repro.serving.prefix_cache``): the shared top-k backends
+        aggregate saliency over the whole call, which would bake the
+        donor request's chunking into the cached KV."""
+        backends = {self.backend}
+        backends.update(b for _, b in self.role_backends)
+        backends.update(b for _, _, b in self.block_backends)
+        return backends <= {"off", "mask"}
+
     # ------------------------------------------------------------------
     # self-contained artifact (policy + sp tree, including g)
     # ------------------------------------------------------------------
@@ -291,6 +313,17 @@ class SparsityPolicy:
             dense_phases=tuple(p["dense_phases"]))
 
     @classmethod
+    def from_artifact_dict(cls, p: dict, version: int) -> "SparsityPolicy":
+        """:meth:`from_dict` with artifact-version normalization: v<=2
+        artifacts unconditionally baked the old default
+        ``interpret=True`` (there was no auto mode), so loading one on a
+        TPU would silently force interpreter mode — normalize it back to
+        auto.  An explicit ``interpret`` in a v3+ artifact is honored."""
+        if version <= 2 and p.get("interpret") is True:
+            p = {**p, "interpret": None}
+        return cls.from_dict(p)
+
+    @classmethod
     def load(cls, path: str):
         """Load a saved artifact -> ``(policy, sp_or_None)``.  Needs no
         model params: the sp tree (g included) comes from the file."""
@@ -299,7 +332,7 @@ class SparsityPolicy:
             raise ValueError(
                 f"{path} is a {meta['kind']!r} artifact; load it with "
                 "repro.sparsity.PolicyLadder.load")
-        pol = cls.from_dict(meta["policy"])
+        pol = cls.from_artifact_dict(meta["policy"], meta["version"])
         flat = {k[len("sp/"):]: z[k] for k in z.files if k.startswith("sp/")}
         return pol, (_unflatten_sp(flat) if flat else None)
 

@@ -79,6 +79,91 @@ def test_wisparse_project_vs_oracle(B, n, m, blk, k_frac, keep_frac):
                                rtol=1e-5, atol=1e-5)
 
 
+# awkward (prime / non-divisible) batch and output dims: the kernels
+# must pad to full tiles and slice, not silently degrade to 1-wide tiles
+AWKWARD = [
+    (5, 256, 257, 128),     # prime m, B below bt
+    (13, 384, 131, 128),    # prime B above bt, prime m below mt
+    (9, 512, 384, 256),     # B pads 9 -> 16, m tiles at 256 -> pads to 512
+    (1, 128, 1, 128),       # matvec to a single output column
+]
+
+
+@pytest.mark.parametrize("B,n,m,blk", AWKWARD)
+def test_sparse_matmul_shared_awkward_shapes(B, n, m, blk):
+    x, w, _ = _data(B, n, m, jnp.float32)
+    nb = n // blk
+    idx = jnp.arange(0, nb, 2, dtype=jnp.int32)
+    y = K.sparse_matmul_shared(x, w, idx, blk=blk, interpret=True)
+    yr = ref.ref_sparse_matmul_shared(x, w, idx, blk)
+    assert y.shape == (B, m)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,n,m,blk", AWKWARD[:3])
+def test_sparse_matmul_per_seq_awkward_shapes(B, n, m, blk):
+    x, w, _ = _data(B, n, m, jnp.float32)
+    nb = n // blk
+    kb = max(nb // 2, 1)
+    idx = jnp.stack([(jnp.arange(kb) + b) % nb for b in range(B)]
+                    ).astype(jnp.int32)
+    y = K.sparse_matmul_per_seq(x, w, idx, blk=blk, interpret=True)
+    yr = ref.ref_sparse_matmul_per_seq(x, w, idx, blk)
+    assert y.shape == (B, m)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,n,m,blk", [(4, 257, 128, 128),
+                                       (3, 384 + 7, 131, 128)])
+def test_wisparse_project_awkward_channel_dim(B, n, m, blk):
+    """Non-divisible channel dims pad to full-width blocks (the old
+    fallback degraded blk to 1, changing both tiles and block-selection
+    granularity).  Oracle: the same op on explicitly zero-padded
+    inputs — padded channels score 0 and multiply zero weight rows."""
+    x, w, g = _data(B, n, m, jnp.float32)
+    sp = {"g": g, "alpha": jnp.float32(0.7), "tau": jnp.float32(0.2),
+          "keep_frac": jnp.float32(0.5)}
+    y = ops.wisparse_project(x, w, sp, block=blk, k_frac=0.75,
+                             interpret=True)
+    pad = -n % blk
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    wp = jnp.pad(w, ((0, pad), (0, 0)))
+    sp_p = {**sp, "g": jnp.pad(g, (0, pad))}
+    nb = (n + pad) // blk
+    kb = max(1, min(nb, round(nb * 0.75)))
+    yr = ref.ref_wisparse_project(xp, wp, sp_p, k_blocks=kb, blk=blk)
+    assert y.shape == (B, m)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_interpret_auto_detects_backend():
+    """interpret=None (the new default everywhere, including
+    SparsityPolicy) resolves from the JAX backend: interpret-mode off
+    TPU, compiled on TPU — forgetting the kwarg can no longer run the
+    interpreter on real hardware."""
+    assert K.default_interpret() == (jax.default_backend() != "tpu")
+    x, w, g = _data(2, 256, 128, jnp.float32)
+    idx = jnp.arange(0, 2, dtype=jnp.int32)
+    y_auto = K.sparse_matmul_shared(x, w, idx)          # interpret=None
+    y_explicit = K.sparse_matmul_shared(x, w, idx,
+                                        interpret=K.default_interpret())
+    np.testing.assert_array_equal(np.asarray(y_auto), np.asarray(y_explicit))
+    sp = {"g": g, "alpha": jnp.float32(0.5), "tau": jnp.float32(0.1),
+          "keep_frac": jnp.float32(0.6)}
+    y1 = ops.wisparse_project(x, w, sp, block=128, k_frac=0.8)
+    y2 = ops.wisparse_project(x, w, sp, block=128, k_frac=0.8,
+                              interpret=K.default_interpret())
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # the policy default threads through to the kernels
+    from repro.sparsity import SparsityPolicy
+    pol = SparsityPolicy.uniform("pallas", k_max_frac=0.8)
+    assert pol.interpret is None
+    assert SparsityPolicy.from_dict(pol.to_dict()) == pol   # survives io
+
+
 def test_full_keep_matches_dense():
     """keep everything (tau=-inf, k=all) -> exactly the dense matmul."""
     x, w, g = _data(4, 512, 256, jnp.float32)

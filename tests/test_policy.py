@@ -259,6 +259,27 @@ def test_artifact_version_gate(tmp_path):
         SparsityPolicy.load(f)
 
 
+def test_legacy_artifact_interpret_normalized(tmp_path):
+    """v<=2 artifacts baked the old unconditional interpret=True default;
+    the loader normalizes it to None (auto-detect) so a pre-v3 ladder no
+    longer forces interpreter mode on TPU.  A v3 artifact's explicit
+    True is honored — it became expressible the same release auto
+    appeared, so it can only be deliberate."""
+    import json
+    legacy = SparsityPolicy.uniform("pallas", k_max_frac=0.5).to_dict()
+    legacy["interpret"] = True
+    f = str(tmp_path / "legacy.npz")
+    np.savez(f, __meta__=np.array(json.dumps(
+        {"version": 2, "kind": "policy", "policy": legacy})))
+    pol, sp = SparsityPolicy.load(f)
+    assert pol.interpret is None and sp is None
+    f3 = str(tmp_path / "v3.npz")
+    np.savez(f3, __meta__=np.array(json.dumps(
+        {"version": 3, "kind": "policy", "policy": legacy})))
+    pol3, _ = SparsityPolicy.load(f3)
+    assert pol3.interpret is True
+
+
 def test_from_plan_mixed_backend_map():
     class FakePlan:
         block_ratios = np.array([0.1, 0.6, 0.7, 0.2])

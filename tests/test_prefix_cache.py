@@ -1,0 +1,391 @@
+"""Prefix-sharing KV cache: radix-tree semantics (unit + hypothesis
+property), the pool's segment layer and free-set bookkeeping, and
+engine-level bit-parity of cache-hit generations vs cold prefill —
+under a plain policy, a mixed ladder rung, and speculative decoding."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.sp_schema import default_sp_stacked
+from repro.data import DataConfig, SyntheticLM
+from repro.models import api
+from repro.serving import (Engine, EngineConfig, PrefixCache, RadixTree,
+                           SlotKVPool, SpecConfig)
+from repro.sparsity import PolicyLadder, SparsityPolicy
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    return params, cfg
+
+
+def _prompts(cfg, n, seq, step=0):
+    return np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, seq, n)).batch(step))
+
+
+# ---------------------------------------------------------------------------
+# radix tree
+# ---------------------------------------------------------------------------
+
+def test_radix_insert_match_and_limit_clamp():
+    t = RadixTree()
+    t.insert((1, 2, 3, 4), "seg4", 8)
+    # exact path, limit caps the reuse below the node's end
+    node, n = t.match((1, 2, 3, 4), limit=3)
+    assert n == 3 and node.payload == "seg4" and node.end >= n
+    # shorter query: the longer segment still sources the slice
+    node, n = t.match((1, 2, 3, 9), limit=3)
+    assert n == 3 and node.payload == "seg4"
+    # diverging immediately: miss
+    assert t.match((7, 8), limit=1) == (None, 0)
+    # limit 0 (1-token prompt): never a hit
+    assert t.match((1,), limit=0) == (None, 0)
+
+
+def test_radix_mid_edge_source_and_split_insert():
+    t = RadixTree()
+    t.insert((5, 5, 1, 1), "a", 4)
+    # query shares only (5, 5): mid-edge match slices "a"
+    node, n = t.match((5, 5, 2, 2), limit=3)
+    assert (node.payload, n) == ("a", 2)
+    # publishing the second prompt splits the edge; both stay matchable
+    t.insert((5, 5, 2, 2), "b", 4)
+    assert t.match((5, 5, 1, 1, 9), limit=4)[0].payload == "a"
+    assert t.match((5, 5, 2, 2, 9), limit=4)[0].payload == "b"
+    assert t.match((5, 5, 9), limit=2)[1] == 2
+    # the split node is structural (no payload of its own)
+    assert t.num_payloads == 2
+    assert t.total_size == 8
+
+
+def test_radix_eviction_lru_leaves_only_and_pins():
+    t = RadixTree()
+    a = t.insert((1, 1, 1), "a", 4)
+    b = t.insert((1, 1, 1, 2, 2), "b", 8)
+    c = t.insert((3, 3), "c", 4)
+    t.match((3, 3), limit=2)                     # c most recently used
+    # a has a payload-bearing descendant (b) -> only b and c evictable;
+    # b is LRU among them
+    ev = t.evict(budget=8)
+    assert [n.end for n in ev] == [b.end] and t.total_size == 8
+    # pinned c cannot be evicted even under a zero budget
+    t.pin(c)
+    ev = t.evict(budget=0)
+    assert c not in ev and c.payload is not None
+    assert all(n.refcount == 0 for n in ev)      # evicted never pinned
+    t.unpin(c)
+    assert t.evict(budget=0) == [c] and t.total_size == 0
+    assert a.payload is None                     # a fell once b was gone
+    with pytest.raises(ValueError):
+        t.unpin(c)                               # refcount never negative
+
+
+def test_radix_hypothesis_property():
+    """Random insert/match/pin/unpin/evict sequences vs a brute-force
+    model: longest-prefix match correctness, refcounts never negative,
+    evicted segments never pinned, size accounting exact."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import strategies as st
+
+    tokens = st.lists(st.integers(0, 3), min_size=1, max_size=6)
+    ops = st.lists(st.one_of(
+        st.tuples(st.just("insert"), tokens),
+        st.tuples(st.just("match"), tokens),
+        st.tuples(st.just("pin"), tokens),
+        st.tuples(st.just("evict"), st.integers(0, 30)),
+    ), max_size=40)
+
+    @hyp.given(ops)
+    @hyp.settings(max_examples=60, deadline=None)
+    def run(seq):
+        t = RadixTree()
+        live = {}                                 # path -> size
+        pinned = {}                               # path -> node
+        for op, arg in seq:
+            if op == "insert":
+                path = tuple(arg)
+                t.insert(path, f"seg{path}", len(path))
+                live.setdefault(path, len(path))
+            elif op == "match":
+                q = tuple(arg)
+                limit = len(q) - 1
+                node, n = t.match(q, limit=limit)
+                want = 0
+                for path in live:
+                    lcp = 0
+                    while lcp < min(len(path), len(q)) \
+                            and path[lcp] == q[lcp]:
+                        lcp += 1
+                    want = max(want, min(lcp, limit))
+                assert n == want, (q, n, want, sorted(live))
+                if n:
+                    assert node.payload is not None and node.end >= n
+                    assert node.path[:n] == q[:n]
+            elif op == "pin":
+                path = tuple(arg)
+                node, n = t.match(path, limit=len(path))
+                if node is not None and path not in pinned:
+                    t.pin(node)
+                    pinned[path] = node
+            elif op == "evict":
+                before = {n.path for n in t.payload_nodes()}
+                ev = t.evict(arg)
+                for n in ev:
+                    assert n.refcount == 0       # evicted never pinned
+                    assert n not in pinned.values()
+                # sizes stay exact
+                gone = before - {n.path for n in t.payload_nodes()}
+                for path in gone:
+                    live.pop(path, None)
+            assert t.total_size == sum(live.values())
+            assert t.total_size == sum(
+                n.size for n in t.payload_nodes())
+            assert all(n.refcount >= 0 for n in t.payload_nodes())
+        for node in pinned.values():
+            t.unpin(node)
+            assert node.refcount >= 0
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# pool segment layer + free-set bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_pool_extract_write_roundtrip(model):
+    """A slot's prefix survives extract -> write into another slot
+    bit-exactly, and segment leaf shapes match api.prefix_segment_schema."""
+    import jax
+    import repro.models.params as P
+    _, cfg = model
+    pool = SlotKVPool(cfg, max_slots=3, max_len=16)
+    s0, s1 = pool.alloc(), pool.alloc()
+    # fill the pool with recognizable values
+    pool.caches = jax.tree_util.tree_map(
+        lambda leaf: jnp.arange(leaf.size, dtype=jnp.float32)
+        .reshape(leaf.shape).astype(leaf.dtype), pool.caches)
+    seg = pool.extract_prefix(s0, 8)
+    want = P.abstract_params(api.prefix_segment_schema(cfg, 8), cfg.dtype)
+    for sl, wl in zip(jax.tree_util.tree_leaves(seg),
+                      jax.tree_util.tree_leaves(want)):
+        assert sl.shape == wl.shape
+    before = jax.tree_util.tree_map(lambda x: np.asarray(x), pool.caches)
+    pool.write_prefix(seg, s1)                   # whole physical segment
+    for axes, pl_new, pl_old, sl in zip(
+            pool._flat_axes,
+            jax.tree_util.tree_leaves(pool.caches),
+            jax.tree_util.tree_leaves(before),
+            jax.tree_util.tree_leaves(seg)):
+        b_ax, t_ax = axes.index("batch"), axes.index("kv_seq")
+        new, old, s = (np.moveaxis(np.asarray(a), (b_ax, t_ax), (0, 1))
+                       for a in (pl_new, pl_old, sl))
+        np.testing.assert_array_equal(new[s1, :8], s[0, :8])
+        np.testing.assert_array_equal(new[s1, 8:], old[s1, 8:])  # untouched
+        np.testing.assert_array_equal(new[s0], old[s0])  # donor intact
+    with pytest.raises(ValueError):
+        pool.extract_prefix(s0, 99)              # beyond the pool length
+    with pytest.raises(ValueError):
+        pool.extract_prefix(2, 4)                # unallocated slot
+
+
+def test_pool_free_set_stays_consistent(model):
+    """The O(1) free-set mirrors the free list through arbitrary
+    alloc/free/commit/rollback cycles, and state guards still fire."""
+    _, cfg = model
+    pool = SlotKVPool(cfg, max_slots=5, max_len=16)
+
+    def consistent():
+        assert pool._free_set == set(pool._free)
+        assert len(pool._free_set) == len(pool._free)  # no duplicates
+
+    rng = np.random.default_rng(0)
+    held = []
+    consistent()
+    for _ in range(100):
+        if held and rng.random() < 0.45:
+            slot = held.pop(rng.integers(len(held)))
+            pool.free(slot)
+        elif pool.num_free:
+            slot = pool.alloc()
+            pool.commit(slot, int(rng.integers(0, 4)))
+            held.append(slot)
+        consistent()
+    for slot in held:
+        pool.free(slot)
+    consistent()
+    assert pool.num_free == 5
+    slot = pool.alloc()
+    pool.free(slot)
+    with pytest.raises(ValueError):
+        pool.free(slot)                          # double free
+    with pytest.raises(ValueError):
+        pool.commit(slot, 1)                     # freed slot
+    consistent()
+
+
+def test_prefix_cache_rejects_sliced_layouts():
+    cfg = reduced(get_config("mamba2_130m"))
+    pool = SlotKVPool(cfg, max_slots=2, max_len=16)
+    assert not pool.can_cache_prefix
+    with pytest.raises(ValueError, match="full-length self-attention"):
+        PrefixCache(pool, chunk=8)
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: cache hits are bit-identical to cold prefill
+# ---------------------------------------------------------------------------
+
+def _run_serialized(eng, prompts, gen):
+    """Submit/run one request at a time (single-slot batches make even
+    the shared-saliency backends per-request deterministic)."""
+    out = []
+    for p in prompts:
+        rs = eng.submit(p, gen)
+        eng.run()
+        out.append(rs.tokens)
+    return out
+
+
+def test_engine_hit_parity_and_stats(model):
+    params, cfg = model
+    base = _prompts(cfg, 1, 16, step=5)
+    shared = base[0]
+    # distinct suffix first-tokens, so each match stops exactly at the
+    # 16-token shared prefix (no accidental deeper matches)
+    prompts = [np.concatenate([shared, np.full(4, 10 + i, np.int32)])
+               for i in range(3)]
+    prompts.append(prompts[0])                   # identical repeat
+    cold = Engine(params, cfg, EngineConfig(
+        max_slots=2, max_len=32, prefill_chunk=8), None)
+    warm = Engine(params, cfg, EngineConfig(
+        max_slots=2, max_len=32, prefill_chunk=8, prefix_cache=True), None)
+    warm.warmup()
+    warm_traces = warm.pool._segment_traces      # warmup's compile set
+    assert _run_serialized(cold, prompts, 5) == \
+        _run_serialized(warm, prompts, 5)
+    s = warm.stats
+    assert s.prefix_lookups == 4
+    assert s.prefix_hits == 3                    # all but the first
+    # two mid-edge hits at the 16-token shared prefix + one full repeat
+    # clamped to P-1 = 19
+    assert s.prefix_tokens_saved == 16 + 16 + 19
+    assert warm.decode_retraces_after_warmup == 0
+    snap = warm.snapshot()
+    assert snap["schema_version"] == 3
+    assert snap["prefix_hit_rate"] == 0.75
+    assert snap["prefix_segments"] == 3          # repeat not re-published
+    assert warm.prefix_cache.cached_tokens > 0
+    assert warm.pool._segment_traces == warm_traces  # warmup covered all
+
+
+def test_engine_hit_parity_mixed_ladder_rung(model):
+    """A pinned sparse rung with a mixed per-block decode policy: the
+    cache-hit generation must reproduce the cold generation exactly.
+    Prefill stays dense on every rung (the prefix-cache precondition);
+    requests run serialized so shared-saliency decode is deterministic."""
+    params, cfg = model
+    mixed = SparsityPolicy.uniform(
+        "topk_shared", k_max_frac=0.5, block_backends=((0, 1, "off"),),
+        dense_phases=("prefill_dense", "prefill_sparse"))
+    ladder = PolicyLadder(
+        budgets=(0.0, 0.5),
+        policies=(SparsityPolicy.dense(
+            dense_phases=("prefill_dense", "prefill_sparse")), mixed),
+        sps=(default_sp_stacked(params, cfg, keep_frac=1.0),
+             default_sp_stacked(params, cfg, keep_frac=0.5)))
+    base = _prompts(cfg, 2, 20, step=9)
+    shared = base[0, :14]
+    prompts = [np.concatenate([shared, base[i, 14:18]]) for i in range(2)]
+
+    def fresh(prefix):
+        return Engine(params, cfg, EngineConfig(
+            max_slots=2, max_len=32, prefill_chunk=8, initial_rung=1,
+            prefix_cache=prefix), ladder=ladder)
+
+    assert _run_serialized(fresh(False), prompts, 5) == \
+        _run_serialized(fresh(True), prompts, 5)
+
+
+def test_engine_hit_parity_under_spec_decode(model):
+    """Speculative decoding over a prefix-cache engine: hits happen and
+    the output stays token-identical to the no-cache spec engine."""
+    params, cfg = model
+    ladder = PolicyLadder.uniform(
+        params, cfg, (0.0, 0.5),
+        dense_phases=("prefill_dense", "prefill_sparse"))
+    base = _prompts(cfg, 3, 20, step=13)
+    shared = base[0, :12]
+    prompts = [np.concatenate([shared, base[i, 12:16]]) for i in range(3)]
+
+    def fresh(prefix):
+        return Engine(params, cfg, EngineConfig(
+            max_slots=2, max_len=32, prefill_chunk=8,
+            spec=SpecConfig(gamma=2, drafter_rung=1),
+            prefix_cache=prefix), ladder=ladder)
+
+    warm = fresh(True)
+    cold_out, warm_out = [], []
+    for eng, out in ((fresh(False), cold_out), (warm, warm_out)):
+        for i, p in enumerate(prompts):
+            eng.submit(p, 6)
+        got = eng.run()
+        out.extend(got[i] for i in range(3))
+    assert cold_out == warm_out
+    assert warm.stats.prefix_hits >= 1
+    assert warm.decode_retraces_after_warmup == 0
+    assert warm.verify_retraces_after_warmup == 0
+
+
+def test_engine_eviction_respects_budget(model):
+    params, cfg = model
+    prompts = [_prompts(cfg, 1, 12, step=20 + i)[0] for i in range(4)]
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=2, max_len=24, prefill_chunk=8, prefix_cache=True,
+        prefix_cache_tokens=32), None)
+    for p in prompts:
+        eng.submit(p, 3)
+        eng.run()
+    # each 12-token prompt stores a 16-token (chunk-quantized) segment
+    assert eng.prefix_cache.cached_tokens <= 32
+    assert eng.stats.prefix_evicted_segments >= 2
+    assert eng.prefix_cache.num_segments <= 2
+
+
+def test_prefix_cache_guards(model):
+    params, cfg = model
+    with pytest.raises(ValueError, match="chunked"):
+        EngineConfig(prefix_cache=True, prefill_strategy="whole")
+    with pytest.raises(ValueError, match="prefix_cache_tokens"):
+        EngineConfig(prefix_cache_tokens=-1)
+    # sparse prefill under the default phase split is not
+    # prefix-deterministic -> rejected eagerly
+    sp = default_sp_stacked(params, cfg, keep_frac=0.5)
+    pol = SparsityPolicy.uniform("topk_shared", k_max_frac=0.5,
+                                 dense_phases=())
+    with pytest.raises(ValueError, match="prefix-deterministic"):
+        Engine(params, cfg, EngineConfig(
+            max_slots=2, max_len=24, prefill_chunk=8, policy=pol,
+            prefill_dense_frac=0.0, prefix_cache=True), sp)
+    # prompt-length-dependent dense/sparse boundary -> rejected
+    pol2 = SparsityPolicy.uniform("mask")
+    with pytest.raises(ValueError, match="phase"):
+        Engine(params, cfg, EngineConfig(
+            max_slots=2, max_len=24, prefill_chunk=8, policy=pol2,
+            prefill_dense_frac=0.5, prefix_cache=True), sp)
+    # SSM archs resolve to whole-prompt prefill -> rejected
+    mcfg = reduced(get_config("mamba2_130m"))
+    with pytest.raises(ValueError, match="chunked"):
+        Engine(api.init_model(mcfg, 0), mcfg, EngineConfig(
+            max_slots=2, max_len=24, prefill_chunk=8,
+            prefix_cache=True), None)
+    # paper-exact mask everywhere IS prefix-deterministic -> accepted
+    # (prefill_dense_frac=0 -> every chunk runs the prefill_sparse
+    # phase, which for the mask policy is mask itself)
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=2, max_len=24, prefill_chunk=8, policy=pol2,
+        prefill_dense_frac=0.0, prefix_cache=True), sp)
+    assert eng.prefix_cache is not None
