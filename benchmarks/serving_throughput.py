@@ -24,6 +24,7 @@ typically protect.
     PYTHONPATH=src python -m benchmarks.serving_throughput --controller
     PYTHONPATH=src python -m benchmarks.serving_throughput --spec
     PYTHONPATH=src python -m benchmarks.serving_throughput --prefix-cache
+    PYTHONPATH=src python -m benchmarks.serving_throughput --telemetry
     PYTHONPATH=src python -m benchmarks.serving_throughput --smoke   # CI
 
 ``--controller`` runs the SLO-aware adaptive sweep instead: a *stepped*
@@ -53,6 +54,13 @@ prefix-cache engine.  Hard gates: whole-trace token parity (cache-hit
 generations must be bit-identical to cold prefill), hit rate >= 0.75,
 warm TTFT p50 <= 0.6x cold, and zero decode retraces after warmup.
 
+``--telemetry`` runs the observability sweep (``repro.obs``): the same
+trace replays against a plain engine and one with full telemetry (span
+tracer + event log + dispatch annotations).  Hard gates: bit-identical
+tokens on every rep, full-telemetry decode tok/s >= 97% of plain
+(interleaved best-of-reps), zero decode retraces with annotations
+enabled, and the exported Prometheus/Chrome-trace artifacts validate.
+
 The default model is a reduced-but-not-tiny llama31_8b variant
 (d_model=768, d_ff=6144, 4 layers) — large enough that decode is
 matmul-bound on CPU, so the shared-mask gather backends show their FLOP/
@@ -67,6 +75,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import get_config, reduced
 from repro.core.sp_schema import default_sp_stacked
 from repro.data import DataConfig, SyntheticLM
@@ -112,10 +121,10 @@ def stepped_trace(segments, prompt_lens, seed=0):
 def replay(engine: Engine, prompts, arrivals, gen_tokens):
     """Drive the engine against wall-clock arrivals; returns trace states."""
     states = []
-    t0 = time.monotonic()
+    t0 = obs.now()            # the engine's own clock (repro.obs.clock)
     i = 0
     while i < len(prompts) or engine.scheduler.has_work():
-        now = time.monotonic() - t0
+        now = obs.now() - t0
         while i < len(prompts) and arrivals[i] <= now:
             states.append(engine.submit(prompts[i], gen_tokens,
                                         arrival_time=t0 + arrivals[i]))
@@ -525,6 +534,111 @@ def run_prefix(log=print, cfg=None, n_requests=12, rate_hz=8.0,
     return rows
 
 
+def run_telemetry(log=print, cfg=None, n_requests=12, rate_hz=8.0,
+                  gen_tokens=48, max_slots=4, seed=0, reps=3,
+                  overhead_gate=0.97, check=True, check_overhead=True,
+                  trace_out=None, metrics_out=None, events_out=None):
+    """Telemetry parity + overhead sweep: the same Poisson trace replays
+    against a plain engine and one with full telemetry (span tracer +
+    event log + dispatch annotations).
+
+    Hard gates: (1) bit-identical tokens with telemetry on vs off, on
+    EVERY rep — telemetry only observes host-side state; (2) full
+    telemetry keeps >= ``overhead_gate`` (default 97%) of plain decode
+    tok/s, judged on interleaved best-of-``reps`` to cancel CPU drift;
+    (3) zero decode retraces after warmup with dispatch annotations
+    enabled — annotations wrap the dispatch, not the traced function, so
+    they must not perturb jit cache keys; (4) the run's artifacts
+    validate (Prometheus exposition + Chrome trace schema), optionally
+    exported to ``trace_out``/``metrics_out``/``events_out``."""
+    cfg = cfg or bench_config()
+    params = api.init_model(cfg, 0)
+    prompt_lens = (24, 32, 48)
+    arrivals, lens = poisson_trace(n_requests, rate_hz, prompt_lens, seed)
+    pool = np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, max(prompt_lens), n_requests)).batch(0))
+    prompts = [pool[i, :lens[i]] for i in range(n_requests)]
+    max_len = max(prompt_lens) + gen_tokens
+
+    tel = obs.Telemetry.full(events_sink=events_out)
+
+    def fresh(telemetry):
+        eng = Engine(params, cfg, EngineConfig(
+            max_slots=max_slots, max_len=max_len, prefill_chunk=32),
+            None, telemetry=telemetry)
+        eng.warmup()
+        eng.submit(prompts[0], 2)     # absorb first-dispatch overheads
+        eng.run()
+        eng.stats = EngineStats()
+        return eng
+
+    engines = {"plain": fresh(None), "telemetry": fresh(tel)}
+
+    results = {m: 0.0 for m in engines}
+    best = {}
+    for rep in range(reps):
+        rep_states = {}
+        for mode, eng in engines.items():
+            eng.stats = EngineStats()
+            states = replay(eng, prompts, arrivals, gen_tokens)
+            rep_states[mode] = states
+            if mode not in best or eng.stats.decode_tps > results[mode]:
+                results[mode] = eng.stats.decode_tps
+                best[mode] = eng.stats
+        # parity gate on EVERY rep (states align by trace order)
+        for i, (st, sp_) in enumerate(zip(rep_states["telemetry"],
+                                          rep_states["plain"])):
+            assert st.tokens == sp_.tokens, \
+                f"telemetry changed tokens on trace request {i} " \
+                f"(rep {rep}) — it must only observe"
+    log(f"telemetry parity vs plain engine: OK "
+        f"({n_requests} requests x {reps} reps)")
+    rows = [("serving/telemetry/parity_vs_plain", 0.0, "ok")]
+
+    ratio = results["telemetry"] / results["plain"]
+    retraces = engines["telemetry"].decode_retraces_after_warmup
+    for mode, eng in engines.items():
+        log(f"{mode:10s} decode {results[mode]:7.1f} tok/s")
+        rows.append((f"serving/telemetry/decode_tps/{mode}", 0.0,
+                     f"{results[mode]:.1f}tok/s"))
+    log(f"full-telemetry decode throughput: {ratio:.1%} of plain "
+        f"(gate >= {overhead_gate:.0%}) | {len(tel.tracer.events)} spans, "
+        f"{tel.events.count} events | decode retraces with annotations "
+        f"{retraces}")
+    rows.append(("serving/telemetry/overhead_ratio", 0.0,
+                 f"{ratio:.4f};gate>={overhead_gate}"))
+    rows.append(("serving/telemetry/decode_retraces_after_warmup", 0.0,
+                 str(retraces)))
+
+    # --- artifacts validate (and export when paths are given) ------------
+    n_samples = obs.validate_exposition(
+        engines["telemetry"].metrics_exposition())
+    n_events = obs.validate_chrome_trace(tel.tracer.to_dict())
+    log(f"artifacts: exposition OK ({n_samples} samples), trace OK "
+        f"({n_events} events)")
+    rows.append(("serving/telemetry/artifacts", 0.0,
+                 f"exposition={n_samples};trace={n_events};"
+                 f"events={tel.events.count}"))
+    if trace_out:
+        tel.tracer.export(trace_out)
+        log(f"wrote trace to {trace_out}")
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(engines["telemetry"].metrics_exposition())
+        log(f"wrote exposition to {metrics_out}")
+    tel.close()
+
+    if check:
+        assert retraces == 0, \
+            f"{retraces} decode retrace(s) with dispatch annotations — " \
+            "annotations must not perturb jit cache keys"
+        if check_overhead:
+            assert ratio >= overhead_gate, \
+                f"full telemetry keeps only {ratio:.1%} of plain decode " \
+                f"throughput, below the {overhead_gate:.0%} gate"
+    return rows
+
+
 # the spec sweep's synthetic language: lower Markov branching, denser
 # copy motifs and a steeper Zipf base than the stock defaults.  The
 # paper's premise is a *confident trained* model whose outputs 50%
@@ -724,13 +838,45 @@ def main():
                     help="run only the shared-system-prompt prefix-cache "
                          "sweep (warm vs cold prefill, token-parity + "
                          "TTFT + hit-rate + retrace gates)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run only the telemetry parity + overhead sweep "
+                         "(full repro.obs telemetry vs plain engine: "
+                         "bit-identical tokens, <3% decode overhead, "
+                         "valid exposition/trace artifacts)")
+    ap.add_argument("--trace-out", default=None,
+                    help="export the telemetry sweep's Chrome trace JSON "
+                         "here (with --telemetry)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="export the telemetry sweep's Prometheus "
+                         "exposition dump here (with --telemetry)")
+    ap.add_argument("--events-out", default=None,
+                    help="stream the telemetry sweep's event log as "
+                         "JSONL here (with --telemetry)")
     ap.add_argument("--spec-gamma", type=int, default=2,
                     help="draft length for the main spec scenario")
     ap.add_argument("--spec-train-steps", type=int, default=50,
                     help="quick-train steps before the spec sweep (0 "
                          "skips training; expect ~zero acceptance)")
     args = ap.parse_args()
-    if args.prefix_cache:
+    if args.telemetry:
+        art = dict(trace_out=args.trace_out, metrics_out=args.metrics_out,
+                   events_out=args.events_out)
+        if args.smoke:
+            # tiny model + trace: exercises every emit site and the
+            # parity/retrace/artifact gates; throughput too noisy at
+            # this scale to gate the overhead ratio
+            rows = run_telemetry(
+                cfg=bench_config(d_model=128, d_ff=512, layers=4,
+                                 vocab=512),
+                n_requests=4, rate_hz=4.0, gen_tokens=8, max_slots=2,
+                seed=args.seed, reps=1, check_overhead=False, **art)
+        else:
+            rows = run_telemetry(n_requests=args.requests,
+                                 rate_hz=args.rate, gen_tokens=args.gen,
+                                 max_slots=args.slots or 4,
+                                 seed=args.seed, reps=max(args.reps, 3),
+                                 **art)
+    elif args.prefix_cache:
         if args.smoke:
             # tiny model + trace: exercises admission copy, mid-edge
             # radix matching, publish and the parity/retrace gates; the

@@ -34,17 +34,29 @@ un-cached suffix.  ``--prefix-cache-tokens N`` bounds the cached tokens
 (LRU eviction; 0 = unbounded).  Requires chunked prefill and a
 prefix-deterministic prefill policy (dense or ``mask``) — the engine
 validates and the hit path stays token-identical to cold prefill.
+
+Observability (``repro.obs``): ``--metrics-out`` appends JSONL
+snapshots by default; ``--metrics-format prom`` instead rewrites the
+file with a Prometheus text-exposition dump (textfile-collector style),
+and ``--metrics-port`` serves the same text live at
+``http://127.0.0.1:PORT/metrics``.  ``--trace-out`` writes a Chrome
+trace-event JSON of per-request spans (load it in Perfetto or
+``chrome://tracing``), ``--events-out`` streams the structured event
+log (rung/gamma switches with reasons, prefix evictions, KV rollbacks,
+compile records) as JSONL, and ``--profile-dir`` captures a JAX
+profiler trace of the whole run.  Tokens are bit-identical with
+telemetry on or off.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config, reduced
 from repro.core import pipeline as wis_pipeline
 from repro.data import DataConfig, SyntheticLM
@@ -165,10 +177,28 @@ def main():
                     help="cached-token budget for --prefix-cache "
                          "(LRU eviction; 0 = unbounded)")
     ap.add_argument("--metrics-out", default=None,
-                    help="append engine/controller snapshots to this "
-                         "JSONL file while serving")
+                    help="write engine/controller metrics to this file "
+                         "while serving (format per --metrics-format)")
     ap.add_argument("--metrics-every", type=int, default=16,
-                    help="engine steps between JSONL snapshots")
+                    help="engine steps between metrics writes")
+    ap.add_argument("--metrics-format", default="jsonl",
+                    choices=["jsonl", "prom"],
+                    help="--metrics-out format: append JSONL snapshots, "
+                         "or rewrite a Prometheus text-exposition dump "
+                         "(textfile-collector style)")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="serve live Prometheus exposition at "
+                         "http://127.0.0.1:PORT/metrics (0 = off)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request spans as Chrome trace-event "
+                         "JSON (Perfetto-loadable) to this file")
+    ap.add_argument("--events-out", default=None,
+                    help="stream the structured event log (rung/gamma "
+                         "switches, evictions, rollbacks, compiles) as "
+                         "JSONL to this file")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a JAX profiler trace of the run into "
+                         "this directory")
     args = ap.parse_args()
 
     if not 0.0 <= args.sparsity <= 1.0:
@@ -203,6 +233,10 @@ def main():
     if args.prefix_cache and args.legacy:
         raise SystemExit("--prefix-cache needs the engine path, not "
                          "--legacy")
+    if args.legacy and (args.trace_out or args.events_out
+                        or args.metrics_port or args.metrics_out):
+        raise SystemExit("telemetry flags (--trace-out/--events-out/"
+                         "--metrics-*) need the engine path, not --legacy")
     if args.prefix_cache_tokens and not args.prefix_cache:
         raise SystemExit("--prefix-cache-tokens needs --prefix-cache to "
                          "arm the prefix cache")
@@ -240,9 +274,9 @@ def main():
                 args.mode, k_max_frac=max(1.0 - args.sparsity, 1e-6))
 
     if args.legacy:
-        t0 = time.time()
+        t0 = obs.now()
         toks = generate(params, cfg, prompts, args.gen, sp, policy=policy)
-        dt = time.time() - t0
+        dt = obs.now() - t0
         n = toks.size
         print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s on CPU)")
         print("sample:", np.asarray(toks[0])[:16])
@@ -270,12 +304,50 @@ def main():
         slo=slo, initial_rung=args.rung, spec=spec,
         prefix_cache=args.prefix_cache,
         prefix_cache_tokens=args.prefix_cache_tokens)
-    engine = Engine(params, cfg, ecfg, sp, ladder=ladder)
-    t0 = time.time()
+    telemetry = None
+    if args.trace_out or args.events_out or args.profile_dir:
+        telemetry = obs.Telemetry(
+            tracer=obs.SpanTracer() if args.trace_out else None,
+            events=obs.EventLog(sink=args.events_out)
+            if args.events_out else None,
+            annotate_dispatch=args.profile_dir is not None,
+            profiler=obs.ProfilerSession(args.profile_dir)
+            if args.profile_dir else None)
+    engine = Engine(params, cfg, ecfg, sp, ladder=ladder,
+                    telemetry=telemetry)
+    server = None
+    if args.metrics_port:
+        server = obs.serve_metrics(engine.metrics_exposition,
+                                   port=args.metrics_port)
+        print(f"serving metrics at "
+              f"http://127.0.0.1:{server.server_port}/metrics")
+    if telemetry is not None and telemetry.profiler is not None:
+        if not telemetry.profiler.start():
+            print("profiler capture unavailable:",
+                  telemetry.profiler.error)
+    t0 = obs.now()
     for b in range(args.batch):
         engine.submit(np.asarray(prompts[b]), args.gen)
-    out = run_with_metrics(engine, args.metrics_out, args.metrics_every)
-    dt = time.time() - t0
+    try:
+        out = run_with_metrics(engine, args.metrics_out,
+                               args.metrics_every, args.metrics_format)
+    finally:
+        if server is not None:
+            server.shutdown()
+        if telemetry is not None:
+            if telemetry.tracer is not None:
+                telemetry.tracer.export(args.trace_out)
+                print(f"wrote {len(telemetry.tracer.events)} trace events "
+                      f"to {args.trace_out}")
+            if telemetry.events is not None:
+                print(f"logged {telemetry.events.count} events"
+                      + (f" to {args.events_out}" if args.events_out
+                         else ""))
+            telemetry.close()
+            if telemetry.profiler is not None \
+                    and telemetry.profiler.error is None:
+                print(f"wrote profiler trace to {args.profile_dir}")
+    dt = obs.now() - t0
     n = sum(len(t) for t in out.values())
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s on CPU)")
     print("engine stats:", engine.stats.summary())
@@ -296,12 +368,33 @@ def main():
     print("sample:", out[0][:16])
 
 
-def run_with_metrics(engine, metrics_out=None, every: int = 16):
-    """Drive the engine to completion, appending a JSONL snapshot every
-    ``every`` steps (and one final snapshot) when ``metrics_out`` is
-    set."""
+def run_with_metrics(engine, metrics_out=None, every: int = 16,
+                     fmt: str = "jsonl"):
+    """Drive the engine to completion, writing metrics every ``every``
+    steps (and once at the end) when ``metrics_out`` is set.
+
+    ``fmt="jsonl"`` appends engine snapshots; ``fmt="prom"`` rewrites
+    the file with the current Prometheus text exposition each time —
+    the node-exporter textfile-collector pattern, scrapeable without a
+    port."""
     if metrics_out is None:
         return engine.run()
+    if fmt not in ("jsonl", "prom"):
+        raise ValueError(f"unknown metrics format {fmt!r}")
+
+    if fmt == "prom":
+        def write(_f=None):
+            with open(metrics_out, "w") as f:
+                f.write(engine.metrics_exposition())
+        steps = 0
+        while engine.scheduler.has_work():
+            engine.step()
+            steps += 1
+            if steps % every == 0:
+                write()
+        write()
+        return {rid: rs.tokens for rid, rs in engine.states.items()}
+
     steps = 0
     with open(metrics_out, "a") as f:
         while engine.scheduler.has_work():

@@ -1,0 +1,28 @@
+"""One monotonic clock for the whole serving stack.
+
+Every serving timestamp — engine stats, controller ticks, spans, events,
+JSONL snapshots, benchmark replay — routes through :func:`now`, so the
+different telemetry streams are mutually orderable.  Historically the
+engine used ``time.monotonic()`` while the serve CLI timed runs with
+``time.time()``; a span at monotonic ``t`` and a log line at epoch ``t'``
+could not be correlated.  :func:`to_wall` maps a monotonic timestamp to
+approximate epoch seconds for human-facing output only — never compare
+``to_wall`` results across processes or use them for durations."""
+from __future__ import annotations
+
+import time
+
+# captured once at import: the (approximate, NTP-drift-affected) offset
+# between the monotonic clock and the wall clock
+_WALL_OFFSET = time.time() - time.monotonic()
+
+
+def now() -> float:
+    """Monotonic seconds — THE serving timestamp source."""
+    return time.monotonic()
+
+
+def to_wall(t_mono: float) -> float:
+    """Approximate wall-clock epoch seconds for a :func:`now` timestamp
+    (human-facing logs only; durations must subtract monotonic stamps)."""
+    return t_mono + _WALL_OFFSET

@@ -1,0 +1,77 @@
+"""Structured event log: the *why* behind the metrics.
+
+Latency series say a TPOT regression happened; the event log says what
+the engine *did* at that moment — a rung switch and the controller's
+reason (TPOT-over-target vs queue pressure vs de-escalation), a gamma
+or drafter change, a prefix-cache eviction, a speculative-decode KV
+rollback, a warmup compile, or (the invariant-violation case) a
+post-warmup retrace.
+
+Events are plain dicts ``{"t": monotonic_s, "kind": str, ...fields}``
+ring-buffered in memory (bounded — a long-running server cannot grow it
+without limit) with an optional always-flushed JSONL sink for offline
+analysis.  Timestamps come from the shared monotonic clock so events
+line up with spans and stats.  Emission is one dict build + deque
+append; when no :class:`EventLog` is armed the engine's emit sites are
+``if events is not None`` checks — allocation-free.
+"""
+from __future__ import annotations
+
+import collections
+import json
+from typing import List, Optional
+
+from repro.obs import clock
+
+
+class EventLog:
+    """Bounded in-memory event ring with an optional JSONL sink.
+
+    ``sink`` is a path (opened append) or a file-like with ``write``;
+    each event is written and flushed immediately so a crash loses
+    nothing.  ``count`` is the whole-run total; the ring keeps the most
+    recent ``capacity`` events."""
+
+    def __init__(self, capacity: int = 4096, sink=None):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = capacity
+        self._ring = collections.deque(maxlen=capacity)
+        self.count = 0
+        self._fh = None
+        self._owns_fh = False
+        if isinstance(sink, str):
+            self._fh = open(sink, "a")
+            self._owns_fh = True
+        elif sink is not None:
+            self._fh = sink
+
+    # ------------------------------------------------------------------
+    def emit(self, kind: str, t: Optional[float] = None, **fields) -> None:
+        rec = {"t": clock.now() if t is None else t, "kind": kind}
+        rec.update(fields)
+        self._ring.append(rec)
+        self.count += 1
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+
+    def events(self, kind: Optional[str] = None) -> List[dict]:
+        """Retained events, oldest first, optionally filtered by kind."""
+        if kind is None:
+            return list(self._ring)
+        return [e for e in self._ring if e["kind"] == kind]
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def close(self) -> None:
+        if self._fh is not None and self._owns_fh:
+            self._fh.close()
+        self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,76 @@
+"""JAX profiler integration: dispatch annotations + capture windows.
+
+Two layers, both opt-in:
+
+* :func:`annotation` — a ``jax.profiler.TraceAnnotation`` labelling the
+  host-side dispatch of one executable (decode, chunk, verify, prefix
+  extract/write) so engine phases show up as named slices in a captured
+  profile.  When telemetry is off the engine gets the shared
+  :data:`NULL_CONTEXT` instead — a reusable, reentrant
+  ``contextlib.nullcontext`` (no allocation on the hot path).
+  Annotations wrap the *dispatch*, never the traced function, so they
+  cannot perturb jit cache keys — ``decode_retraces_after_warmup == 0``
+  holds with annotations enabled (tested).
+
+* :class:`ProfilerSession` — an explicit capture window around
+  ``jax.profiler.start_trace``/``stop_trace`` writing a TensorBoard-
+  loadable profile to a directory.  Wrapped defensively: profile
+  capture depends on optional runtime pieces (libtpu / profiler plugin),
+  and a missing one must degrade to a warning, not kill serving.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+NULL_CONTEXT = contextlib.nullcontext()
+
+
+def annotation(name: str):
+    """A profiler trace annotation context for one dispatch."""
+    import jax.profiler
+    return jax.profiler.TraceAnnotation(name)
+
+
+class ProfilerSession:
+    """Opt-in profiler capture window writing to ``out_dir``.
+
+    ``start()``/``stop()`` are idempotent and swallow profiler-backend
+    errors (recorded on ``.error``) — telemetry must never take down the
+    engine it observes."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.active = False
+        self.error: Optional[str] = None
+
+    def start(self) -> bool:
+        if self.active:
+            return True
+        try:
+            import jax.profiler
+            jax.profiler.start_trace(self.out_dir)
+        except Exception as e:                      # noqa: BLE001
+            self.error = f"start_trace failed: {e}"
+            return False
+        self.active = True
+        return True
+
+    def stop(self) -> bool:
+        if not self.active:
+            return False
+        self.active = False
+        try:
+            import jax.profiler
+            jax.profiler.stop_trace()
+        except Exception as e:                      # noqa: BLE001
+            self.error = f"stop_trace failed: {e}"
+            return False
+        return True
+
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()

@@ -172,10 +172,17 @@ class AdaptiveController:
 
     # ------------------------------------------------------------------
     def snapshot(self) -> dict:
-        """Controller state for metrics/JSONL export."""
+        """Controller state for metrics/JSONL export.
+
+        ``tpot_estimator`` names the signal the controller actually
+        steers on — its own reset-on-switch EWMA, deliberately neither
+        the whole-run histogram quantile nor the windowed ring p95 that
+        ``EngineStats.summary()`` reports (see
+        ``repro.serving.metrics``)."""
         total = max(1, sum(self.residency))
         return {
             "rung": self.rung,
+            "tpot_estimator": "ewma",
             "tpot_ewma_s": None if self._ewma is None
             else round(self._ewma, 6),
             "occupancy": self.last_occupancy,

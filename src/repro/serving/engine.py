@@ -45,22 +45,32 @@ traffic.  Requires chunked prefill and *prefix-deterministic* prefill
 policies (validated eagerly at construction: dense or per-token
 ``mask`` backends, identical across rungs and prompt lengths), which is
 what makes a cache-hit generation bit-identical to cold prefill.
+
+Telemetry: ``Engine(..., telemetry=repro.obs.Telemetry(...))`` arms
+per-request span tracing (Chrome trace JSON), the structured event log
+(rung switches with controller reasons, gamma changes, prefix
+evictions, KV rollbacks, compile/retrace records) and per-dispatch JAX
+profiler annotations.  Telemetry only *observes* host-side state —
+tokens are bit-identical with it on or off — and the default
+``NULL_TELEMETRY`` costs nothing: every emit site is an ``is not
+None`` check and ``annotate()`` returns a shared null context.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import api
+from repro.obs import NULL_TELEMETRY, Telemetry
 from repro.serving.controller import AdaptiveController, SLOConfig
 from repro.serving.kv_pool import SlotKVPool
-from repro.serving.metrics import EngineStats, percentile
+from repro.serving.metrics import EngineStats
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.request import (FinishReason, Request, RequestState,
                                    Status)
@@ -76,7 +86,11 @@ _CHUNKABLE_MIXERS = ("attn", "global")
 # spec_accept_ewma, spec_accept_rate) when spec decoding is armed.
 # v3: adds the prefix-cache fields (prefix_hit_rate, prefix_tokens_saved,
 # prefix_cached_tokens, prefix_segments) when the prefix cache is armed.
-SNAPSHOT_SCHEMA_VERSION = 3
+# v4: tpot_p50_s/tpot_p95_s switch from windowed ring-buffer percentiles
+# to exact whole-run histogram quantiles, tpot_p95_window_s keeps the
+# windowed estimate explicitly, and telemetry_events/telemetry_spans
+# report live sink depths when telemetry is armed.
+SNAPSHOT_SCHEMA_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,10 +164,18 @@ class EngineConfig:
 
 class Engine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
-                 sp=None, *, ladder: Optional[PolicyLadder] = None):
+                 sp=None, *, ladder: Optional[PolicyLadder] = None,
+                 telemetry: Optional[Telemetry] = None):
         if cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
                 f"serving engine supports token-only models, not {cfg.family}")
+        if telemetry is None:
+            telemetry = NULL_TELEMETRY
+        elif not isinstance(telemetry, Telemetry):
+            raise TypeError(
+                f"telemetry must be a repro.obs.Telemetry, "
+                f"got {type(telemetry)!r}")
+        self.obs = telemetry
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -295,7 +317,7 @@ class Engine:
                     "break the token-parity guarantee")
             self.prefix_cache = PrefixCache(
                 self.pool, ecfg.prefill_chunk, ecfg.prefix_cache_tokens,
-                stats_fn=lambda: self.stats)
+                stats_fn=lambda: self.stats, obs_fn=lambda: self.obs)
 
         slot_decode = api.make_slot_decode_step(cfg)
         chunk_step = api.make_chunk_prefill_step(cfg)
@@ -304,12 +326,14 @@ class Engine:
         def _decode(params, tokens, positions, caches, sp, active, *,
                     policy):
             self._decode_traces += 1        # runs only while tracing
+            self._record_compile("decode")
             return slot_decode(params, tokens, positions, caches, sp,
                                active, policy=policy)
 
         def _chunk(params, tokens, offset, slot, caches, sp, weights, *,
                    policy):
             self._chunk_traces += 1
+            self._record_compile("prefill_chunk")
             return chunk_step(params, tokens, offset, slot, caches, sp,
                               weights, policy=policy)
 
@@ -458,6 +482,26 @@ class Engine:
         return self.spec_decoder._verify_traces - self._warm_traces[2]
 
     # ------------------------------------------------------------------
+    # telemetry plumbing
+    # ------------------------------------------------------------------
+    def _record_compile(self, phase: str) -> None:
+        """Called from inside the jitted wrappers — runs only while XLA
+        is (re)tracing, so every emission is one compile record.  A
+        compile after warmup is a retrace (the bug the
+        ``decode_retraces_after_warmup == 0`` invariant guards), flagged
+        so the event log shows *which* executable broke the discipline."""
+        ev = self.obs.events
+        if ev is not None:
+            ev.emit("compile", phase=phase, rung=self._rung,
+                    post_warmup=self._warm_traces is not None)
+
+    def metrics_exposition(self) -> str:
+        """This engine's live stats in Prometheus text-exposition format
+        (built per call, off the hot path — see
+        :func:`repro.obs.metrics.engine_registry`)."""
+        return obs.engine_exposition(self)
+
+    # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None,
@@ -476,6 +520,12 @@ class Engine:
         self.states[req.request_id] = rs
         self.scheduler.enqueue(rs)
         self.stats.submitted += 1
+        tr = self.obs.tracer
+        if tr is not None:
+            tr.thread_name(req.request_id + 1, f"req {req.request_id}")
+            tr.instant("submit", tid=req.request_id + 1,
+                       request=req.request_id, prompt_len=req.prompt_len,
+                       max_new_tokens=max_new)
         return rs
 
     # ------------------------------------------------------------------
@@ -483,8 +533,13 @@ class Engine:
     # ------------------------------------------------------------------
     def step(self) -> str:
         """Admit, then run one scheduler-chosen phase step."""
-        self.scheduler.admit(self.pool, self.prefix_cache)
+        self.scheduler.admit(self.pool, self.prefix_cache,
+                             tracer=self.obs.tracer)
         self.stats.sample(len(self.scheduler.queue), self.pool.num_occupied)
+        if self.obs.tracer is not None:
+            self.obs.tracer.counter(
+                "engine_load", queue_depth=len(self.scheduler.queue),
+                occupancy=self.pool.num_occupied)
         action = self.scheduler.next_action()
         if action == "prefill":
             if self.prefill_strategy == "chunked":
@@ -530,16 +585,23 @@ class Engine:
         weights[:real] = 1.0
         policy = self._phase_policy(off, req.prompt_len)
         t0 = self._now()
-        logits, self.pool.caches = self._cstep(
-            self.params, jnp.asarray(chunk), jnp.full((1,), off, jnp.int32),
-            jnp.int32(rs.slot), self.pool.caches, self.sp,
-            jnp.asarray(weights), policy=policy)
-        logits.block_until_ready()
-        dt = self._now() - t0
+        with self.obs.annotate("repro/prefill_chunk"):
+            logits, self.pool.caches = self._cstep(
+                self.params, jnp.asarray(chunk),
+                jnp.full((1,), off, jnp.int32),
+                jnp.int32(rs.slot), self.pool.caches, self.sp,
+                jnp.asarray(weights), policy=policy)
+            logits.block_until_ready()
+        t1 = self._now()
+        dt = t1 - t0
         self.stats.prefill_time += dt
-        self.stats.prefill_step_s.append(dt)
+        self.stats.observe_prefill_step(dt)
         self.stats.prefill_chunks += 1
         self.stats.prefill_tokens += real
+        if self.obs.tracer is not None:
+            self.obs.tracer.complete(
+                "prefill_chunk", t0, t1, tid=req.request_id + 1,
+                slot=rs.slot, offset=off, tokens=real, rung=self._rung)
         rs.next_offset = off + real
         self.pool.lengths[rs.slot] = rs.next_offset
         if rs.done_prefill:
@@ -559,14 +621,20 @@ class Engine:
         pd, ps, _ = self._rung_phases[self._rung]
         policy = ps if self.ecfg.prefill_dense_frac <= 0.0 else pd
         t0 = self._now()
-        logits, caches = self._pstep(self.params, jnp.asarray(tokens),
-                                     self.sp, policy=policy)
-        logits.block_until_ready()
-        dt = self._now() - t0
+        with self.obs.annotate("repro/prefill_whole"):
+            logits, caches = self._pstep(self.params, jnp.asarray(tokens),
+                                         self.sp, policy=policy)
+            logits.block_until_ready()
+        t1 = self._now()
+        dt = t1 - t0
         self.stats.prefill_time += dt
-        self.stats.prefill_step_s.append(dt)
+        self.stats.observe_prefill_step(dt)
         self.stats.prefill_chunks += 1
         self.stats.prefill_tokens += P * len(group)
+        if self.obs.tracer is not None:
+            self.obs.tracer.complete(
+                "prefill_whole", t0, t1, prompt_len=P, batch=len(group),
+                rung=self._rung)
         first = np.asarray(jnp.argmax(logits, axis=-1))
         for b, rs in enumerate(group):
             self.pool.insert(caches, b, rs.slot, P)
@@ -576,6 +644,13 @@ class Engine:
     def _start_decode(self, rs: RequestState, first_token: int) -> None:
         rs.first_token_time = self._now()
         rs.last_token_time = rs.first_token_time
+        self.stats.observe_ttft(
+            rs.first_token_time - rs.request.arrival_time)
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant(
+                "first_token", t=rs.first_token_time,
+                tid=rs.request.request_id + 1, slot=rs.slot,
+                ttft_s=rs.first_token_time - rs.request.arrival_time)
         self._emit(rs, first_token)
         self.scheduler.to_decode(rs)
         self._maybe_finish(rs, first_token)
@@ -595,21 +670,26 @@ class Engine:
             active[slot] = 1.0
         _, _, dec_policy = self._rung_phases[self._rung]
         t0 = self._now()
-        logits, self.pool.caches = self._dstep(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            self.pool.caches, self.sp, jnp.asarray(active),
-            policy=dec_policy)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        with self.obs.annotate("repro/decode"):
+            logits, self.pool.caches = self._dstep(
+                self.params, jnp.asarray(tokens), jnp.asarray(positions),
+                self.pool.caches, self.sp, jnp.asarray(active),
+                policy=dec_policy)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
         t1 = self._now()
         self.stats.decode_time += t1 - t0
-        self.stats.decode_step_s.append(t1 - t0)
+        self.stats.observe_decode_step(t1 - t0)
         self.stats.decode_steps += 1
+        if self.obs.tracer is not None:
+            self.obs.tracer.complete(
+                "decode_step", t0, t1, active=len(decoding),
+                rung=self._rung)
         gaps = []
         for slot, rs in list(decoding.items()):
             tok = int(nxt[slot])
             if rs.last_token_time is not None:
                 gaps.append(t1 - rs.last_token_time)
-                self.stats.tpot_s.append(gaps[-1])
+                self.stats.observe_tpot(gaps[-1])
             rs.last_token_time = t1
             self._emit(rs, tok)
             self.pool.commit(slot, 1)
@@ -619,7 +699,21 @@ class Engine:
                 gaps, queue_depth=len(self.scheduler.queue),
                 occupancy=self.pool.num_occupied)
             if new_rung != self._rung:
+                old = self._rung
                 self.set_rung(new_rung)
+                tr = self.controller.transitions[-1] \
+                    if self.controller.transitions else None
+                reason = tr[3] if tr is not None else None
+                if self.obs.events is not None:
+                    self.obs.events.emit(
+                        "rung_switch", t=t1, from_rung=old,
+                        to_rung=new_rung, reason=reason,
+                        controller_step=self.controller.step,
+                        queue_depth=len(self.scheduler.queue))
+                if self.obs.tracer is not None:
+                    self.obs.tracer.instant(
+                        "rung_switch", t=t1, from_rung=old,
+                        to_rung=new_rung, reason=reason)
 
     def _maybe_finish(self, rs: RequestState, token: int) -> None:
         req = rs.request
@@ -630,6 +724,12 @@ class Engine:
         else:
             return
         rs.finish_time = self._now()
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant(
+                "finish", t=rs.finish_time,
+                tid=req.request_id + 1, slot=rs.slot,
+                reason=rs.finish_reason.value,
+                tokens=len(rs.tokens))
         self.scheduler.finish(rs)
         self.pool.free(rs.slot)
         self.stats.finished += 1
@@ -651,8 +751,14 @@ class Engine:
             "decode_steps": s.decode_steps,
             "decode_tokens": s.decode_tokens,
             "decode_tps": round(s.decode_tps, 1),
-            "tpot_p95_s": None if not s.tpot_s
-            else round(percentile(s.tpot_s, 95), 6),
+            # v4: whole-run exact-histogram quantiles (bucket upper
+            # bounds); *_window_s keeps the old recent-window estimate
+            "tpot_p50_s": None if not s.tpot_hist
+            else round(s.tpot_hist.quantile(50), 6),
+            "tpot_p95_s": None if not s.tpot_hist
+            else round(s.tpot_hist.quantile(95), 6),
+            "tpot_p95_window_s": None if not s.tpot_s
+            else round(s.window_tpot_p95(), 6),
         }
         if self.ladder is not None:
             out["rung"] = self._rung
@@ -665,12 +771,17 @@ class Engine:
                 s.spec_accepted_tokens / max(1, s.spec_draft_tokens), 4)
         if self.prefix_cache is not None:
             out.update(self.prefix_cache.snapshot())
+        if self.obs.enabled:
+            if self.obs.events is not None:
+                out["telemetry_events"] = self.obs.events.count
+            if self.obs.tracer is not None:
+                out["telemetry_spans"] = len(self.obs.tracer.events)
         return out
 
     # ------------------------------------------------------------------
     @staticmethod
     def _now() -> float:
-        return time.monotonic()
+        return obs.now()
 
     @property
     def decode_traces(self) -> int:

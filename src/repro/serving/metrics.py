@@ -5,15 +5,38 @@ inter-token (TPOT) signal the adaptive controller steers on.
 Every per-sample series is a fixed-capacity :class:`RingBuffer` — a
 long-running server samples queue depth and step latencies millions of
 times, and the old unbounded lists grew without limit.  The ring keeps
-the most recent window for percentiles while tracking the *whole-run*
-count and sum, so the summary means are exact (and identical to the old
-list-based output) at any run length."""
+the most recent window while tracking the *whole-run* count and sum, so
+the summary means are exact at any run length.
+
+Percentile semantics (two estimators, deliberately):
+
+* The SLO-facing ``*_p50_s``/``*_p95_s`` summary fields are backed by
+  exact whole-run :class:`repro.obs.metrics.Histogram` instances (fixed
+  log-spaced buckets, observed next to each ring append).  A ring-based
+  percentile silently becomes a *windowed* estimate once ``count >
+  capacity`` — wrong for long-run p95 gates — and re-sorts the full
+  4096-sample ring on every ``summary()``/``snapshot()`` call
+  (O(n log n) per snapshot); the histogram quantile never drops a
+  sample and walks cumulative bucket counts in O(buckets).
+* ``tpot_p95_window_s`` keeps the recent-window (last ``capacity``
+  samples) estimate explicitly, for operators who want "now" rather
+  than "whole run".  The :class:`~repro.serving.controller
+  .AdaptiveController` steers on neither — it keeps its own EWMA and
+  reports ``tpot_estimator: "ewma"`` in its snapshot.
+
+These histograms are also what :func:`repro.obs.metrics.engine_registry`
+exports in Prometheus text-exposition format."""
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Iterable, Optional
 
+from repro.obs.metrics import Histogram
 from repro.serving.request import RequestState
+
+# draft-length accept counts are small ints; unit-width bins make the
+# accepted-per-verify histogram exact, not just bucket-resolved
+_ACCEPT_BUCKETS = tuple(float(i) for i in range(17))
 
 
 class RingBuffer:
@@ -97,6 +120,14 @@ class EngineStats:
     # so it rises under admission pressure even when the batched decode
     # step itself is constant-time)
     tpot_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    # exact whole-run histograms backing the SLO-facing percentiles (see
+    # the module docstring): observed next to the ring appends via the
+    # observe_* helpers below
+    tpot_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    ttft_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    decode_step_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    prefill_step_hist: Histogram = dataclasses.field(
+        default_factory=Histogram)
     # --- speculative decoding -------------------------------------------
     spec_rounds: int = 0                     # spec rounds (draft + verify)
     spec_draft_steps: int = 0                # single-token drafter steps
@@ -108,10 +139,14 @@ class EngineStats:
     # sequential drafter steps, one verify sample the batched verify forward
     spec_draft_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
     spec_verify_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    spec_draft_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    spec_verify_hist: Histogram = dataclasses.field(default_factory=Histogram)
     # per-slot per-round accepted-draft counts (the acceptance *series*;
     # the whole-run rate comes from the exact counters above)
     spec_accepted_per_verify: RingBuffer = dataclasses.field(
         default_factory=RingBuffer)
+    spec_accepted_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(_ACCEPT_BUCKETS))
     # --- prefix caching --------------------------------------------------
     prefix_lookups: int = 0                  # admissions that consulted it
     prefix_hits: int = 0                     # admissions that reused KV
@@ -124,6 +159,34 @@ class EngineStats:
         self.queue_depth.append(queue_depth)
         self.occupancy.append(occupied_slots)
 
+    # -- paired ring + exact-histogram observation -----------------------
+    def observe_tpot(self, v: float) -> None:
+        self.tpot_s.append(v)
+        self.tpot_hist.observe(v)
+
+    def observe_ttft(self, v: float) -> None:
+        self.ttft_hist.observe(v)
+
+    def observe_decode_step(self, v: float) -> None:
+        self.decode_step_s.append(v)
+        self.decode_step_hist.observe(v)
+
+    def observe_prefill_step(self, v: float) -> None:
+        self.prefill_step_s.append(v)
+        self.prefill_step_hist.observe(v)
+
+    def observe_spec_draft(self, v: float) -> None:
+        self.spec_draft_s.append(v)
+        self.spec_draft_hist.observe(v)
+
+    def observe_spec_verify(self, v: float) -> None:
+        self.spec_verify_s.append(v)
+        self.spec_verify_hist.observe(v)
+
+    def observe_spec_accepted(self, n: int) -> None:
+        self.spec_accepted_per_verify.append(n)
+        self.spec_accepted_hist.observe(n)
+
     @property
     def decode_tps(self) -> float:
         return self.decode_tokens / self.decode_time if self.decode_time else 0.0
@@ -133,8 +196,15 @@ class EngineStats:
         return (self.prefill_tokens / self.prefill_time
                 if self.prefill_time else 0.0)
 
+    def window_tpot_p95(self) -> float:
+        """Recent-window (last ``capacity`` samples) TPOT p95 — the
+        "now" estimate, vs the whole-run histogram quantile."""
+        return percentile(self.tpot_s, 95)
+
     def tpot_percentile(self, p: float) -> float:
-        return percentile(self.tpot_s, p)
+        """Whole-run TPOT percentile from the exact histogram (bucket
+        resolution, O(buckets) — see the module docstring)."""
+        return self.tpot_hist.quantile(p)
 
     def summary(self) -> Dict[str, float]:
         out = {
@@ -151,9 +221,15 @@ class EngineStats:
             "mean_occupancy": round(self.occupancy.mean, 2),
             "mean_queue_depth": round(self.queue_depth.mean, 2),
         }
-        if self.tpot_s:
-            out["tpot_p50_s"] = round(self.tpot_percentile(50), 5)
-            out["tpot_p95_s"] = round(self.tpot_percentile(95), 5)
+        if self.tpot_hist:
+            # whole-run exact-histogram percentiles; *_window_s is the
+            # recent-window (last `capacity` samples) ring estimate
+            out["tpot_p50_s"] = round(self.tpot_hist.quantile(50), 5)
+            out["tpot_p95_s"] = round(self.tpot_hist.quantile(95), 5)
+            out["tpot_p95_window_s"] = round(percentile(self.tpot_s, 95), 5)
+        if self.ttft_hist:
+            out["ttft_p50_s"] = round(self.ttft_hist.quantile(50), 5)
+            out["ttft_p95_s"] = round(self.ttft_hist.quantile(95), 5)
         if self.spec_rounds:
             out["spec_rounds"] = self.spec_rounds
             out["spec_committed_tokens"] = self.spec_committed_tokens
@@ -161,15 +237,16 @@ class EngineStats:
                 self.spec_accepted_tokens / max(1, self.spec_draft_tokens), 4)
             out["spec_accepted_per_verify"] = round(
                 self.spec_accepted_tokens / max(1, self.spec_verifies), 3)
-            apv = self.spec_accepted_per_verify
-            if apv:
-                out["spec_accepted_per_verify_p50"] = percentile(apv, 50)
-                out["spec_accepted_per_verify_p95"] = percentile(apv, 95)
-            for name, buf in (("spec_draft", self.spec_draft_s),
-                              ("spec_verify", self.spec_verify_s)):
-                if buf:
-                    out[f"{name}_p50_s"] = round(percentile(buf, 50), 5)
-                    out[f"{name}_p95_s"] = round(percentile(buf, 95), 5)
+            if self.spec_accepted_hist:
+                out["spec_accepted_per_verify_p50"] = \
+                    self.spec_accepted_hist.quantile(50)
+                out["spec_accepted_per_verify_p95"] = \
+                    self.spec_accepted_hist.quantile(95)
+            for name, hist in (("spec_draft", self.spec_draft_hist),
+                               ("spec_verify", self.spec_verify_hist)):
+                if hist:
+                    out[f"{name}_p50_s"] = round(hist.quantile(50), 5)
+                    out[f"{name}_p95_s"] = round(hist.quantile(95), 5)
         if self.prefix_lookups:
             out["prefix_hit_rate"] = round(
                 self.prefix_hits / self.prefix_lookups, 4)

@@ -54,6 +54,9 @@ from __future__ import annotations
 import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs.clock import now as _obs_now
+from repro.obs.profiler import NULL_CONTEXT as _NULL_CTX
+
 
 class RadixNode:
     """One radix-tree node.  ``edge`` is the token span from the parent;
@@ -342,10 +345,14 @@ class PrefixCache:
     (0 = unbounded); eviction runs after each publish.  ``stats_fn``
     returns the engine's live :class:`EngineStats` (the engine swaps
     its stats object between benchmark reps, so the cache must not
-    capture one instance)."""
+    capture one instance).  ``obs_fn`` likewise returns the engine's
+    live :class:`repro.obs.Telemetry` — admissions trace a
+    ``prefix_lookup`` span per consult and evictions land in the
+    structured event log with segment depths."""
 
     def __init__(self, pool, chunk: int, capacity_tokens: int = 0,
-                 stats_fn: Optional[Callable] = None):
+                 stats_fn: Optional[Callable] = None,
+                 obs_fn: Optional[Callable] = None):
         if chunk <= 0:
             raise ValueError(f"chunk must be positive, got {chunk}")
         if capacity_tokens < 0:
@@ -361,6 +368,7 @@ class PrefixCache:
         self.capacity_tokens = capacity_tokens
         self.tree = RadixTree()
         self._stats_fn = stats_fn
+        self._obs_fn = obs_fn
         self._pins: Dict[int, RadixNode] = {}   # request_id -> source node
 
     # ------------------------------------------------------------------
@@ -371,6 +379,9 @@ class PrefixCache:
 
     def _stats(self):
         return self._stats_fn() if self._stats_fn is not None else None
+
+    def _obs(self):
+        return self._obs_fn() if self._obs_fn is not None else None
 
     @property
     def cached_tokens(self) -> int:
@@ -415,26 +426,37 @@ class PrefixCache:
         chunk-prefilled.  Pins the source node until :meth:`publish`.
         Returns the matched length (0 = miss)."""
         stats = self._stats()
+        tele = self._obs()
         if stats is not None:
             stats.prefix_lookups += 1
+        t0 = _obs_now() if tele is not None and tele.tracer is not None \
+            else None
         prompt = tuple(int(t) for t in rs.request.prompt)
         src, n = self.tree.match(prompt, limit=len(prompt) - 1)
-        if src is None or n <= 0:
-            return 0
-        # the whole physical segment is copied (one executable per
-        # segment shape, all precompiled at warmup); only the matched
-        # [0, n) prefix is accounted as live — the copied tail is
-        # overwritten/masked before anything can attend it
-        self.pool.write_prefix(src.payload, rs.slot)
-        self.pool.lengths[rs.slot] = n
-        rs.next_offset = n
-        self.tree.pin(src)
-        self._pins[rs.request.request_id] = src
-        if stats is not None:
-            stats.prefix_hits += 1
-            stats.prefix_tokens_saved += n
-            stats.prefix_hit_len.append(n)
-        return n
+        hit = src is not None and n > 0
+        if hit:
+            # the whole physical segment is copied (one executable per
+            # segment shape, all precompiled at warmup); only the matched
+            # [0, n) prefix is accounted as live — the copied tail is
+            # overwritten/masked before anything can attend it
+            ctx = tele.annotate("repro/prefix_write") if tele is not None \
+                else _NULL_CTX
+            with ctx:
+                self.pool.write_prefix(src.payload, rs.slot)
+            self.pool.lengths[rs.slot] = n
+            rs.next_offset = n
+            self.tree.pin(src)
+            self._pins[rs.request.request_id] = src
+            if stats is not None:
+                stats.prefix_hits += 1
+                stats.prefix_tokens_saved += n
+                stats.prefix_hit_len.append(n)
+        if t0 is not None:
+            tele.tracer.complete(
+                "prefix_lookup", t0, _obs_now(),
+                tid=rs.request.request_id + 1, slot=rs.slot, hit=hit,
+                matched=n if hit else 0)
+        return n if hit else 0
 
     def release(self, rs) -> None:
         """Unpin the source node ``rs`` admitted against, if any."""
@@ -455,13 +477,25 @@ class PrefixCache:
             self.tree.touch(existing)
             return
         phys = self._phys(len(prompt))
-        seg = self.pool.extract_prefix(rs.slot, phys)
+        tele = self._obs()
+        ctx = tele.annotate("repro/prefix_extract") if tele is not None \
+            else _NULL_CTX
+        with ctx:
+            seg = self.pool.extract_prefix(rs.slot, phys)
         self.tree.insert(prompt, seg, phys)
         if self.capacity_tokens:
+            before = self.tree.total_size   # evict() zeroes victim sizes
             evicted = self.tree.evict(self.capacity_tokens)
             stats = self._stats()
             if stats is not None:
                 stats.prefix_evicted_segments += len(evicted)
+            if evicted and tele is not None and tele.events is not None:
+                tele.events.emit(
+                    "prefix_evict", segments=len(evicted),
+                    tokens=before - self.tree.total_size,
+                    depths=[n.end for n in evicted],
+                    cached_tokens=self.tree.total_size,
+                    trigger_request=rs.request.request_id)
 
     # ------------------------------------------------------------------
     def snapshot(self) -> dict:

@@ -27,7 +27,8 @@ class Scheduler:
     def enqueue(self, rs: RequestState) -> None:
         self.queue.append(rs)
 
-    def admit(self, pool: SlotKVPool, prefix_cache=None) -> None:
+    def admit(self, pool: SlotKVPool, prefix_cache=None,
+              tracer=None) -> None:
         while self.queue and pool.num_free:
             rs = self.queue.popleft()
             rs.slot = pool.alloc()
@@ -35,6 +36,10 @@ class Scheduler:
                 prefix_cache.admit(rs)      # hit: cursor jumps past the
             rs.status = Status.PREFILL      # cached prefix
             self.prefilling.append(rs)
+            if tracer is not None:
+                tracer.instant(
+                    "admit", tid=rs.request.request_id + 1, slot=rs.slot,
+                    cached_prefix=rs.next_offset)
 
     def has_work(self) -> bool:
         return bool(self.queue or self.prefilling or self.decoding)

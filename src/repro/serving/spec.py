@@ -195,36 +195,46 @@ class SpecDecoder:
         # without a host round-trip); one block per phase keeps the
         # draft/verify latency split honest without per-step syncs
         t0 = eng._now()
-        act = jnp.asarray(active)
-        toks = jnp.asarray(cur)
-        draft_cols = []
-        for i in range(g):
-            logits, eng.pool.caches = eng._dstep(
-                params, toks, jnp.asarray(start + i),
-                eng.pool.caches, draft_sp, act, policy=draft_pol)
-            toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            draft_cols.append(toks)
-        drafts_dev = jnp.stack(draft_cols, axis=1)             # (S, g)
-        drafts_dev.block_until_ready()
+        with eng.obs.annotate("repro/spec_draft"):
+            act = jnp.asarray(active)
+            toks = jnp.asarray(cur)
+            draft_cols = []
+            for i in range(g):
+                logits, eng.pool.caches = eng._dstep(
+                    params, toks, jnp.asarray(start + i),
+                    eng.pool.caches, draft_sp, act, policy=draft_pol)
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                draft_cols.append(toks)
+            drafts_dev = jnp.stack(draft_cols, axis=1)         # (S, g)
+            drafts_dev.block_until_ready()
         t1 = eng._now()
 
         # --- verify: one batched (g+1)-token forward ---------------------
-        vtokens = jnp.concatenate(
-            [jnp.asarray(cur)[:, None], drafts_dev], axis=1)
-        weights = np.repeat(active[:, None], g + 1, axis=1)
-        logits, eng.pool.caches = self._vstep(
-            params, vtokens, jnp.asarray(start),
-            eng.pool.caches, ver_sp, jnp.asarray(weights), policy=ver_pol)
-        ver = np.asarray(jnp.argmax(logits, axis=-1))          # (S, g+1)
-        drafts = np.asarray(drafts_dev)
+        with eng.obs.annotate("repro/spec_verify"):
+            vtokens = jnp.concatenate(
+                [jnp.asarray(cur)[:, None], drafts_dev], axis=1)
+            weights = np.repeat(active[:, None], g + 1, axis=1)
+            logits, eng.pool.caches = self._vstep(
+                params, vtokens, jnp.asarray(start),
+                eng.pool.caches, ver_sp, jnp.asarray(weights),
+                policy=ver_pol)
+            ver = np.asarray(jnp.argmax(logits, axis=-1))      # (S, g+1)
+            drafts = np.asarray(drafts_dev)
         t2 = eng._now()
 
         stats = eng.stats
         stats.spec_rounds += 1
         stats.spec_draft_steps += g
         stats.decode_steps += g
-        stats.spec_draft_s.append(t1 - t0)
-        stats.spec_verify_s.append(t2 - t1)
+        stats.observe_spec_draft(t1 - t0)
+        stats.observe_spec_verify(t2 - t1)
+        tracer = eng.obs.tracer
+        if tracer is not None:
+            tracer.complete("spec_draft", t0, t1, gamma=g,
+                            drafter_rung=self.drafter_rung,
+                            active=len(decoding))
+            tracer.complete("spec_verify", t1, t2, gamma=g,
+                            verifier_rung=self.verifier_rung)
 
         # --- accept, then one batched rollback, then emit ----------------
         accept_fracs = []
@@ -252,11 +262,16 @@ class SpecDecoder:
             eng.pool.commit(slot, g + 1)
             rollbacks[slot] = g + 1 - m
             commits[slot] = (rs, cand[:m], n_acc)
-        eng.pool.rollback_many(rollbacks)
+        with eng.obs.annotate("repro/spec_rollback"):
+            eng.pool.rollback_many(rollbacks)
         t3 = eng._now()
         # the round's decode cost includes the rollback dispatch — it is
         # real per-round work plain decode doesn't pay
         stats.decode_time += t3 - t0
+        if tracer is not None:
+            tracer.complete("spec_commit", t2, t3,
+                            rollback_tokens=sum(rollbacks.values()))
+        events = eng.obs.events
 
         for slot, (rs, committed, n_acc) in commits.items():
             m = len(committed)
@@ -265,11 +280,17 @@ class SpecDecoder:
             stats.spec_draft_tokens += g
             stats.spec_accepted_tokens += n_acc
             stats.spec_committed_tokens += m
-            stats.spec_accepted_per_verify.append(n_acc)
+            stats.observe_spec_accepted(n_acc)
+            if events is not None and rollbacks[slot] > 0:
+                events.emit(
+                    "kv_rollback", t=t3, slot=slot,
+                    request=rs.request.request_id,
+                    tokens=rollbacks[slot], accepted=n_acc,
+                    committed=m, gamma=g)
             if rs.last_token_time is not None:
                 gap = (t3 - rs.last_token_time) / m   # amortized TPOT
                 for _ in range(m):
-                    stats.tpot_s.append(gap)
+                    stats.observe_tpot(gap)
             rs.last_token_time = t3
             for tok in committed:
                 eng._emit(rs, tok)
@@ -278,7 +299,23 @@ class SpecDecoder:
         # --- adapt -------------------------------------------------------
         frac = float(np.mean(accept_fracs))
         if self.controller is not None:
+            old_g, old_d = self.gamma, self.drafter_rung
             self.gamma, self.drafter_rung = self.controller.update(frac)
+            if (self.gamma, self.drafter_rung) != (old_g, old_d):
+                reason = self.controller.transitions[-1][3] \
+                    if self.controller.transitions else None
+                if events is not None:
+                    events.emit(
+                        "gamma_switch" if self.gamma != old_g
+                        else "drafter_switch", t=t3,
+                        from_gamma=old_g, to_gamma=self.gamma,
+                        from_drafter=old_d, to_drafter=self.drafter_rung,
+                        reason=reason,
+                        accept_ewma=self.controller.accept_ewma)
+                if tracer is not None:
+                    tracer.instant(
+                        "spec_switch", t=t3, gamma=self.gamma,
+                        drafter_rung=self.drafter_rung, reason=reason)
         else:
             a = self.scfg.accept_ewma_alpha
             self._accept_ewma = frac if self._accept_ewma is None else \

@@ -10,8 +10,8 @@ from repro.configs import get_config, reduced
 from repro.core.sp_schema import default_sp_stacked
 from repro.data import DataConfig, SyntheticLM
 from repro.models import api
-from repro.serving import (Engine, EngineConfig, PrefixCache, RadixTree,
-                           SlotKVPool, SpecConfig)
+from repro.serving import (SNAPSHOT_SCHEMA_VERSION, Engine, EngineConfig,
+                           PrefixCache, RadixTree, SlotKVPool, SpecConfig)
 from repro.sparsity import PolicyLadder, SparsityPolicy
 
 
@@ -275,7 +275,7 @@ def test_engine_hit_parity_and_stats(model):
     assert s.prefix_tokens_saved == 16 + 16 + 19
     assert warm.decode_retraces_after_warmup == 0
     snap = warm.snapshot()
-    assert snap["schema_version"] == 3
+    assert snap["schema_version"] == SNAPSHOT_SCHEMA_VERSION
     assert snap["prefix_hit_rate"] == 0.75
     assert snap["prefix_segments"] == 3          # repeat not re-published
     assert warm.prefix_cache.cached_tokens > 0
