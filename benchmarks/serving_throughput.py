@@ -25,6 +25,7 @@ typically protect.
     PYTHONPATH=src python -m benchmarks.serving_throughput --spec
     PYTHONPATH=src python -m benchmarks.serving_throughput --prefix-cache
     PYTHONPATH=src python -m benchmarks.serving_throughput --telemetry
+    PYTHONPATH=src python -m benchmarks.serving_throughput --gateway
     PYTHONPATH=src python -m benchmarks.serving_throughput --smoke   # CI
 
 ``--controller`` runs the SLO-aware adaptive sweep instead: a *stepped*
@@ -61,6 +62,14 @@ tokens on every rep, full-telemetry decode tok/s >= 97% of plain
 (interleaved best-of-reps), zero decode retraces with annotations
 enabled, and the exported Prometheus/Chrome-trace artifacts validate.
 
+``--gateway`` runs the two-tenant burst sweep: a best-effort ``batch``
+tenant floods the slot pool with long generations, then interactive
+``chat`` requests arrive mid-decode.  FIFO baseline vs a priority +
+preemption engine.  Hard gates: every preempted-then-resumed request
+finishes token-identical to its unpreempted FIFO run, preemptions > 0,
+zero decode/segment retraces after warmup, and (full mode) interactive
+p95 TTFT <= 0.7x the FIFO baseline's.
+
 The default model is a reduced-but-not-tiny llama31_8b variant
 (d_model=768, d_ff=6144, 4 layers) — large enough that decode is
 matmul-bound on CPU, so the shared-mask gather backends show their FLOP/
@@ -81,8 +90,8 @@ from repro.core.sp_schema import default_sp_stacked
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.serve import generate
 from repro.models import api
-from repro.serving import (Engine, EngineConfig, EngineStats, SLOConfig,
-                           SpecConfig)
+from repro.serving import (Engine, EngineConfig, EngineStats, Priority,
+                           SchedulerConfig, SLOConfig, SpecConfig)
 from repro.serving.metrics import latency_percentiles, percentile
 from repro.sparsity import PolicyLadder, SparsityPolicy
 
@@ -118,16 +127,27 @@ def stepped_trace(segments, prompt_lens, seed=0):
     return arrivals, lens
 
 
-def replay(engine: Engine, prompts, arrivals, gen_tokens):
-    """Drive the engine against wall-clock arrivals; returns trace states."""
+def replay(engine: Engine, prompts, arrivals, gen_tokens, submit_kw=None):
+    """Drive the engine against wall-clock arrivals; returns trace states.
+
+    ``gen_tokens`` is an int or a per-request sequence; ``submit_kw``
+    optionally gives per-request extra :meth:`Engine.submit` keywords
+    (priority / tenant / deadline).  Resets the engine's request-id
+    namespace first, so trace request ``i`` is request id ``i`` on every
+    engine and every rep — cross-engine state comparisons key on the id."""
+    engine.reset_ids()
     states = []
+    gens = ([gen_tokens] * len(prompts) if np.isscalar(gen_tokens)
+            else list(gen_tokens))
     t0 = obs.now()            # the engine's own clock (repro.obs.clock)
     i = 0
     while i < len(prompts) or engine.scheduler.has_work():
         now = obs.now() - t0
         while i < len(prompts) and arrivals[i] <= now:
-            states.append(engine.submit(prompts[i], gen_tokens,
-                                        arrival_time=t0 + arrivals[i]))
+            states.append(engine.submit(prompts[i], gens[i],
+                                        arrival_time=t0 + arrivals[i],
+                                        **(submit_kw[i] if submit_kw
+                                           else {})))
             i += 1
         if engine.scheduler.has_work():
             engine.step()
@@ -184,14 +204,15 @@ def mixed_scenario(params, cfg, sparsity, sensitive_frac=0.25):
 
 
 def _agreement(states_a, states_b):
-    """Mean per-request fraction of identical generated tokens.  States
-    align by trace order, not request id — engines are reused across
-    interleaved reps, so ids keep counting while the trace restarts."""
-    assert len(states_a) == len(states_b), \
+    """Mean per-request fraction of identical generated tokens, keyed by
+    request id — ``replay()`` resets each engine's id namespace per rep,
+    so trace request ``i`` carries id ``i`` on every engine."""
+    by_id = {s.request.request_id: s for s in states_b}
+    assert {s.request.request_id for s in states_a} == set(by_id), \
         f"trace mismatch: {len(states_a)} vs {len(states_b)} requests"
     fracs = []
-    for sa, sb in zip(states_a, states_b):
-        ta, tb = sa.tokens, sb.tokens
+    for sa in states_a:
+        ta, tb = sa.tokens, by_id[sa.request.request_id].tokens
         n = max(len(ta), len(tb), 1)
         eq = sum(1 for x, y in zip(ta, tb) if x == y)
         fracs.append(eq / n)
@@ -626,7 +647,9 @@ def run_telemetry(log=print, cfg=None, n_requests=12, rate_hz=8.0,
         with open(metrics_out, "w") as f:
             f.write(engines["telemetry"].metrics_exposition())
         log(f"wrote exposition to {metrics_out}")
-    tel.close()
+    # Engine.close() flushes every telemetry sink (satisfying sinks with
+    # buffered JSONL even if a gate above raised first on a rerun)
+    engines["telemetry"].close()
 
     if check:
         assert retraces == 0, \
@@ -636,6 +659,136 @@ def run_telemetry(log=print, cfg=None, n_requests=12, rate_hz=8.0,
             assert ratio >= overhead_gate, \
                 f"full telemetry keeps only {ratio:.1%} of plain decode " \
                 f"throughput, below the {overhead_gate:.0%} gate"
+    return rows
+
+
+def _ttft(rs):
+    if rs.first_token_time is None:
+        return None
+    return rs.first_token_time - rs.request.arrival_time
+
+
+def run_gateway(log=print, cfg=None, n_bulk=4, n_interactive=6,
+                bulk_gen=64, int_gen=8, int_start=0.3, int_rate=8.0,
+                max_slots=2, max_queue=32, seed=0, reps=2,
+                ttft_gate=0.7, check=True, check_ttft=True):
+    """Two-tenant burst sweep: priority + preemption vs FIFO admission.
+
+    A ``batch`` tenant floods the pool with long best-effort generations
+    at t=0; a ``chat`` tenant's short interactive requests arrive while
+    every KV slot is decoding bulk work.  The same trace replays against
+    a FIFO baseline engine (no :class:`SchedulerConfig`; all requests at
+    the default class) and a priority engine with preemption armed — the
+    interactive arrivals suspend bulk victims to host memory and take
+    their slots, so their time-to-first-token stops queuing behind bulk
+    decode.
+
+    Hard gates: (1) whole-trace per-request token parity between the two
+    engines — a preempted-then-resumed bulk request must finish with
+    exactly the tokens it produces when never preempted (dense decode is
+    per-row deterministic, so batch composition cannot excuse a diff);
+    (2) at least one preemption actually happened; (3) zero decode *and*
+    zero suspend/resume-segment retraces after warmup; (4) interactive
+    p95 TTFT <= ``ttft_gate`` x the FIFO baseline's (skipped in smoke
+    mode, where the trace is too small to gate timing)."""
+    cfg = cfg or bench_config()
+    params = api.init_model(cfg, 0)
+    prompt_lens = (24, 32)
+    rng = np.random.default_rng(seed)
+    n = n_bulk + n_interactive
+    lens = rng.choice(prompt_lens, size=n)
+    pool = np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, max(prompt_lens), n)).batch(0))
+    prompts = [pool[i, :lens[i]] for i in range(n)]
+    # bulk floods at t=0; interactive arrives once the pool is decoding
+    arrivals = np.concatenate([
+        np.full(n_bulk, 0.0),
+        int_start + np.cumsum(rng.exponential(1.0 / int_rate,
+                                              size=n_interactive))])
+    gens = [bulk_gen] * n_bulk + [int_gen] * n_interactive
+    pri_kw = ([dict(priority=Priority.BEST_EFFORT, tenant="batch")]
+              * n_bulk
+              + [dict(priority=Priority.INTERACTIVE, tenant="chat")]
+              * n_interactive)
+    int_ids = set(range(n_bulk, n))
+    max_len = max(prompt_lens) + bulk_gen
+
+    def fresh(scheduler=None):
+        eng = Engine(params, cfg, EngineConfig(
+            max_slots=max_slots, max_len=max_len, prefill_chunk=32,
+            scheduler=scheduler), None)
+        eng.warmup()
+        eng.submit(prompts[0], 2)     # absorb first-dispatch overheads
+        eng.run()
+        return eng
+
+    engines = {
+        "fifo": fresh(),
+        "priority": fresh(SchedulerConfig(max_queue=max_queue,
+                                          preemption=True)),
+    }
+    kw = {"fifo": None, "priority": pri_kw}
+
+    best = {}
+    total_preemptions = 0
+    for rep in range(reps):
+        rep_states = {}
+        for mode, eng in engines.items():
+            eng.stats = EngineStats()
+            states = replay(eng, prompts, arrivals, gens, submit_kw=kw[mode])
+            rep_states[mode] = states
+            ttfts = [t for s in states if s.request.request_id in int_ids
+                     and (t := _ttft(s)) is not None]
+            p95 = percentile(ttfts, 95)
+            if mode not in best or p95 < best[mode][1]:
+                best[mode] = (eng.stats, p95, states)
+        total_preemptions += engines["priority"].stats.preemptions
+        # parity gate on EVERY rep, keyed by request id: preempted bulk
+        # requests must resume to exactly their unpreempted tokens
+        ref = {s.request.request_id: s.tokens for s in rep_states["fifo"]}
+        for s in rep_states["priority"]:
+            rid = s.request.request_id
+            assert s.tokens == ref[rid], \
+                f"priority engine diverged from FIFO on trace request " \
+                f"{rid} ({s.preemptions} preemption(s))"
+    log(f"preemption parity vs FIFO: OK ({n} requests x {reps} reps)")
+    rows = [("serving/gateway/parity_vs_fifo", 0.0, "ok")]
+
+    pri_eng = engines["priority"]
+    d_retraces = pri_eng.decode_retraces_after_warmup
+    s_retraces = pri_eng.segment_retraces_after_warmup
+    for mode in engines:
+        s, p95, _ = best[mode]
+        log(f"{mode:9s} interactive ttft p95 {p95*1e3:7.1f}ms | decode "
+            f"{s.decode_tps:7.1f} tok/s | preemptions {s.preemptions} "
+            f"resumes {s.resumes}")
+        rows.append((f"serving/gateway/interactive_ttft_p95/{mode}", 0.0,
+                     f"{p95:.4f}s"))
+    ratio = best["priority"][1] / best["fifo"][1]
+    log(f"interactive ttft p95: {ratio:.2f}x FIFO (gate <= {ttft_gate}) | "
+        f"preemptions {total_preemptions} | retraces after warmup: "
+        f"decode {d_retraces} segment {s_retraces}")
+    rows.append(("serving/gateway/interactive_ttft_ratio", 0.0,
+                 f"x{ratio:.3f};gate<={ttft_gate}"))
+    rows.append(("serving/gateway/preemptions", 0.0,
+                 str(total_preemptions)))
+    rows.append(("serving/gateway/retraces_after_warmup", 0.0,
+                 f"decode={d_retraces};segment={s_retraces}"))
+    if check:
+        assert total_preemptions > 0, \
+            "no preemption on a trace built to saturate the pool with " \
+            "best-effort decode"
+        assert d_retraces == 0, \
+            f"{d_retraces} decode retrace(s) after warmup — suspend/" \
+            "resume must not disturb the decode executable"
+        assert s_retraces == 0, \
+            f"{s_retraces} suspend/resume segment retrace(s) after " \
+            "warmup — warm_segments must precompile every quantized " \
+            "length"
+        if check_ttft:
+            assert ratio <= ttft_gate, \
+                f"interactive p95 TTFT is {ratio:.2f}x FIFO, above the " \
+                f"{ttft_gate}x gate — preemption is not buying latency"
     return rows
 
 
@@ -738,15 +891,16 @@ def run_spec(log=print, cfg=None, sparsity=0.5, gamma=2, gammas=(1, 2, 3),
                 results[mode] = engine.stats.decode_tps
                 best[mode] = (engine.stats, states)
             # hard parity gate on EVERY spec rep: token-identical to the
-            # verifier-only engine across the whole Poisson trace (states
-            # align by trace order — request ids keep counting across
-            # reps on a reused engine)
+            # verifier-only engine across the whole Poisson trace, keyed
+            # by request id (replay() resets the id namespace per rep)
             if mode == "spec":
-                ref = best["verifier_only"][1]
-                for i, s in enumerate(states):
-                    assert s.tokens == ref[i].tokens, \
+                ref = {s.request.request_id: s.tokens
+                       for s in best["verifier_only"][1]}
+                for s in states:
+                    rid = s.request.request_id
+                    assert s.tokens == ref[rid], \
                         f"spec diverged from verifier-only decode on " \
-                        f"trace request {i}"
+                        f"trace request {rid}"
 
     rows = [("serving/spec/parity_vs_verifier", 0.0, "ok")]
     log("spec parity vs verifier-only decode: OK "
@@ -843,6 +997,11 @@ def main():
                          "(full repro.obs telemetry vs plain engine: "
                          "bit-identical tokens, <3% decode overhead, "
                          "valid exposition/trace artifacts)")
+    ap.add_argument("--gateway", action="store_true",
+                    help="run only the two-tenant burst sweep (priority "
+                         "+ preemption engine vs FIFO baseline: "
+                         "preempted-token parity, interactive TTFT gate, "
+                         "zero decode/segment retraces)")
     ap.add_argument("--trace-out", default=None,
                     help="export the telemetry sweep's Chrome trace JSON "
                          "here (with --telemetry)")
@@ -858,7 +1017,21 @@ def main():
                     help="quick-train steps before the spec sweep (0 "
                          "skips training; expect ~zero acceptance)")
     args = ap.parse_args()
-    if args.telemetry:
+    if args.gateway:
+        if args.smoke:
+            # tiny model + trace: exercises preemption, suspend/resume
+            # parity and the retrace gates; TTFT timing is too noisy to
+            # gate at this scale
+            rows = run_gateway(
+                cfg=bench_config(d_model=128, d_ff=512, layers=4,
+                                 vocab=512),
+                n_bulk=3, n_interactive=3, bulk_gen=48, int_gen=6,
+                int_start=0.05, max_slots=2, seed=args.seed, reps=1,
+                check_ttft=False)
+        else:
+            rows = run_gateway(max_slots=args.slots or 2,
+                               seed=args.seed, reps=args.reps)
+    elif args.telemetry:
         art = dict(trace_out=args.trace_out, metrics_out=args.metrics_out,
                    events_out=args.events_out)
         if args.smoke:

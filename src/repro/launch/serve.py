@@ -35,6 +35,16 @@ un-cached suffix.  ``--prefix-cache-tokens N`` bounds the cached tokens
 prefix-deterministic prefill policy (dense or ``mask``) — the engine
 validates and the hit path stays token-identical to cold prefill.
 
+Gateway: ``--gateway`` serves the asyncio HTTP/1.1 + SSE front door
+(``repro.serving.gateway``) on ``--gateway-host``/``--gateway-port``
+instead of replaying synthetic prompts — ``POST /v1/generate``
+(streaming and non-streaming), ``GET /v1/health``, ``GET /metrics``.
+``--max-queue`` bounds the admission queue (rejects surface as HTTP 429
+with ``Retry-After``) and ``--preemption`` lets a more important
+arrival suspend the least-important decoding request to host memory,
+resuming it bit-identically once a slot frees up.  SIGTERM/Ctrl-C
+stops accepting connections and drains in-flight requests.
+
 Observability (``repro.obs``): ``--metrics-out`` appends JSONL
 snapshots by default; ``--metrics-format prom`` instead rewrites the
 file with a Prometheus text-exposition dump (textfile-collector style),
@@ -119,8 +129,10 @@ def generate(params, cfg, prompts, gen_tokens: int, sp_stacked=None, *,
     return jnp.stack(out, axis=1)
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI parser — exposed (with :func:`validate_args`) so
+    tests can drive flag validation without spawning a process."""
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", default="llama31_8b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--sparsity", type=float, default=0.5)
@@ -199,18 +211,44 @@ def main():
     ap.add_argument("--profile-dir", default=None,
                     help="capture a JAX profiler trace of the run into "
                          "this directory")
-    args = ap.parse_args()
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve the HTTP/1.1 + SSE API front door "
+                         "(repro.serving.gateway) instead of replaying "
+                         "synthetic prompts; SIGTERM/Ctrl-C drains "
+                         "in-flight requests before exiting")
+    ap.add_argument("--gateway-host", default="127.0.0.1",
+                    help="gateway listen address (needs --gateway)")
+    ap.add_argument("--gateway-port", type=int, default=8080,
+                    help="gateway listen port (0 = ephemeral; needs "
+                         "--gateway)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: reject new submissions "
+                         "(HTTP 429 + Retry-After through the gateway) "
+                         "beyond this many queued requests (0 = unbounded)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="suspend the least-important decoding request to "
+                         "host memory when a more important arrival needs "
+                         "its KV slot; the victim resumes bit-identically")
+    return ap
 
+
+def validate_args(args) -> None:
+    """Fail fast on bad flag combinations, before any model work.
+
+    Every check here is driven purely by the parsed namespace; rung
+    range checks need the loaded ladder and live in
+    :func:`validate_rungs`.  Raises ``SystemExit`` with a message that
+    names the offending flag and what to change."""
     if not 0.0 <= args.sparsity <= 1.0:
         raise SystemExit(f"--sparsity must be in [0, 1], got {args.sparsity}")
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    params = api.init_model(cfg, 0)
-    ds = SyntheticLM(DataConfig(cfg.vocab_size, args.prompt_len, args.batch))
-    prompts = jnp.asarray(ds.batch(0))
-
+    for name in ("prompt-len", "gen", "batch", "chunk"):
+        v = getattr(args, name.replace("-", "_"))
+        if v <= 0:
+            raise SystemExit(f"--{name} must be > 0, got {v}")
+    if args.rung < 0:
+        raise SystemExit(f"--rung must be >= 0, got {args.rung}")
+    if args.max_queue < 0:
+        raise SystemExit(f"--max-queue must be >= 0, got {args.max_queue}")
     if args.sensitive_backend is not None and not args.calib_quick:
         raise SystemExit("--sensitive-backend needs a calibrated plan: "
                          "add --calib-quick")
@@ -240,12 +278,57 @@ def main():
     if args.prefix_cache_tokens and not args.prefix_cache:
         raise SystemExit("--prefix-cache-tokens needs --prefix-cache to "
                          "arm the prefix cache")
+    if args.gateway:
+        if args.legacy:
+            raise SystemExit("--gateway needs the engine path, not "
+                             "--legacy")
+        if args.metrics_out:
+            raise SystemExit("--gateway owns the engine loop; drop "
+                             "--metrics-out and scrape GET /metrics "
+                             "instead")
+        if args.metrics_port:
+            raise SystemExit("--gateway already serves /metrics on its "
+                             "own port; drop --metrics-port")
+        if args.gateway_port < 0:
+            raise SystemExit(f"--gateway-port must be >= 0 "
+                             f"(0 = ephemeral), got {args.gateway_port}")
+    elif (args.gateway_host != "127.0.0.1" or args.gateway_port != 8080):
+        raise SystemExit("--gateway-host/--gateway-port need --gateway "
+                         "to start the API front door")
+    if (args.max_queue or args.preemption) and args.legacy:
+        raise SystemExit("--max-queue/--preemption need the engine path, "
+                         "not --legacy")
+
+
+def validate_rungs(args, num_rungs: int) -> None:
+    """Range-check rung-valued flags against the loaded ladder."""
+    if not 0 <= args.rung < num_rungs:
+        raise SystemExit(
+            f"--rung {args.rung} out of range: the loaded ladder has "
+            f"rungs 0..{num_rungs - 1}")
+    if args.spec_gamma > 0 and not 0 <= args.spec_drafter < num_rungs:
+        raise SystemExit(
+            f"--spec-drafter {args.spec_drafter} out of range: the "
+            f"loaded ladder has rungs 0..{num_rungs - 1}")
+
+
+def main():
+    args = build_parser().parse_args()
+    validate_args(args)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = api.init_model(cfg, 0)
+    ds = SyntheticLM(DataConfig(cfg.vocab_size, args.prompt_len, args.batch))
+    prompts = jnp.asarray(ds.batch(0))
 
     ladder = None
     if args.ladder is not None:
         ladder = PolicyLadder.load(args.ladder)
         print(f"loaded {len(ladder)}-rung ladder "
               f"(budgets {list(ladder.budgets)}) from {args.ladder}")
+        validate_rungs(args, len(ladder))
 
     sp, policy = None, SparsityPolicy.dense()
     if ladder is None and args.sparsity > 0:
@@ -282,7 +365,8 @@ def main():
         print("sample:", np.asarray(toks[0])[:16])
         return
 
-    from repro.serving import Engine, EngineConfig, SLOConfig, SpecConfig
+    from repro.serving import (Engine, EngineConfig, SchedulerConfig,
+                               SLOConfig, SpecConfig)
     from repro.serving.metrics import latency_percentiles
     slo = None
     if args.slo_tpot_p95 > 0:
@@ -295,6 +379,10 @@ def main():
                           verifier_rung=args.rung,
                           adaptive=args.spec_adaptive,
                           gamma_max=max(4, args.spec_gamma))
+    scheduler = None
+    if args.max_queue or args.preemption:
+        scheduler = SchedulerConfig(max_queue=args.max_queue,
+                                    preemption=args.preemption)
     ecfg = EngineConfig(
         max_slots=args.max_slots or args.batch,
         max_len=args.max_len or args.prompt_len + args.gen,
@@ -303,18 +391,40 @@ def main():
         prefill_strategy=args.prefill_strategy,
         slo=slo, initial_rung=args.rung, spec=spec,
         prefix_cache=args.prefix_cache,
-        prefix_cache_tokens=args.prefix_cache_tokens)
+        prefix_cache_tokens=args.prefix_cache_tokens,
+        scheduler=scheduler)
     telemetry = None
     if args.trace_out or args.events_out or args.profile_dir:
+        # trace_sink makes Engine.close() (context-manager exit) export
+        # the Chrome trace even when the serving loop raises
         telemetry = obs.Telemetry(
             tracer=obs.SpanTracer() if args.trace_out else None,
             events=obs.EventLog(sink=args.events_out)
             if args.events_out else None,
             annotate_dispatch=args.profile_dir is not None,
             profiler=obs.ProfilerSession(args.profile_dir)
-            if args.profile_dir else None)
+            if args.profile_dir else None,
+            trace_sink=args.trace_out)
     engine = Engine(params, cfg, ecfg, sp, ladder=ladder,
                     telemetry=telemetry)
+
+    if args.gateway:
+        from repro.serving.gateway import Gateway
+        if telemetry is not None and telemetry.profiler is not None:
+            if not telemetry.profiler.start():
+                print("profiler capture unavailable:",
+                      telemetry.profiler.error)
+        gw = Gateway(engine, host=args.gateway_host,
+                     port=args.gateway_port)
+        print(f"gateway starting on http://{args.gateway_host}:"
+              f"{args.gateway_port or '<ephemeral>'} "
+              f"(POST /v1/generate, GET /v1/health, GET /metrics); "
+              f"SIGTERM/Ctrl-C drains")
+        gw.serve_forever()
+        print("gateway drained; engine stats:", engine.stats.summary())
+        _report_telemetry(args, telemetry)
+        return
+
     server = None
     if args.metrics_port:
         server = obs.serve_metrics(engine.metrics_exposition,
@@ -329,24 +439,15 @@ def main():
     for b in range(args.batch):
         engine.submit(np.asarray(prompts[b]), args.gen)
     try:
-        out = run_with_metrics(engine, args.metrics_out,
-                               args.metrics_every, args.metrics_format)
+        # the context manager closes the engine (and flushes every
+        # telemetry sink) even when the loop raises
+        with engine:
+            out = run_with_metrics(engine, args.metrics_out,
+                                   args.metrics_every, args.metrics_format)
     finally:
         if server is not None:
             server.shutdown()
-        if telemetry is not None:
-            if telemetry.tracer is not None:
-                telemetry.tracer.export(args.trace_out)
-                print(f"wrote {len(telemetry.tracer.events)} trace events "
-                      f"to {args.trace_out}")
-            if telemetry.events is not None:
-                print(f"logged {telemetry.events.count} events"
-                      + (f" to {args.events_out}" if args.events_out
-                         else ""))
-            telemetry.close()
-            if telemetry.profiler is not None \
-                    and telemetry.profiler.error is None:
-                print(f"wrote profiler trace to {args.profile_dir}")
+        _report_telemetry(args, telemetry)
     dt = obs.now() - t0
     n = sum(len(t) for t in out.values())
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s on CPU)")
@@ -366,6 +467,21 @@ def main():
     if engine.prefix_cache is not None:
         print("prefix cache:", engine.prefix_cache.snapshot())
     print("sample:", out[0][:16])
+
+
+def _report_telemetry(args, telemetry) -> None:
+    """Say what ``Engine.close()`` flushed (the export itself already
+    happened inside close — this only reports)."""
+    if telemetry is None:
+        return
+    if telemetry.tracer is not None:
+        print(f"wrote {len(telemetry.tracer.events)} trace events "
+              f"to {args.trace_out}")
+    if telemetry.events is not None:
+        print(f"logged {telemetry.events.count} events"
+              + (f" to {args.events_out}" if args.events_out else ""))
+    if telemetry.profiler is not None and telemetry.profiler.error is None:
+        print(f"wrote profiler trace to {args.profile_dir}")
 
 
 def run_with_metrics(engine, metrics_out=None, every: int = 16,

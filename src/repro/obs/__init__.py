@@ -55,6 +55,10 @@ class Telemetry:
     events: Optional[EventLog] = None
     annotate_dispatch: bool = False
     profiler: Optional[ProfilerSession] = None
+    # when set (and a tracer is armed), close() exports the Chrome trace
+    # JSON here — so Engine.close() flushes *every* sink, even when the
+    # driving loop raised
+    trace_sink: Optional[str] = None
 
     @property
     def enabled(self) -> bool:
@@ -81,8 +85,12 @@ class Telemetry:
             profiler=ProfilerSession(profile_dir) if profile_dir else None)
 
     def close(self) -> None:
+        """Flush and close every armed sink.  Idempotent: profiler stop,
+        event-log close and trace re-export all tolerate repeat calls."""
         if self.profiler is not None:
             self.profiler.stop()
+        if self.tracer is not None and self.trace_sink is not None:
+            self.tracer.export(self.trace_sink)
         if self.events is not None:
             self.events.close()
 

@@ -237,7 +237,7 @@ def engine_registry(engine) -> MetricsRegistry:
       "seconds spent in prefill steps")
     c("repro_decode_seconds_total", s.decode_time,
       "seconds spent in decode steps")
-    g("repro_queue_depth", len(engine.scheduler.queue),
+    g("repro_queue_depth", engine.scheduler.queue_depth,
       "requests waiting for a slot")
     g("repro_slot_occupancy", engine.pool.num_occupied, "occupied KV slots")
     g("repro_rung", engine.rung, "active ladder rung (0 = densest)")
@@ -285,6 +285,21 @@ def engine_registry(engine) -> MetricsRegistry:
           "physical tokens held by the prefix cache")
         g("repro_prefix_segments", engine.prefix_cache.num_segments,
           "payload segments in the radix tree")
+    if getattr(engine.ecfg, "scheduler", None) is not None:
+        g("repro_suspended_requests", len(engine.scheduler.suspended),
+          "preempted requests holding KV state on the host")
+        c("repro_preemptions_total", s.preemptions,
+          "decoding requests suspended to admit higher-priority work")
+        c("repro_resumes_total", s.resumes,
+          "suspended requests restored into a slot")
+        c("repro_requests_rejected_total", s.rejected,
+          "submissions refused with queue-full backpressure")
+        c("repro_requests_expired_total", s.expired,
+          "queued requests dropped at their queue-wait deadline")
+        reg.register_histogram("repro_queue_wait_seconds", s.queue_wait_hist,
+                               "seconds queued before admission")
+        reg.register_histogram("repro_preempted_seconds", s.preempted_hist,
+                               "seconds suspended before resume")
     return reg
 
 

@@ -1,11 +1,11 @@
 """Continuous-batching serving engine with WiSparse-aware scheduling.
 
 The engine keeps a fixed slot pool of KV caches (one decode executable for
-the engine's whole lifetime), admits requests FIFO, interleaves chunked
-prefill with batched decode, and drives the paper's §5.1 recipe (dense
-first half of prefill, sparse decode) by deriving a static
-``SparsityPolicy`` per phase (``policy.for_phase(...)``) — an explicit jit
-argument, so concurrent engines never share execution state.
+the engine's whole lifetime), admits requests in priority order,
+interleaves chunked prefill with batched decode, and drives the paper's
+§5.1 recipe (dense first half of prefill, sparse decode) by deriving a
+static ``SparsityPolicy`` per phase (``policy.for_phase(...)``) — an
+explicit jit argument, so concurrent engines never share execution state.
 
 Adaptive serving: hand the engine a calibrated ``PolicyLadder`` and an
 ``SLOConfig`` and the ``AdaptiveController`` turns the sparsity level into
@@ -18,23 +18,39 @@ output tokens, fewer verifier passes per token (``repro.serving.spec``).
 Prefix caching: ``EngineConfig.prefix_cache`` reuses KV across requests
 that share a prompt prefix (system prompts, few-shot templates) via a
 radix tree over token ids (``repro.serving.prefix_cache``) — cache-hit
-generations stay bit-identical to cold prefill."""
+generations stay bit-identical to cold prefill.
+
+Admission control + preemption: ``EngineConfig.scheduler`` (a
+``SchedulerConfig``) arms strict-priority classes (``Priority``) with
+per-tenant weighted fair queuing, a bounded admission queue
+(``QueueFull`` backpressure with a retry estimate), per-request
+queue-wait deadlines, and KV preemption — a strictly less important
+decoding victim is suspended to host memory and later resumed
+bit-identically (``repro.serving.scheduler``, ``SlotKVPool.suspend``).
+
+Gateway: ``repro.serving.gateway.Gateway`` puts an asyncio HTTP/1.1 +
+SSE front door (``/v1/generate``, ``/v1/health``, ``/metrics``) over one
+engine, owning its loop on a background thread with graceful SIGTERM
+drain."""
 from repro.serving.controller import (AdaptiveController, SLOConfig,
                                       SpecController)
 from repro.serving.engine import (SNAPSHOT_SCHEMA_VERSION, Engine,
                                   EngineConfig)
-from repro.serving.kv_pool import SlotKVPool
+from repro.serving.gateway import Gateway
+from repro.serving.kv_pool import SlotKVPool, SuspendedSlot
 from repro.serving.metrics import EngineStats, RingBuffer, percentile
 from repro.serving.prefix_cache import PrefixCache, RadixTree
-from repro.serving.request import FinishReason, Request, RequestState, Status
-from repro.serving.scheduler import Scheduler
+from repro.serving.request import (FinishReason, Priority, Request,
+                                   RequestState, Status)
+from repro.serving.scheduler import QueueFull, Scheduler, SchedulerConfig
 from repro.serving.spec import SpecConfig, SpecDecoder
 from repro.sparsity import PolicyLadder, SparsityPolicy
 
 __all__ = [
-    "Engine", "EngineConfig", "SlotKVPool", "EngineStats", "RingBuffer",
-    "percentile", "Request", "RequestState", "Status", "FinishReason",
-    "Scheduler", "SparsityPolicy", "PolicyLadder", "AdaptiveController",
+    "Engine", "EngineConfig", "SlotKVPool", "SuspendedSlot", "EngineStats",
+    "RingBuffer", "percentile", "Request", "RequestState", "Status",
+    "FinishReason", "Priority", "Scheduler", "SchedulerConfig", "QueueFull",
+    "Gateway", "SparsityPolicy", "PolicyLadder", "AdaptiveController",
     "SLOConfig", "SpecConfig", "SpecDecoder", "SpecController",
     "PrefixCache", "RadixTree", "SNAPSHOT_SCHEMA_VERSION",
 ]

@@ -53,6 +53,14 @@ class SLOConfig:
     dwell         minimum decode steps between rung switches.
     estimate_ttl  decode steps a per-rung TPOT estimate stays trusted
                   when deciding whether a lower rung would hold the SLO.
+    priority_aware  when True, TPOT-driven escalation targets best-effort
+                  traffic first: a latency violation only escalates when
+                  the decoding batch actually contains best-effort
+                  requests (batched decode runs one policy per step, so
+                  rung is the whole batch's quality knob — with an
+                  all-interactive batch the controller holds the rung and
+                  lets priority admission + preemption shed load
+                  instead).  Queue-pressure escalation is unaffected.
     """
 
     tpot_p95: float
@@ -61,6 +69,7 @@ class SLOConfig:
     hysteresis: float = 0.25
     dwell: int = 12
     estimate_ttl: int = 500
+    priority_aware: bool = False
 
     def __post_init__(self):
         if self.tpot_p95 <= 0:
@@ -102,6 +111,10 @@ class AdaptiveController:
         self.transitions: List[Tuple[int, int, int, str]] = \
             []                                # (step, from, to, reason)
         self.last_occupancy = 0               # telemetry (see update())
+        self.held_escalations = 0             # priority_aware: TPOT
+        #                                       violations not acted on
+        #                                       because the batch had no
+        #                                       best-effort traffic
 
     # ------------------------------------------------------------------
     @property
@@ -136,7 +149,8 @@ class AdaptiveController:
 
     # ------------------------------------------------------------------
     def update(self, gaps: Sequence[float], queue_depth: int,
-               occupancy: int = 0) -> int:
+               occupancy: int = 0,
+               best_effort_frac: Optional[float] = None) -> int:
         """One control tick (call after each decode step).
 
         gaps: the step's observed inter-token gaps, seconds (one per
@@ -144,10 +158,16 @@ class AdaptiveController:
         the next step should run.
 
         occupancy is recorded for telemetry (:meth:`snapshot`) but does
-        not actuate: FIFO admission fills free slots before the queue can
+        not actuate: admission fills free slots before the queue can
         grow, so whenever ``queue_depth`` exceeds the threshold the pool
         is already saturated — queue depth subsumes occupancy as the
-        admission-pressure signal."""
+        admission-pressure signal.
+
+        best_effort_frac: fraction of the decoding batch in the
+        best-effort class (only consulted when ``slo.priority_aware``):
+        a TPOT violation with no best-effort traffic holds the rung
+        (counted in ``held_escalations``) so quality degradation lands
+        on best-effort requests before interactive ones."""
         self.last_occupancy = occupancy
         self.step += 1
         self.residency[self.rung] += 1
@@ -160,6 +180,11 @@ class AdaptiveController:
         ewma = self._ewma
         over_tpot = ewma is not None and ewma > slo.tpot_p95
         over_queue = queue_depth > slo.max_queue
+        if (slo.priority_aware and over_tpot and not over_queue
+                and best_effort_frac is not None and best_effort_frac <= 0
+                and self.rung < self.num_rungs - 1):
+            self.held_escalations += 1
+            return self.rung
         if (over_tpot or over_queue) and self.rung < self.num_rungs - 1:
             self._switch(self.rung + 1,
                          "tpot" if over_tpot else "queue")
@@ -180,7 +205,7 @@ class AdaptiveController:
         ``EngineStats.summary()`` reports (see
         ``repro.serving.metrics``)."""
         total = max(1, sum(self.residency))
-        return {
+        snap = {
             "rung": self.rung,
             "tpot_estimator": "ewma",
             "tpot_ewma_s": None if self._ewma is None
@@ -189,6 +214,9 @@ class AdaptiveController:
             "switches": len(self.transitions),
             "rung_residency": [round(r / total, 4) for r in self.residency],
         }
+        if self.slo.priority_aware:
+            snap["held_escalations"] = self.held_escalations
+        return snap
 
 
 class SpecController:

@@ -1,8 +1,8 @@
 """Continuous-batching inference engine.
 
 One engine instance owns: the slot KV pool (fixed shapes, so the batched
-decode step compiles once and never retraces), the FIFO scheduler, and the
-jitted phase steps.  Sparsity is phase-aware per the paper's §5.1 recipe:
+decode step compiles once and never retraces), the priority scheduler, and
+the jitted phase steps.  Sparsity is phase-aware per the paper's §5.1 recipe:
 prefill chunks in the first ``prefill_dense_frac`` of the prompt run dense
 and later chunks plus all decode steps run under the configured
 :class:`SparsityPolicy`.  The policy is a hashable *static* jit argument —
@@ -46,6 +46,21 @@ policies (validated eagerly at construction: dense or per-token
 ``mask`` backends, identical across rungs and prompt lengths), which is
 what makes a cache-hit generation bit-identical to cold prefill.
 
+Admission control + preemption: with ``EngineConfig.scheduler`` the
+engine enforces a bounded admission queue (``submit`` raises
+:class:`repro.serving.scheduler.QueueFull` with a retry estimate — the
+gateway's 429), per-request queue-wait deadlines
+(``FinishReason.EXPIRED``), strict-priority + per-tenant-WFQ admission
+order, and — when ``SchedulerConfig.preemption`` is set — suspension of
+a strictly less important decoding victim to host memory
+(``SlotKVPool.suspend``/``resume``) so an interactive arrival gets its
+slot immediately.  Preemption happens only at the admission boundary,
+where every slot's KV length equals the request's committed position
+(spec rounds commit + roll back entirely inside their step), so a
+resumed request's remaining generation is bit-identical to an
+unpreempted run; the chunk-quantized suspend/resume executables are
+precompiled by :meth:`Engine.warmup`.
+
 Telemetry: ``Engine(..., telemetry=repro.obs.Telemetry(...))`` arms
 per-request span tracing (Chrome trace JSON), the structured event log
 (rung switches with controller reasons, gamma changes, prefix
@@ -72,9 +87,9 @@ from repro.serving.controller import AdaptiveController, SLOConfig
 from repro.serving.kv_pool import SlotKVPool
 from repro.serving.metrics import EngineStats
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.request import (FinishReason, Request, RequestState,
-                                   Status)
-from repro.serving.scheduler import Scheduler
+from repro.serving.request import (FinishReason, Priority, Request,
+                                   RequestState, Status)
+from repro.serving.scheduler import QueueFull, Scheduler, SchedulerConfig
 from repro.serving.spec import SpecConfig, SpecDecoder
 from repro.sparsity import PolicyLadder, SparsityPolicy
 
@@ -90,7 +105,11 @@ _CHUNKABLE_MIXERS = ("attn", "global")
 # to exact whole-run histogram quantiles, tpot_p95_window_s keeps the
 # windowed estimate explicitly, and telemetry_events/telemetry_spans
 # report live sink depths when telemetry is armed.
-SNAPSHOT_SCHEMA_VERSION = 4
+# v5: adds the admission-control/preemption fields (suspended,
+# preemptions, resumes, rejected, expired, queue_wait_p95_s) when an
+# explicit SchedulerConfig is armed; "queue_depth" still counts only
+# queued (unadmitted) requests — suspended requests report separately.
+SNAPSHOT_SCHEMA_VERSION = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +147,9 @@ class EngineConfig:
     spec: Optional[SpecConfig] = None  # self-speculative decoding
     prefix_cache: bool = False       # radix-tree KV prefix reuse
     prefix_cache_tokens: int = 0     # cached-token budget (0 = unbounded)
+    scheduler: Optional[SchedulerConfig] = None  # admission + preemption
+    #                                  policy; None = unbounded FIFO-
+    #                                  equivalent defaults
 
     def __post_init__(self):
         pol = self.policy
@@ -142,6 +164,11 @@ class EngineConfig:
         if self.spec is not None and not isinstance(self.spec, SpecConfig):
             raise TypeError(
                 f"spec must be a SpecConfig, got {type(self.spec)!r}")
+        if self.scheduler is not None and not isinstance(
+                self.scheduler, SchedulerConfig):
+            raise TypeError(
+                f"scheduler must be a SchedulerConfig, "
+                f"got {type(self.scheduler)!r}")
         if self.initial_rung < 0:
             raise ValueError(
                 f"initial_rung must be >= 0, got {self.initial_rung}")
@@ -267,10 +294,19 @@ class Engine:
             slack = max(slack, ecfg.spec.max_gamma + 1)
         self.pool_len = ecfg.max_len + slack
         self.pool = SlotKVPool(cfg, ecfg.max_slots, self.pool_len)
-        self.scheduler = Scheduler()
+        self.scheduler = Scheduler(ecfg.scheduler)
+        self._preemptible = (ecfg.scheduler is not None
+                             and ecfg.scheduler.preemption)
+        if self._preemptible and not self.pool.can_cache_prefix:
+            raise ValueError(
+                "preemption needs full-length self-attention caches: "
+                "suspend/resume snapshots slice the kv_seq axis by "
+                "absolute position (same precondition as the prefix "
+                "cache and rollback)")
         self.stats = EngineStats()
         self.states: Dict[int, RequestState] = {}
         self._next_id = 0
+        self._closed = False
         self._decode_traces = 0      # python-side retrace counter
         self._chunk_traces = 0
         self._warm_traces: Optional[int] = None
@@ -354,7 +390,7 @@ class Engine:
             self.spec_decoder = SpecDecoder(self, ecfg.spec)
 
         if self.controller is not None or self.spec_decoder is not None \
-                or self.prefix_cache is not None:
+                or self.prefix_cache is not None or self._preemptible:
             self.warmup()
 
     # ------------------------------------------------------------------
@@ -455,12 +491,21 @@ class Engine:
         if self.prefix_cache is not None:
             # segment extract/copy executables for every reachable
             # quantized length — the first hit/publish must not stall
-            # live traffic on a compile
+            # live traffic on a compile.  Suspend/resume reuse the same
+            # executables at the same quantized lengths, so this sweep
+            # covers preemption too.
             self.prefix_cache.warm(self.ecfg.max_len - 1)
+        elif self._preemptible:
+            # no prefix cache, but preemption still needs the chunk-
+            # quantized extract/write executables precompiled so a
+            # serving-time suspend/resume never stalls on a trace
+            self.pool.warm_segments(self.ecfg.prefill_chunk,
+                                    self.ecfg.max_len - 1)
         self._warm_traces = (
             self._decode_traces, self._chunk_traces,
             self.spec_decoder._verify_traces
-            if self.spec_decoder is not None else 0)
+            if self.spec_decoder is not None else 0,
+            self.pool._segment_traces)
 
     @property
     def decode_retraces_after_warmup(self) -> Optional[int]:
@@ -480,6 +525,16 @@ class Engine:
         if self._warm_traces is None or self.spec_decoder is None:
             return None
         return self.spec_decoder._verify_traces - self._warm_traces[2]
+
+    @property
+    def segment_retraces_after_warmup(self) -> Optional[int]:
+        """Segment extract/write (re)traces since :meth:`warmup`; None
+        before warmup.  Covers both prefix-cache hits/publishes and
+        preemption suspend/resume — warmup precompiles every
+        chunk-quantized length, so this stays 0 under live traffic."""
+        if self._warm_traces is None:
+            return None
+        return self.pool._segment_traces - self._warm_traces[3]
 
     # ------------------------------------------------------------------
     # telemetry plumbing
@@ -506,17 +561,40 @@ class Engine:
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, eos_id: Optional[int] = None,
                arrival_time: Optional[float] = None,
-               on_token=None) -> RequestState:
+               on_token=None, *, priority: Priority = Priority.STANDARD,
+               tenant: str = "default",
+               queue_deadline_s: Optional[float] = None,
+               on_finish=None) -> RequestState:
+        if self._closed:
+            raise RuntimeError("submit() on a closed engine")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0 or prompt.size >= self.ecfg.max_len:
             raise ValueError(
                 f"prompt length {prompt.size} outside (0, {self.ecfg.max_len})")
+        priority = (Priority.parse(priority) if isinstance(priority, str)
+                    else Priority(priority))
+        if queue_deadline_s is not None and queue_deadline_s <= 0:
+            raise ValueError(
+                f"queue_deadline_s must be positive, got {queue_deadline_s}")
+        if not self.scheduler.can_accept():
+            self.stats.rejected += 1
+            retry = self._retry_after()
+            if self.obs.events is not None:
+                self.obs.events.emit(
+                    "reject", reason="queue_full",
+                    queue_depth=self.scheduler.queue_depth,
+                    retry_after_s=round(retry, 3))
+            raise QueueFull(
+                f"admission queue at capacity "
+                f"({self.scheduler.cfg.max_queue})", retry_after=retry)
         max_new = min(max_new_tokens, self.ecfg.max_len - prompt.size)
         req = Request(self._next_id, prompt, max_new,
                       eos_id if eos_id is not None else self.ecfg.eos_id,
-                      self._now() if arrival_time is None else arrival_time)
+                      self._now() if arrival_time is None else arrival_time,
+                      priority=priority, tenant=tenant,
+                      queue_deadline_s=queue_deadline_s)
         self._next_id += 1
-        rs = RequestState(req, on_token=on_token)
+        rs = RequestState(req, on_token=on_token, on_finish=on_finish)
         self.states[req.request_id] = rs
         self.scheduler.enqueue(rs)
         self.stats.submitted += 1
@@ -525,20 +603,31 @@ class Engine:
             tr.thread_name(req.request_id + 1, f"req {req.request_id}")
             tr.instant("submit", tid=req.request_id + 1,
                        request=req.request_id, prompt_len=req.prompt_len,
-                       max_new_tokens=max_new)
+                       max_new_tokens=max_new, priority=priority.name.lower(),
+                       tenant=tenant)
         return rs
+
+    def _retry_after(self) -> float:
+        """Polite-client 429 hint: roughly how long until queued work
+        ahead drains — queued requests × observed mean tokens-per-request
+        × mean inter-token gap, floored at 1s (and at 1s before any
+        traffic has calibrated the means)."""
+        s = self.stats
+        tokens_per_req = s.decode_tokens / s.finished if s.finished else 0.0
+        gap = s.tpot_s.mean if s.tpot_s.count else 0.0
+        return max(1.0, self.scheduler.queue_depth * tokens_per_req * gap)
 
     # ------------------------------------------------------------------
     # stepping
     # ------------------------------------------------------------------
     def step(self) -> str:
-        """Admit, then run one scheduler-chosen phase step."""
-        self.scheduler.admit(self.pool, self.prefix_cache,
-                             tracer=self.obs.tracer)
-        self.stats.sample(len(self.scheduler.queue), self.pool.num_occupied)
+        """Admit (expiring, resuming and preempting as the scheduler
+        config allows), then run one scheduler-chosen phase step."""
+        self._admit()
+        self.stats.sample(self.scheduler.queue_depth, self.pool.num_occupied)
         if self.obs.tracer is not None:
             self.obs.tracer.counter(
-                "engine_load", queue_depth=len(self.scheduler.queue),
+                "engine_load", queue_depth=self.scheduler.queue_depth,
                 occupancy=self.pool.num_occupied)
         action = self.scheduler.next_action()
         if action == "prefill":
@@ -558,6 +647,135 @@ class Engine:
         while self.scheduler.has_work():
             self.step()
         return {rid: rs.tokens for rid, rs in self.states.items()}
+
+    # ------------------------------------------------------------------
+    # admission, preemption, resume
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        """One admission pass: expire deadline-missed queued requests,
+        then fill free slots — resuming suspended requests and admitting
+        queued ones in priority order, suspending a strictly less
+        important decoding victim when preemption is armed and the pool
+        is full.  Runs before every phase step, i.e. always at a
+        committed KV boundary (see the module docstring)."""
+        sched = self.scheduler
+        now = self._now()
+        for rs in sched.expire(now):
+            self._expire(rs, now)
+        while True:
+            rs_s = sched.peek_resume()
+            head_p = sched.head_priority()
+            if rs_s is None and head_p is None:
+                return
+            # a suspended request outranks a queued one of the same
+            # class: it arrived earlier and already holds partial work
+            take_suspended = rs_s is not None and (
+                head_p is None or rs_s.request.priority <= head_p)
+            target_p = rs_s.request.priority if take_suspended else head_p
+            if self.pool.num_free == 0:
+                victim = (sched.pick_victim(target_p)
+                          if self._preemptible else None)
+                if victim is None:
+                    return
+                self._preempt(victim)
+            if take_suspended:
+                self._resume(sched.pop_resume())
+            else:
+                self._admit_queued(sched.pop_admit(), now)
+
+    def _expire(self, rs: RequestState, now: float) -> None:
+        req = rs.request
+        rs.finish_reason = FinishReason.EXPIRED
+        rs.finish_time = now
+        rs.status = Status.FINISHED
+        self.stats.expired += 1
+        waited = now - req.arrival_time
+        if self.obs.events is not None:
+            self.obs.events.emit(
+                "reject", reason="deadline", request=req.request_id,
+                waited_s=round(waited, 4),
+                deadline_s=req.queue_deadline_s)
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant(
+                "expire", tid=req.request_id + 1, waited_s=waited)
+        rs.finished()
+
+    def _admit_queued(self, rs: RequestState, now: float) -> None:
+        rs.slot = self.pool.alloc()
+        if self.prefix_cache is not None:
+            self.prefix_cache.admit(rs)     # hit: cursor jumps past the
+        rs.status = Status.PREFILL          # cached prefix
+        self.scheduler.prefilling.append(rs)
+        self.stats.observe_queue_wait(max(0.0, now - rs.request.arrival_time))
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant(
+                "admit", tid=rs.request.request_id + 1, slot=rs.slot,
+                cached_prefix=rs.next_offset,
+                priority=rs.request.priority.name.lower())
+
+    def _preempt(self, victim: RequestState) -> None:
+        """Suspend a decoding victim: snapshot its KV state to host
+        memory at a chunk-quantized length (warmup-precompiled — no
+        trace) and free the slot.  Admission-boundary only: the slot's
+        KV length equals the victim's committed position, which is what
+        makes the later resume bit-identical."""
+        t = self._now()
+        req = victim.request
+        slot = victim.slot
+        seg = self.pool.suspend(slot, self.ecfg.prefill_chunk)
+        if seg.length != victim.position:
+            raise RuntimeError(
+                f"preempt: slot {slot} KV length {seg.length} != request "
+                f"{req.request_id} position {victim.position}; suspension "
+                "must happen at a committed boundary")
+        self.scheduler.suspend(victim)      # pops decoding via the slot
+        self.pool.free(slot)
+        victim.suspended = seg
+        victim.suspend_time = t
+        victim.preemptions += 1
+        victim.slot = -1
+        self.stats.preemptions += 1
+        if self.obs.events is not None:
+            self.obs.events.emit(
+                "preempt", t=t, request=req.request_id, slot=slot,
+                kv_length=seg.length, kv_phys=seg.phys,
+                priority=req.priority.name.lower(),
+                tokens_done=len(victim.tokens))
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant(
+                "preempt", t=t, tid=req.request_id + 1, slot=slot,
+                kv_length=seg.length)
+
+    def _resume(self, rs: RequestState) -> None:
+        """Restore a suspended request into a freshly allocated slot:
+        write the host-side segment back (same precompiled executable
+        set) and rejoin the decoding set at the exact committed
+        position — generation continues bit-identically."""
+        t = self._now()
+        req = rs.request
+        slot = self.pool.alloc()
+        self.pool.resume(rs.suspended, slot)
+        kv_length = rs.suspended.length
+        rs.suspended = None
+        rs.slot = slot
+        rs.status = Status.DECODE
+        self.scheduler.decoding[slot] = rs
+        self.stats.resumes += 1
+        suspended_s = None
+        if rs.suspend_time is not None:
+            suspended_s = t - rs.suspend_time
+            self.stats.observe_preempted(suspended_s)
+            rs.suspend_time = None
+        if self.obs.events is not None:
+            self.obs.events.emit(
+                "resume", t=t, request=req.request_id, slot=slot,
+                kv_length=kv_length,
+                suspended_s=None if suspended_s is None
+                else round(suspended_s, 4))
+        if self.obs.tracer is not None:
+            self.obs.tracer.instant(
+                "resume", t=t, tid=req.request_id + 1, slot=slot,
+                kv_length=kv_length)
 
     # ------------------------------------------------------------------
     # phases
@@ -695,9 +913,16 @@ class Engine:
             self.pool.commit(slot, 1)
             self._maybe_finish(rs, tok)
         if self.controller is not None:
+            be_frac = None
+            if self.controller.slo.priority_aware:
+                be_frac = (sum(
+                    1 for rs in decoding.values()
+                    if rs.request.priority == Priority.BEST_EFFORT
+                ) / len(decoding)) if decoding else 0.0
             new_rung = self.controller.update(
-                gaps, queue_depth=len(self.scheduler.queue),
-                occupancy=self.pool.num_occupied)
+                gaps, queue_depth=self.scheduler.queue_depth,
+                occupancy=self.pool.num_occupied,
+                best_effort_frac=be_frac)
             if new_rung != self._rung:
                 old = self._rung
                 self.set_rung(new_rung)
@@ -709,7 +934,7 @@ class Engine:
                         "rung_switch", t=t1, from_rung=old,
                         to_rung=new_rung, reason=reason,
                         controller_step=self.controller.step,
-                        queue_depth=len(self.scheduler.queue))
+                        queue_depth=self.scheduler.queue_depth)
                 if self.obs.tracer is not None:
                     self.obs.tracer.instant(
                         "rung_switch", t=t1, from_rung=old,
@@ -733,6 +958,7 @@ class Engine:
         self.scheduler.finish(rs)
         self.pool.free(rs.slot)
         self.stats.finished += 1
+        rs.finished()
 
     # ------------------------------------------------------------------
     def snapshot(self) -> dict:
@@ -744,7 +970,7 @@ class Engine:
         out = {
             "schema_version": SNAPSHOT_SCHEMA_VERSION,
             "t": self._now(),
-            "queue_depth": len(self.scheduler.queue),
+            "queue_depth": self.scheduler.queue_depth,
             "occupancy": self.pool.num_occupied,
             "submitted": s.submitted,
             "finished": s.finished,
@@ -771,12 +997,55 @@ class Engine:
                 s.spec_accepted_tokens / max(1, s.spec_draft_tokens), 4)
         if self.prefix_cache is not None:
             out.update(self.prefix_cache.snapshot())
+        if self.ecfg.scheduler is not None:
+            out["suspended"] = len(self.scheduler.suspended)
+            out["preemptions"] = s.preemptions
+            out["resumes"] = s.resumes
+            out["rejected"] = s.rejected
+            out["expired"] = s.expired
+            out["queue_wait_p95_s"] = None if not s.queue_wait_hist \
+                else round(s.queue_wait_hist.quantile(95), 6)
         if self.obs.enabled:
             if self.obs.events is not None:
                 out["telemetry_events"] = self.obs.events.count
             if self.obs.tracer is not None:
                 out["telemetry_spans"] = len(self.obs.tracer.events)
         return out
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def reset_ids(self) -> None:
+        """Restart this engine's request-id namespace at 0 and drop
+        finished request states.  Benchmark reps reuse warm engines while
+        replaying the same trace, and parity checks key on request id —
+        resetting per rep keeps ids aligned across engines and reps.
+        Only valid on an idle engine (no queued, in-flight or suspended
+        requests)."""
+        if self.scheduler.has_work() or self.pool.num_occupied:
+            raise RuntimeError(
+                "reset_ids() on a busy engine would orphan live requests")
+        self._next_id = 0
+        self.states = {}
+
+    def close(self) -> None:
+        """Flush and close the engine's telemetry sinks (event log,
+        trace export, profiler session) so artifacts are never
+        truncated.  Idempotent; further ``submit`` calls raise, but
+        existing state stays readable.  Prefer the context-manager form
+        (``with Engine(...) as eng:``) so sinks close even when the
+        driving loop raises."""
+        if self._closed:
+            return
+        self._closed = True
+        self.obs.close()
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -33,10 +33,25 @@ segment back into a slot at offset 0 (one donated
 ``dynamic_update_slice`` per admission).  Segments are never mutated —
 a slot that received one only ever appends *past* the copied prefix —
 so one cached prefix can seed any number of slots.
+
+Preemption generalizes the same two primitives into whole-slot
+``suspend``/``resume``: ``suspend`` extracts the slot's live prefix at a
+chunk-quantized physical length and moves it to *host* memory (freeing
+device residency with the slot), and ``resume`` writes it back into any
+slot and restores the exact live length.  Because suspend/resume lengths
+are quantized to the same chunk multiples the prefix cache uses, they
+hit the same per-shape executables — ``warm_segments`` (or
+``PrefixCache.warm``) precompiles every one, so serving-time preemption
+never traces.  The quantized tail past the live length is garbage by
+construction (whatever the victim's last forward left there) but is
+never attendable: decode masks positions ``>= length`` and any later
+prefill overwrites them — the same argument that makes prefix-segment
+admission safe.
 """
 from __future__ import annotations
 
-from typing import List, Set
+import dataclasses
+from typing import Any, List, Set
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +66,20 @@ def _axes_leaf(x) -> bool:
     """A logical-axes tuple: all elements are axis names or None."""
     return (isinstance(x, tuple)
             and all(e is None or isinstance(e, str) for e in x))
+
+
+@dataclasses.dataclass(frozen=True)
+class SuspendedSlot:
+    """Host-side snapshot of a preempted slot's KV state.
+
+    ``caches`` is a segment pytree (leaf batch dims = 1, time dim =
+    ``phys``) living in host memory; ``length`` is the exact live length
+    at suspension; ``phys`` is the chunk-quantized physical extent that
+    was copied (``length`` rounded up to a multiple of the suspend
+    quantum, the shape ``resume`` writes back)."""
+    caches: Any
+    length: int
+    phys: int
 
 
 class SlotKVPool:
@@ -278,3 +307,58 @@ class SlotKVPool:
                 f"write_prefix: segment time dims {sorted(seg_t)} do not "
                 f"fit this pool's (0, {self.max_len}] positions")
         self.caches = self._write_jit(self.caches, seg, jnp.int32(slot))
+
+    # ---- whole-slot suspend/resume (preemption) --------------------------
+    def suspend(self, slot: int, quantum: int) -> SuspendedSlot:
+        """Snapshot ``slot``'s live KV state to host memory so the slot
+        can be freed and the request resumed later bit-identically.
+
+        The copy length is the slot's live length rounded up to a
+        multiple of ``quantum`` (the engine's prefill chunk) — the same
+        quantization the prefix cache uses, so this reuses the
+        warmup-precompiled ``extract_prefix`` executables rather than
+        introducing one shape (and one trace) per live length.  The
+        caller frees the slot afterwards; this method only reads."""
+        self._check_allocated(slot, "suspend")
+        if quantum <= 0:
+            raise ValueError(f"suspend: quantum {quantum} must be positive")
+        length = int(self.lengths[slot])
+        if length <= 0:
+            raise ValueError(
+                f"suspend: slot {slot} has no committed positions")
+        phys = min(-(-length // quantum) * quantum, self.max_len)
+        seg = self._extract_jit(self.caches, jnp.int32(slot), phys)
+        return SuspendedSlot(caches=jax.device_get(seg), length=length,
+                             phys=phys)
+
+    def resume(self, seg: SuspendedSlot, slot: int) -> None:
+        """Restore a suspended request's KV state into (freshly
+        allocated) ``slot`` and reinstate its exact live length.  The
+        whole physical segment is written back — same executable set as
+        ``write_prefix`` at the same quantized shape — and positions in
+        ``[length, phys)`` are unattendable garbage exactly as they were
+        at suspension time, so the restored slot is bit-identical to the
+        pre-preemption one over every attendable position."""
+        if not isinstance(seg, SuspendedSlot):
+            raise TypeError(
+                f"resume: expected a SuspendedSlot, got {type(seg).__name__}")
+        self.write_prefix(seg.caches, slot)
+        self.lengths[slot] = seg.length
+
+    def warm_segments(self, quantum: int, max_length: int) -> None:
+        """Precompile every chunk-quantized extract/write executable up
+        to ``max_length`` so serving-time suspend/resume (and prefix
+        hits) never trace.  Mirrors ``PrefixCache.warm`` for engines
+        that arm preemption without a prefix cache; borrows a free slot
+        and restores the pool state exactly."""
+        if quantum <= 0:
+            raise ValueError(
+                f"warm_segments: quantum {quantum} must be positive")
+        slot = self.alloc()
+        try:
+            phys_max = min(-(-max_length // quantum) * quantum, self.max_len)
+            for length in range(quantum, phys_max + 1, quantum):
+                seg = self.extract_prefix(slot, length)
+                self.write_prefix(seg, slot)
+        finally:
+            self.free(slot)

@@ -154,6 +154,17 @@ class EngineStats:
     prefix_evicted_segments: int = 0         # segments dropped by LRU
     # matched prefix length per hit (the reuse-depth series)
     prefix_hit_len: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    # --- admission control + preemption ----------------------------------
+    preemptions: int = 0                     # decoding requests suspended
+    resumes: int = 0                         # suspended requests restored
+    rejected: int = 0                        # submissions refused (queue full)
+    expired: int = 0                         # queue-wait deadline passed
+    # seconds a request spent queued before admission / suspended before
+    # resume (ring window + exact whole-run histogram, like TPOT)
+    queue_wait_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    queue_wait_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    preempted_s: RingBuffer = dataclasses.field(default_factory=RingBuffer)
+    preempted_hist: Histogram = dataclasses.field(default_factory=Histogram)
 
     def sample(self, queue_depth: int, occupied_slots: int) -> None:
         self.queue_depth.append(queue_depth)
@@ -186,6 +197,14 @@ class EngineStats:
     def observe_spec_accepted(self, n: int) -> None:
         self.spec_accepted_per_verify.append(n)
         self.spec_accepted_hist.observe(n)
+
+    def observe_queue_wait(self, v: float) -> None:
+        self.queue_wait_s.append(v)
+        self.queue_wait_hist.observe(v)
+
+    def observe_preempted(self, v: float) -> None:
+        self.preempted_s.append(v)
+        self.preempted_hist.observe(v)
 
     @property
     def decode_tps(self) -> float:
@@ -253,6 +272,20 @@ class EngineStats:
             out["prefix_tokens_saved"] = self.prefix_tokens_saved
             if self.prefix_hit_len:
                 out["prefix_hit_len_p50"] = percentile(self.prefix_hit_len, 50)
+        if self.queue_wait_hist:
+            out["queue_wait_p50_s"] = round(self.queue_wait_hist.quantile(50), 5)
+            out["queue_wait_p95_s"] = round(self.queue_wait_hist.quantile(95), 5)
+        if self.rejected or self.expired:
+            out["rejected"] = self.rejected
+            out["expired"] = self.expired
+        if self.preemptions:
+            out["preemptions"] = self.preemptions
+            out["resumes"] = self.resumes
+            if self.preempted_hist:
+                out["preempted_p50_s"] = round(
+                    self.preempted_hist.quantile(50), 5)
+                out["preempted_p95_s"] = round(
+                    self.preempted_hist.quantile(95), 5)
         return out
 
 

@@ -289,9 +289,9 @@ def test_telemetry_parity_and_artifacts(model, tmp_path):
                for e in doc["traceEvents"])
     tel.close()
 
-    # snapshot v4 fields
+    # snapshot v4+ fields (v5 added the admission/preemption block)
     snap = e1.snapshot()
-    assert snap["schema_version"] == 4
+    assert snap["schema_version"] == 5
     assert snap["telemetry_spans"] == len(tel.tracer.events)
     assert snap["tpot_p95_s"] >= snap["tpot_p50_s"]
     assert "tpot_p95_window_s" in snap

@@ -1,0 +1,371 @@
+"""Priority scheduling + KV preemption: scheduler admission order, WFQ,
+bounded-queue backpressure, deadline expiry, suspend/resume bit-identity
+(pinned rung / ladder / spec decoding), segment dtype round-trips, and
+the priority-aware controller."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data import DataConfig, SyntheticLM
+from repro.models import api
+from repro.serving import (Engine, EngineConfig, Priority, QueueFull,
+                           Scheduler, SchedulerConfig, SlotKVPool, Status)
+from repro.serving.controller import AdaptiveController, SLOConfig
+from repro.serving.request import Request, RequestState
+from repro.serving.spec import SpecConfig
+from repro.sparsity import PolicyLadder
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(get_config("llama31_8b"))
+    params = api.init_model(cfg, 0)
+    return params, cfg
+
+
+def _prompts(cfg, n, seq, step=0):
+    return np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, seq, n)).batch(step))
+
+
+def _rs(rid, priority=Priority.STANDARD, tenant="default", prompt_len=8,
+        max_new=8, arrival=0.0, deadline=None):
+    return RequestState(Request(
+        request_id=rid, prompt=np.zeros(prompt_len, np.int32),
+        max_new_tokens=max_new, arrival_time=arrival, priority=priority,
+        tenant=tenant, queue_deadline_s=deadline))
+
+
+# ---------------------------------------------------------------------------
+# scheduler unit tests (no model)
+# ---------------------------------------------------------------------------
+
+def test_strict_priority_across_classes():
+    """Admission drains classes strictly: every interactive request
+    before any standard one, standard before best-effort — regardless of
+    enqueue order."""
+    s = Scheduler()
+    order = [Priority.BEST_EFFORT, Priority.INTERACTIVE, Priority.STANDARD,
+             Priority.INTERACTIVE, Priority.BEST_EFFORT]
+    for i, p in enumerate(order):
+        s.enqueue(_rs(i, p))
+    popped = [s.pop_admit().request.priority for _ in range(len(order))]
+    assert popped == sorted(order)
+
+
+def test_default_config_is_fifo():
+    """Single class, single tenant: exactly the old FIFO order."""
+    s = Scheduler()
+    for i in range(5):
+        s.enqueue(_rs(i))
+    assert [s.pop_admit().request.request_id for _ in range(5)] \
+        == [0, 1, 2, 3, 4]
+
+
+def test_wfq_weights_share_admissions():
+    """Within a class, a weight-2 tenant is served ~2x as often as a
+    weight-1 tenant under contention (virtual-start-time fair queuing
+    with cost = request tokens / weight)."""
+    cfg = SchedulerConfig(tenant_weights=(("heavy", 2.0), ("light", 1.0)))
+    s = Scheduler(cfg)
+    rid = 0
+    for _ in range(8):
+        for tenant in ("heavy", "light"):
+            s.enqueue(_rs(rid, tenant=tenant))
+            rid += 1
+    first6 = [s.pop_admit().request.tenant for _ in range(6)]
+    assert first6.count("heavy") == 4 and first6.count("light") == 2
+
+
+def test_bounded_queue_raises_queue_full():
+    s = Scheduler(SchedulerConfig(max_queue=2))
+    s.enqueue(_rs(0))
+    s.enqueue(_rs(1))
+    assert not s.can_accept()
+    with pytest.raises(QueueFull):
+        s.enqueue(_rs(2))
+    s.pop_admit()
+    assert s.can_accept()
+
+
+def test_expire_sweeps_overdue_requests():
+    s = Scheduler()
+    s.enqueue(_rs(0, arrival=0.0, deadline=1.0))
+    s.enqueue(_rs(1, arrival=0.0, deadline=10.0))
+    s.enqueue(_rs(2, arrival=5.0, deadline=1.0))
+    expired = s.expire(now=4.0)
+    assert {rs.request.request_id for rs in expired} == {0}
+    assert s.queue_depth == 2
+
+
+def test_pick_victim_least_important_youngest():
+    """The victim is the least important decoding request, youngest
+    first within a class — and never one at (or above) the arrival's
+    own class."""
+    s = Scheduler(SchedulerConfig(preemption=True))
+    for rid, (p, t) in enumerate([(Priority.STANDARD, 0.0),
+                                  (Priority.BEST_EFFORT, 1.0),
+                                  (Priority.BEST_EFFORT, 2.0)]):
+        rs = _rs(rid, p, arrival=t)
+        rs.slot = rid
+        rs.status = Status.DECODE
+        s.decoding[rid] = rs
+    v = s.pick_victim(Priority.INTERACTIVE)
+    assert v.request.request_id == 2          # best-effort, youngest
+    assert s.pick_victim(Priority.BEST_EFFORT) is None   # no lower class
+    s.suspend(v)
+    assert v.status is Status.SUSPENDED
+    assert s.pick_victim(Priority.INTERACTIVE).request.request_id == 1
+
+
+def test_resume_outranks_by_class_then_suspend_order():
+    s = Scheduler(SchedulerConfig(preemption=True))
+    for rid, p in enumerate([Priority.BEST_EFFORT, Priority.STANDARD,
+                             Priority.BEST_EFFORT]):
+        rs = _rs(rid, p)
+        rs.slot = rid
+        rs.status = Status.DECODE
+        s.decoding[rid] = rs
+        s.suspend(rs)
+    assert s.pop_resume().request.request_id == 1   # standard first
+    assert s.pop_resume().request.request_id == 0   # then suspend order
+    assert s.pop_resume().request.request_id == 2
+
+
+# ---------------------------------------------------------------------------
+# preempt -> resume bit-identity (the tentpole guarantee)
+# ---------------------------------------------------------------------------
+
+def _reference(params, cfg, prompts, gens, ladder=None, spec=None,
+               initial_rung=0):
+    """Uncontended run: every request gets a slot, nothing preempts."""
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=len(prompts), max_len=32, prefill_chunk=8,
+        initial_rung=initial_rung, spec=spec), None, ladder=ladder)
+    for b, g in enumerate(gens):
+        eng.submit(prompts[b], g)
+    return eng.run()
+
+
+def _preempted(params, cfg, prompts, gens, ladder=None, spec=None,
+               initial_rung=0):
+    """Contended run on a 2-slot pool: two best-effort requests fill the
+    pool, then an interactive arrival forces a preemption.  Returns
+    (tokens-by-id, engine)."""
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=2, max_len=32, prefill_chunk=8,
+        initial_rung=initial_rung, spec=spec,
+        scheduler=SchedulerConfig(preemption=True)), None, ladder=ladder)
+    eng.submit(prompts[0], gens[0], priority="best-effort", tenant="batch")
+    eng.submit(prompts[1], gens[1], priority="best-effort", tenant="batch")
+    # run until both victims are decoding with tokens in flight, so the
+    # suspension happens mid-generation, not at a boundary
+    for _ in range(64):
+        eng.step()
+        if (len(eng.scheduler.decoding) == 2
+                and all(len(rs.tokens) >= 2
+                        for rs in eng.scheduler.decoding.values())):
+            break
+    else:
+        pytest.fail("bulk requests never reached steady decode")
+    eng.submit(prompts[2], gens[2], priority=Priority.INTERACTIVE,
+               tenant="chat")
+    out = eng.run()
+    assert eng.stats.preemptions >= 1, "no preemption on a full pool"
+    assert eng.stats.resumes == eng.stats.preemptions
+    return out, eng
+
+
+def _assert_preempt_parity(params, cfg, **kw):
+    prompts = _prompts(cfg, 3, 12, step=5)
+    # bulk generations long enough that both victims are still decoding
+    # when the interactive arrival lands, even under multi-token spec
+    # steps (12 prompt + 16 gen fits max_len 32)
+    gens = [16, 16, 4]
+    ref = _reference(params, cfg, prompts, gens, **kw)
+    out, eng = _preempted(params, cfg, prompts, gens, **kw)
+    for rid in range(3):
+        assert out[rid] == ref[rid], \
+            f"request {rid} diverged after preemption"
+    preempted = [rs for rs in eng.states.values() if rs.preemptions > 0]
+    assert preempted, "no request records a preemption"
+    assert eng.decode_retraces_after_warmup == 0
+    assert eng.segment_retraces_after_warmup == 0
+
+
+def test_preempt_resume_bit_identity_pinned(model):
+    """Dense fixed-policy engine: a preempted-then-resumed request
+    finishes with exactly the tokens of its uncontended run."""
+    params, cfg = model
+    _assert_preempt_parity(params, cfg)
+
+
+def test_preempt_resume_bit_identity_ladder(model):
+    """Same guarantee pinned at a sparse rung of a ladder.  The mask
+    backend is per-token deterministic, so changed batch composition
+    after the preemption cannot excuse a diff."""
+    params, cfg = model
+    ladder = PolicyLadder.uniform(params, cfg, (0.0, 0.5), backend="mask")
+    _assert_preempt_parity(params, cfg, ladder=ladder, initial_rung=1)
+
+
+def test_preempt_resume_bit_identity_spec(model):
+    """Same guarantee under speculative decoding: the dense verifier
+    pins the output tokens no matter how suspension perturbs the
+    drafter's accept pattern."""
+    params, cfg = model
+    ladder = PolicyLadder.uniform(params, cfg, (0.0, 0.5))
+    _assert_preempt_parity(params, cfg, ladder=ladder,
+                           spec=SpecConfig(gamma=2, drafter_rung=1))
+
+
+def test_suspend_at_uncommitted_boundary_rejected(model):
+    """_preempt refuses to suspend a slot whose pool length disagrees
+    with the request's committed position — the corruption guard."""
+    params, cfg = model
+    prompts = _prompts(cfg, 2, 12)
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=1, max_len=32, prefill_chunk=8,
+        scheduler=SchedulerConfig(preemption=True)), None)
+    eng.submit(prompts[0], 6, priority="best-effort")
+    for _ in range(32):
+        eng.step()
+        if eng.scheduler.decoding:
+            break
+    victim = next(iter(eng.scheduler.decoding.values()))
+    eng.pool.lengths[victim.slot] += 1        # simulate a torn commit
+    with pytest.raises(RuntimeError, match="committed boundary"):
+        eng._preempt(victim)
+
+
+# ---------------------------------------------------------------------------
+# segment dtype preservation (suspend/resume and prefix share the path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float32"])
+def test_suspend_resume_roundtrip_bit_exact(dtype):
+    """suspend() -> resume() restores the live prefix bit-exactly and
+    preserves every leaf's dtype, bf16 and fp32."""
+    cfg = dataclasses.replace(reduced(get_config("llama31_8b")),
+                              dtype=dtype)
+    pool = SlotKVPool(cfg, max_slots=2, max_len=16)
+    rng = np.random.default_rng(0)
+    pool.caches = jax.tree_util.tree_map(
+        lambda leaf: jnp.asarray(
+            rng.standard_normal(leaf.shape), leaf.dtype), pool.caches)
+    src = pool.alloc()
+    pool.lengths[src] = 11                    # not a quantum multiple
+    seg = pool.suspend(src, quantum=4)
+    assert seg.length == 11 and seg.phys == 12
+    for leaf in jax.tree_util.tree_leaves(seg.caches):
+        assert leaf.dtype == jnp.dtype(dtype)
+
+    before = jax.tree_util.tree_map(np.asarray, pool.caches)
+    dst = pool.alloc()
+    pool.resume(seg, dst)
+    assert pool.lengths[dst] == 11
+    after = jax.tree_util.tree_map(np.asarray, pool.caches)
+    for b, a, axes in zip(jax.tree_util.tree_leaves(before),
+                          jax.tree_util.tree_leaves(after),
+                          pool._flat_axes):
+        bdim, tdim = axes.index("batch"), axes.index("kv_seq")
+        got = np.take(np.take(a, dst, bdim), range(12), tdim - 1)
+        want = np.take(np.take(b, src, bdim), range(12), tdim - 1)
+        assert got.dtype == want.dtype == np.asarray(
+            jnp.zeros((), jnp.dtype(cfg.dtype))).dtype
+        assert np.array_equal(got, want), "segment round-trip not bit-exact"
+
+
+def test_mixed_dtype_leaves_roundtrip():
+    """A cache tree with both bf16 and fp32 leaves round-trips through
+    extract_prefix/write_prefix with every leaf's dtype intact."""
+    cfg = reduced(get_config("llama31_8b"))
+    pool = SlotKVPool(cfg, max_slots=2, max_len=16)
+    rng = np.random.default_rng(1)
+    flip = [False]
+
+    def fill(leaf):
+        flip[0] = not flip[0]
+        dt = jnp.bfloat16 if flip[0] else jnp.float32
+        return jnp.asarray(rng.standard_normal(leaf.shape), dt)
+
+    pool.caches = jax.tree_util.tree_map(fill, pool.caches)
+    dtypes = [leaf.dtype
+              for leaf in jax.tree_util.tree_leaves(pool.caches)]
+    assert len(set(dtypes)) == 2              # genuinely mixed
+    src = pool.alloc()
+    pool.lengths[src] = 8
+    seg = pool.suspend(src, quantum=8)
+    seg_dtypes = [leaf.dtype
+                  for leaf in jax.tree_util.tree_leaves(seg.caches)]
+    assert seg_dtypes == dtypes
+    dst = pool.alloc()
+    pool.resume(seg, dst)
+    for leaf, axes, dt in zip(
+            jax.tree_util.tree_leaves(pool.caches), pool._flat_axes,
+            dtypes):
+        assert leaf.dtype == dt
+        bdim, tdim = axes.index("batch"), axes.index("kv_seq")
+        got = np.take(np.take(np.asarray(leaf), dst, bdim),
+                      range(8), tdim - 1)
+        want = np.take(np.take(np.asarray(leaf), src, bdim),
+                       range(8), tdim - 1)
+        assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# engine-level admission control
+# ---------------------------------------------------------------------------
+
+def test_engine_queue_full_and_deadline(model):
+    """A full admission queue raises QueueFull with a retry estimate;
+    a queued request whose deadline passes finishes EXPIRED without
+    touching a slot."""
+    params, cfg = model
+    prompts = _prompts(cfg, 4, 8)
+    eng = Engine(params, cfg, EngineConfig(
+        max_slots=1, max_len=24, prefill_chunk=8,
+        scheduler=SchedulerConfig(max_queue=1)), None)
+    eng.submit(prompts[0], 4)
+    eng.step()                                # admit into the only slot
+    eng.submit(prompts[1], 4)                 # fills the queue
+    with pytest.raises(QueueFull) as exc:
+        eng.submit(prompts[2], 4)
+    assert exc.value.retry_after >= 1.0
+    assert eng.stats.rejected == 1
+
+    while eng.scheduler.queue_depth:          # drain until there's room
+        eng.step()
+    expired = eng.submit(prompts[3], 4, queue_deadline_s=1e-9,
+                         priority="best-effort")
+    out = eng.run()
+    assert expired.finish_reason is not None
+    assert expired.finish_reason.value == "expired"
+    assert expired.tokens == []
+    assert eng.stats.expired == 1
+    assert out[0] is not None and len(out[1]) == 4
+
+
+def test_controller_priority_aware_holds_escalation():
+    """priority_aware: a TPOT violation with no best-effort traffic in
+    the decode batch holds the rung (counted), but escalates as soon as
+    best-effort requests are present or the queue backs up."""
+    slo = SLOConfig(tpot_p95=0.01, max_queue=4, dwell=1,
+                    priority_aware=True)
+    ctl = AdaptiveController(num_rungs=3, slo=slo)
+    over = [0.05] * 4                         # way over target
+    rung = ctl.update(over, queue_depth=0, best_effort_frac=0.0)
+    assert rung == 0 and ctl.held_escalations == 1
+    rung = ctl.update(over, queue_depth=0, best_effort_frac=0.5)
+    assert rung == 1                          # best-effort present: act
+    rung = ctl.update(over, queue_depth=10, best_effort_frac=0.0)
+    assert rung == 2                          # queue pressure still acts
+    assert ctl.snapshot()["held_escalations"] == 1
+
+    plain = AdaptiveController(
+        num_rungs=3, slo=SLOConfig(tpot_p95=0.01, dwell=1))
+    assert plain.update(over, queue_depth=0) == 1   # default: escalate
