@@ -3,10 +3,20 @@ benchmark, whose default run covers the Poisson scenario sweep *and* the
 SLO-aware adaptive-controller sweep).
 Prints ``name,us_per_call,derived`` CSV rows (stdout) per the repo contract.
 
+With ``--artifact-dir`` each benchmark additionally writes a standardized
+``BENCH_<name>.json`` artifact there — commit, timestamp (from the
+environment: ``SOURCE_DATE_EPOCH`` / ``GITHUB_RUN_ID``, never the wall
+clock, so artifacts are reproducible), pass/fail status and every result
+row — for CI to upload and for cross-run regression diffing.
+
     PYTHONPATH=src python -m benchmarks.run --all
     PYTHONPATH=src python -m benchmarks.run [--only table2]
+    PYTHONPATH=src python -m benchmarks.run --all --artifact-dir bench-out
 """
 import argparse
+import json
+import os
+import subprocess
 import sys
 import traceback
 
@@ -21,12 +31,55 @@ MODULES = [
 ]
 
 
+def _commit():
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, check=True,
+                             cwd=os.path.dirname(os.path.dirname(
+                                 os.path.abspath(__file__))))
+        return out.stdout.strip()
+    except Exception:
+        return None
+
+
+def write_artifact(directory, mod_name, rows, status, error=None):
+    """Write ``BENCH_<name>.json`` for one benchmark module; returns the
+    path.  ``rows`` are the module's (name, us_per_call, derived) result
+    rows — gate outcomes ride in the ``derived`` strings."""
+    short = mod_name.rsplit(".", 1)[-1]
+    artifact = {
+        "benchmark": short,
+        "module": mod_name,
+        "commit": _commit(),
+        "timestamp": os.environ.get("SOURCE_DATE_EPOCH"),
+        "run_id": os.environ.get("GITHUB_RUN_ID"),
+        "status": status,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    if error:
+        artifact["error"] = error
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"BENCH_{short}.json")
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--all", action="store_true",
                     help="run every registered benchmark (the default; "
                          "spelled out for scripts)")
+    ap.add_argument("--artifact-dir", default=None,
+                    help="write a BENCH_<name>.json artifact per "
+                         "benchmark here (commit, env timestamp, status, "
+                         "result rows)")
     args = ap.parse_args()
     if args.all and args.only:
         raise SystemExit("pass --only or --all, not both")
@@ -37,14 +90,20 @@ def main() -> None:
         if args.only and args.only not in mod_name:
             continue
         print(f"# === {mod_name} ===", file=sys.stderr, flush=True)
+        rows, status, error = [], "ok", None
         try:
             mod = importlib.import_module(mod_name)
             rows = mod.run(log=lambda *a: print(*a, file=sys.stderr,
                                                 flush=True))
             all_rows.extend(rows)
-        except Exception:
+        except Exception as e:
             traceback.print_exc()
             failed.append(mod_name)
+            status, error = "failed", f"{type(e).__name__}: {e}"
+        if args.artifact_dir:
+            path = write_artifact(args.artifact_dir, mod_name, rows,
+                                  status, error)
+            print(f"# wrote {path}", file=sys.stderr, flush=True)
     print("name,us_per_call,derived")
     for name, us, derived in all_rows:
         print(f"{name},{us:.1f},{derived}")

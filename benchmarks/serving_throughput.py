@@ -26,6 +26,7 @@ typically protect.
     PYTHONPATH=src python -m benchmarks.serving_throughput --prefix-cache
     PYTHONPATH=src python -m benchmarks.serving_throughput --telemetry
     PYTHONPATH=src python -m benchmarks.serving_throughput --gateway
+    PYTHONPATH=src python -m benchmarks.serving_throughput --quality
     PYTHONPATH=src python -m benchmarks.serving_throughput --smoke   # CI
 
 ``--controller`` runs the SLO-aware adaptive sweep instead: a *stepped*
@@ -69,6 +70,15 @@ preemption engine.  Hard gates: every preempted-then-resumed request
 finishes token-identical to its unpreempted FIFO run, preemptions > 0,
 zero decode/segment retraces after warmup, and (full mode) interactive
 p95 TTFT <= 0.7x the FIFO baseline's.
+
+``--quality`` runs the quality-observability sweep: a ladder engine
+pinned at a sparse rung replays the trace with the
+:class:`repro.obs.QualityMonitor` off and on (shadow dense probes,
+online reconstruction error, saliency drift, roofline counters).  Hard
+gates: bit-identical tokens probes-on vs off on every rep, probes-on
+wall-clock throughput >= 97% of probes-off, zero decode AND zero
+probe/recon retraces after warmup, and the exported artifacts carry the
+``repro_quality_*`` families and validate.
 
 The default model is a reduced-but-not-tiny llama31_8b variant
 (d_model=768, d_ff=6144, 4 layers) — large enough that decode is
@@ -662,6 +672,144 @@ def run_telemetry(log=print, cfg=None, n_requests=12, rate_hz=8.0,
     return rows
 
 
+def run_quality(log=print, cfg=None, budgets=(0.0, 0.5), rung=1,
+                n_requests=12, rate_hz=8.0, gen_tokens=48, max_slots=4,
+                seed=0, reps=3, probe_rate=0.25, recon_every=4,
+                recon_window=8, overhead_gate=0.97, check=True,
+                check_overhead=True, trace_out=None, metrics_out=None,
+                events_out=None):
+    """Quality-observability sweep: shadow dense probes on vs off.
+
+    The same Poisson trace replays against a ladder engine pinned at a
+    sparse rung with no quality monitor and an identical engine with the
+    :class:`repro.obs.QualityMonitor` armed (shadow dense probes, online
+    reconstruction error, saliency drift, roofline counters).
+
+    Hard gates: (1) bit-identical tokens probes-on vs probes-off on
+    EVERY rep — the probe's dense KV writes are overwritten by the real
+    decode step before they can be read; (2) probes-on keeps
+    >= ``overhead_gate`` of probes-off decode throughput, judged on
+    wall-clock around ``replay()`` (the probe runs *outside* the engine's
+    timed decode region, so ``stats.decode_tps`` would hide its cost);
+    (3) zero decode retraces AND zero probe/recon retraces after warmup;
+    (4) the exposition validates and carries the ``repro_quality_*``
+    families, the Chrome trace validates, and ``snapshot()`` reports the
+    quality fields at schema v6."""
+    cfg = cfg or bench_config()
+    params = api.init_model(cfg, 0)
+    # every rung prefills dense (same rationale as the controller sweep):
+    # the comparison is pure decode mechanics + probe overhead
+    ladder = PolicyLadder.uniform(
+        params, cfg, budgets,
+        dense_phases=("prefill_dense", "prefill_sparse"))
+
+    prompt_lens = (24, 32, 48)
+    arrivals, lens = poisson_trace(n_requests, rate_hz, prompt_lens, seed)
+    pool = np.asarray(SyntheticLM(
+        DataConfig(cfg.vocab_size, max(prompt_lens), n_requests)).batch(0))
+    prompts = [pool[i, :lens[i]] for i in range(n_requests)]
+    max_len = max(prompt_lens) + gen_tokens
+
+    tel = obs.Telemetry.full(
+        events_sink=events_out,
+        quality=obs.QualityConfig(probe_rate=probe_rate,
+                                  recon_every=recon_every,
+                                  recon_window=recon_window))
+
+    def fresh(telemetry):
+        eng = Engine(params, cfg, EngineConfig(
+            max_slots=max_slots, max_len=max_len, prefill_chunk=32,
+            initial_rung=rung), ladder=ladder, telemetry=telemetry)
+        eng.warmup()
+        eng.submit(prompts[0], 2)     # absorb first-dispatch overheads
+        eng.run()
+        eng.stats = EngineStats()
+        return eng
+
+    engines = {"plain": fresh(None), "quality": fresh(tel)}
+
+    # interleaved best-of reps on *wall-clock* replay time: both engines
+    # emit the same tokens (parity gate), so tok/s ratio == time ratio
+    times = {m: float("inf") for m in engines}
+    for rep in range(reps):
+        rep_states = {}
+        for mode, eng in engines.items():
+            eng.stats = EngineStats()
+            t0 = time.monotonic()
+            states = replay(eng, prompts, arrivals, gen_tokens)
+            times[mode] = min(times[mode], time.monotonic() - t0)
+            rep_states[mode] = states
+        # parity gate on EVERY rep (states align by trace order)
+        for i, (sq, sp_) in enumerate(zip(rep_states["quality"],
+                                          rep_states["plain"])):
+            assert sq.tokens == sp_.tokens, \
+                f"quality probes changed tokens on trace request {i} " \
+                f"(rep {rep}) — the probe must only observe"
+    log(f"probe parity vs plain engine: OK "
+        f"({n_requests} requests x {reps} reps)")
+    rows = [("serving/quality/parity_vs_plain", 0.0, "ok")]
+
+    q = tel.quality
+    eng_q = engines["quality"]
+    ratio = times["plain"] / times["quality"]
+    d_retraces = eng_q.decode_retraces_after_warmup
+    p_retraces = eng_q.probe_retraces_after_warmup
+    snap = eng_q.snapshot()
+    log(f"probes {q.probes} ({q.probe_tokens} tokens) | recon passes "
+        f"{q.recon_passes} | agreement "
+        f"{snap.get('quality_agreement_mean')} | top-k overlap "
+        f"{snap.get('quality_topk_overlap_mean')} | pressure "
+        f"{snap.get('quality_pressure')}")
+    log(f"probes-on wall-clock throughput: {ratio:.1%} of probes-off "
+        f"(gate >= {overhead_gate:.0%}) | retraces after warmup: decode "
+        f"{d_retraces} probe {p_retraces}")
+    rows.append(("serving/quality/probes", 0.0,
+                 f"{q.probes};tokens={q.probe_tokens};"
+                 f"recon={q.recon_passes};drift={q.drift_events}"))
+    rows.append(("serving/quality/agreement", 0.0,
+                 f"{snap.get('quality_agreement_mean')};topk="
+                 f"{snap.get('quality_topk_overlap_mean')}"))
+    rows.append(("serving/quality/overhead_ratio", 0.0,
+                 f"{ratio:.4f};gate>={overhead_gate}"))
+    rows.append(("serving/quality/retraces_after_warmup", 0.0,
+                 f"decode={d_retraces};probe={p_retraces}"))
+
+    # --- artifacts validate (and export when paths are given) ------------
+    expo = eng_q.metrics_exposition()
+    n_samples = obs.validate_exposition(expo)
+    n_events = obs.validate_chrome_trace(tel.tracer.to_dict())
+    log(f"artifacts: exposition OK ({n_samples} samples), trace OK "
+        f"({n_events} events)")
+    rows.append(("serving/quality/artifacts", 0.0,
+                 f"exposition={n_samples};trace={n_events};"
+                 f"schema={snap['schema_version']}"))
+    if trace_out:
+        tel.tracer.export(trace_out)
+        log(f"wrote trace to {trace_out}")
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(expo)
+        log(f"wrote exposition to {metrics_out}")
+    eng_q.close()
+
+    if check:
+        assert q.probes > 0, "probe never fired on the trace"
+        assert d_retraces == 0, \
+            f"{d_retraces} decode retrace(s) after warmup with probing on"
+        assert p_retraces == 0, \
+            f"{p_retraces} probe/recon retrace(s) after warmup — the " \
+            "probe executables must precompile in warmup()"
+        assert "repro_quality_probes_total" in expo, \
+            "exposition is missing the repro_quality_* families"
+        assert snap["schema_version"] == 6 and "quality_probes" in snap, \
+            "snapshot() must report the quality fields at schema v6"
+        if check_overhead:
+            assert ratio >= overhead_gate, \
+                f"probing keeps only {ratio:.1%} of probes-off decode " \
+                f"throughput, below the {overhead_gate:.0%} gate"
+    return rows
+
+
 def _ttft(rs):
     if rs.first_token_time is None:
         return None
@@ -1002,15 +1150,23 @@ def main():
                          "+ preemption engine vs FIFO baseline: "
                          "preempted-token parity, interactive TTFT gate, "
                          "zero decode/segment retraces)")
+    ap.add_argument("--quality", action="store_true",
+                    help="run only the quality-observability sweep "
+                         "(shadow dense probes on vs off: bit-identical "
+                         "tokens, <3% wall-clock overhead, zero decode/"
+                         "probe retraces, repro_quality_* exposition)")
+    ap.add_argument("--quality-probe-rate", type=float, default=0.25,
+                    help="probe sampling rate for the --quality sweep")
     ap.add_argument("--trace-out", default=None,
                     help="export the telemetry sweep's Chrome trace JSON "
-                         "here (with --telemetry)")
+                         "here (with --telemetry or --quality)")
     ap.add_argument("--metrics-out", default=None,
                     help="export the telemetry sweep's Prometheus "
-                         "exposition dump here (with --telemetry)")
+                         "exposition dump here (with --telemetry or "
+                         "--quality)")
     ap.add_argument("--events-out", default=None,
                     help="stream the telemetry sweep's event log as "
-                         "JSONL here (with --telemetry)")
+                         "JSONL here (with --telemetry or --quality)")
     ap.add_argument("--spec-gamma", type=int, default=2,
                     help="draft length for the main spec scenario")
     ap.add_argument("--spec-train-steps", type=int, default=50,
@@ -1031,6 +1187,25 @@ def main():
         else:
             rows = run_gateway(max_slots=args.slots or 2,
                                seed=args.seed, reps=args.reps)
+    elif args.quality:
+        art = dict(trace_out=args.trace_out, metrics_out=args.metrics_out,
+                   events_out=args.events_out)
+        if args.smoke:
+            # tiny model + trace: exercises the probe/recon/saliency path
+            # and the parity/retrace/artifact gates every decode step;
+            # wall-clock too noisy at this scale to gate the overhead
+            rows = run_quality(
+                cfg=bench_config(d_model=128, d_ff=512, layers=4,
+                                 vocab=512),
+                n_requests=4, rate_hz=4.0, gen_tokens=10, max_slots=2,
+                seed=args.seed, reps=1, probe_rate=1.0, recon_every=2,
+                check_overhead=False, **art)
+        else:
+            rows = run_quality(n_requests=args.requests,
+                               rate_hz=args.rate, gen_tokens=args.gen,
+                               max_slots=args.slots or 4,
+                               seed=args.seed, reps=max(args.reps, 3),
+                               probe_rate=args.quality_probe_rate, **art)
     elif args.telemetry:
         art = dict(trace_out=args.trace_out, metrics_out=args.metrics_out,
                    events_out=args.events_out)

@@ -91,9 +91,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):      # per-device list on older jax
-        cost = cost[0] if cost else {}
+    xla_flops, xla_bytes = R.executable_costs(compiled)
     hlo = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:
@@ -127,8 +125,8 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "cost": {"flops_per_device": rl.hlo_flops,
                  "bytes_per_device": rl.hlo_bytes,
                  # XLA's own numbers (loop bodies counted once) for x-check
-                 "xla_flops": float(cost.get("flops", 0.0)),
-                 "xla_bytes": float(cost.get("bytes accessed", 0.0))},
+                 "xla_flops": xla_flops,
+                 "xla_bytes": xla_bytes},
         "collectives": coll,
         "roofline": rl.row(),
     }

@@ -55,6 +55,26 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
+def executable_costs(compiled) -> "tuple[float, float]":
+    """(FLOPs, bytes accessed) from a compiled executable's
+    ``cost_analysis()``, normalized across jax versions (some return the
+    per-device dict directly, some a one-element list) and backends
+    (missing keys read as 0 — the interpreter path reports no bytes).
+    The reusable core of the ``benchmarks/roofline_report`` extraction,
+    shared with the serving-time per-rung roofline counters
+    (``repro.obs.quality``)."""
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:                     # backend without cost analysis
+        return 0.0, 0.0
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    if not isinstance(cost, dict):
+        return 0.0, 0.0
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)))
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-collective-kind result bytes summed over the module."""
     out = {k: 0 for k in _COLLECTIVES}

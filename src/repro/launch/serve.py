@@ -56,6 +56,15 @@ log (rung/gamma switches with reasons, prefix evictions, KV rollbacks,
 compile records) as JSONL, and ``--profile-dir`` captures a JAX
 profiler trace of the whole run.  Tokens are bit-identical with
 telemetry on or off.
+
+Quality monitoring: ``--quality-probe-rate R`` (R in (0, 1]) arms the
+:class:`repro.obs.QualityMonitor` — it samples that fraction of decode
+steps through a shadow dense probe (token agreement + top-k logit
+overlap vs the dense reference), measures online block reconstruction
+error against calibration baselines, watches saliency drift per
+(block, rung) and exports per-rung roofline counters.  Probes never
+alter served tokens.  ``--quality-drift-threshold`` tunes the EWMA
+saliency-overlap level below which a ``saliency_drift`` event fires.
 """
 from __future__ import annotations
 
@@ -211,6 +220,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--profile-dir", default=None,
                     help="capture a JAX profiler trace of the run into "
                          "this directory")
+    ap.add_argument("--quality-probe-rate", type=float, default=0.0,
+                    help="sample this fraction of decode steps through a "
+                         "shadow dense probe (token agreement, recon "
+                         "error, saliency drift, roofline counters; "
+                         "0 = off)")
+    ap.add_argument("--quality-drift-threshold", type=float, default=None,
+                    help="EWMA saliency-overlap level below which a "
+                         "saliency_drift event fires, in (0, 1) (needs "
+                         "--quality-probe-rate > 0; default 0.5)")
     ap.add_argument("--gateway", action="store_true",
                     help="serve the HTTP/1.1 + SSE API front door "
                          "(repro.serving.gateway) instead of replaying "
@@ -278,6 +296,22 @@ def validate_args(args) -> None:
     if args.prefix_cache_tokens and not args.prefix_cache:
         raise SystemExit("--prefix-cache-tokens needs --prefix-cache to "
                          "arm the prefix cache")
+    if args.quality_probe_rate < 0 or args.quality_probe_rate > 1:
+        raise SystemExit(
+            f"--quality-probe-rate must be in (0, 1], or 0 to disable "
+            f"probing, got {args.quality_probe_rate}")
+    if args.quality_probe_rate > 0 and args.legacy:
+        raise SystemExit("--quality-probe-rate needs the engine path, "
+                         "not --legacy")
+    if args.quality_drift_threshold is not None:
+        if args.quality_probe_rate <= 0:
+            raise SystemExit("--quality-drift-threshold needs "
+                             "--quality-probe-rate > 0 to arm the "
+                             "quality monitor")
+        if not 0.0 < args.quality_drift_threshold < 1.0:
+            raise SystemExit(
+                f"--quality-drift-threshold must be in (0, 1), got "
+                f"{args.quality_drift_threshold}")
     if args.gateway:
         if args.legacy:
             raise SystemExit("--gateway needs the engine path, not "
@@ -394,7 +428,14 @@ def main():
         prefix_cache_tokens=args.prefix_cache_tokens,
         scheduler=scheduler)
     telemetry = None
-    if args.trace_out or args.events_out or args.profile_dir:
+    if (args.trace_out or args.events_out or args.profile_dir
+            or args.quality_probe_rate > 0):
+        quality = None
+        if args.quality_probe_rate > 0:
+            qkw = dict(probe_rate=args.quality_probe_rate)
+            if args.quality_drift_threshold is not None:
+                qkw["drift_threshold"] = args.quality_drift_threshold
+            quality = obs.QualityMonitor(obs.QualityConfig(**qkw))
         # trace_sink makes Engine.close() (context-manager exit) export
         # the Chrome trace even when the serving loop raises
         telemetry = obs.Telemetry(
@@ -404,6 +445,7 @@ def main():
             annotate_dispatch=args.profile_dir is not None,
             profiler=obs.ProfilerSession(args.profile_dir)
             if args.profile_dir else None,
+            quality=quality,
             trace_sink=args.trace_out)
     engine = Engine(params, cfg, ecfg, sp, ladder=ladder,
                     telemetry=telemetry)
@@ -482,6 +524,11 @@ def _report_telemetry(args, telemetry) -> None:
               + (f" to {args.events_out}" if args.events_out else ""))
     if telemetry.profiler is not None and telemetry.profiler.error is None:
         print(f"wrote profiler trace to {args.profile_dir}")
+    if telemetry.quality is not None and telemetry.quality.armed:
+        q = telemetry.quality
+        print(f"quality: {q.probes} probes ({q.probe_tokens} tokens), "
+              f"{q.recon_passes} recon passes, {q.drift_events} drift "
+              f"events, pressure {q.pressure:.3f}")
 
 
 def run_with_metrics(engine, metrics_out=None, every: int = 16,

@@ -13,7 +13,10 @@ serving stack (``Engine(..., telemetry=...)``):
   log (rung switches with reasons, gamma changes, prefix evictions, KV
   rollbacks, compile/retrace records) with an optional JSONL sink;
 * **profiler** (:mod:`repro.obs.profiler`) — JAX dispatch annotations
-  and an opt-in ``jax.profiler`` capture window.
+  and an opt-in ``jax.profiler`` capture window;
+* **quality** (:mod:`repro.obs.quality`) — live sparsity-quality probes:
+  shadow dense probes, online Eq. 6 reconstruction error vs calibration
+  baselines, saliency-drift detection, per-rung roofline counters.
 
 The default engine configuration uses :data:`NULL_TELEMETRY`: every
 surface is ``None``, every hot-path emit site is an ``is not None``
@@ -37,6 +40,7 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                log_buckets, parse_exposition, serve_metrics,
                                validate_exposition)
 from repro.obs.profiler import NULL_CONTEXT, ProfilerSession, annotation
+from repro.obs.quality import QualityConfig, QualityMonitor
 from repro.obs.trace import SpanTracer, validate_chrome_trace
 
 
@@ -59,11 +63,17 @@ class Telemetry:
     # JSON here — so Engine.close() flushes *every* sink, even when the
     # driving loop raised
     trace_sink: Optional[str] = None
+    # sparsity-quality probes (repro.obs.quality): shadow dense probes,
+    # online reconstruction error, saliency drift, roofline counters.
+    # Armed by Engine.warmup(); None (the default) keeps the engine's
+    # quality path to a single `is not None` check per decode step.
+    quality: Optional[QualityMonitor] = None
 
     @property
     def enabled(self) -> bool:
         return (self.tracer is not None or self.events is not None
-                or self.annotate_dispatch or self.profiler is not None)
+                or self.annotate_dispatch or self.profiler is not None
+                or self.quality is not None)
 
     def annotate(self, name: str):
         """Context manager for one dispatch: a profiler TraceAnnotation
@@ -74,15 +84,18 @@ class Telemetry:
 
     @classmethod
     def full(cls, events_sink=None, profile_dir: Optional[str] = None,
-             event_capacity: int = 4096) -> "Telemetry":
+             event_capacity: int = 4096,
+             quality: Optional[QualityConfig] = None) -> "Telemetry":
         """Everything on: tracer + event log (+ optional JSONL sink) +
         dispatch annotations (+ a capture session when ``profile_dir``
-        is given, left for the caller to start)."""
+        is given, left for the caller to start; + quality probes when a
+        :class:`QualityConfig` is given)."""
         return cls(
             tracer=SpanTracer(),
             events=EventLog(capacity=event_capacity, sink=events_sink),
             annotate_dispatch=True,
-            profiler=ProfilerSession(profile_dir) if profile_dir else None)
+            profiler=ProfilerSession(profile_dir) if profile_dir else None,
+            quality=QualityMonitor(quality) if quality is not None else None)
 
     def close(self) -> None:
         """Flush and close every armed sink.  Idempotent: profiler stop,
@@ -105,4 +118,5 @@ __all__ = [
     "engine_registry", "engine_exposition", "parse_exposition",
     "validate_exposition", "serve_metrics",
     "ProfilerSession", "annotation", "NULL_CONTEXT",
+    "QualityConfig", "QualityMonitor",
 ]

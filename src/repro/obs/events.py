@@ -14,11 +14,18 @@ analysis.  Timestamps come from the shared monotonic clock so events
 line up with spans and stats.  Emission is one dict build + deque
 append; when no :class:`EventLog` is armed the engine's emit sites are
 ``if events is not None`` checks — allocation-free.
+
+The JSONL sink can itself be bounded (``max_sink_bytes``): when the log
+owns the file (path sink) and a write pushes it past the budget, the
+file rotates once to ``<path>.1`` (replacing any previous rotation) and
+a fresh file continues — a long-running serve keeps at most ~2x the
+budget on disk, and the in-memory ring is never touched by rotation.
 """
 from __future__ import annotations
 
 import collections
 import json
+import os
 from typing import List, Optional
 
 from repro.obs import clock
@@ -30,19 +37,38 @@ class EventLog:
     ``sink`` is a path (opened append) or a file-like with ``write``;
     each event is written and flushed immediately so a crash loses
     nothing.  ``count`` is the whole-run total; the ring keeps the most
-    recent ``capacity`` events."""
+    recent ``capacity`` events.
 
-    def __init__(self, capacity: int = 4096, sink=None):
+    ``max_sink_bytes`` (path sinks only — the log must own the file to
+    rotate it) caps the JSONL file: when a write would exceed the
+    budget, the current file moves to ``<path>.1`` and writing restarts
+    on an empty file.  0 means unbounded (the historical behaviour)."""
+
+    def __init__(self, capacity: int = 4096, sink=None,
+                 max_sink_bytes: int = 0):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
+        if max_sink_bytes < 0:
+            raise ValueError(
+                f"max_sink_bytes must be >= 0, got {max_sink_bytes}")
+        if max_sink_bytes and not isinstance(sink, str):
+            raise ValueError(
+                "max_sink_bytes needs a path sink: rotation renames the "
+                "file, which only the log-owned (path) sink allows")
         self.capacity = capacity
+        self.max_sink_bytes = max_sink_bytes
+        self.sink_rotations = 0
         self._ring = collections.deque(maxlen=capacity)
         self.count = 0
         self._fh = None
         self._owns_fh = False
+        self._sink_path: Optional[str] = None
+        self._sink_bytes = 0
         if isinstance(sink, str):
             self._fh = open(sink, "a")
             self._owns_fh = True
+            self._sink_path = sink
+            self._sink_bytes = self._fh.tell()
         elif sink is not None:
             self._fh = sink
 
@@ -53,8 +79,24 @@ class EventLog:
         self._ring.append(rec)
         self.count += 1
         if self._fh is not None:
-            self._fh.write(json.dumps(rec) + "\n")
+            line = json.dumps(rec) + "\n"
+            if (self.max_sink_bytes and self._sink_path is not None
+                    and self._sink_bytes
+                    and self._sink_bytes + len(line) > self.max_sink_bytes):
+                self._rotate()
+            self._fh.write(line)
             self._fh.flush()
+            self._sink_bytes += len(line)
+
+    def _rotate(self) -> None:
+        """Move the full sink file aside to ``<path>.1`` and continue on
+        a fresh one.  The in-memory ring is untouched — rotation bounds
+        only the on-disk history."""
+        self._fh.close()
+        os.replace(self._sink_path, self._sink_path + ".1")
+        self._fh = open(self._sink_path, "w")
+        self._sink_bytes = 0
+        self.sink_rotations += 1
 
     def events(self, kind: Optional[str] = None) -> List[dict]:
         """Retained events, oldest first, optionally filtered by kind."""

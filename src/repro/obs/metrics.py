@@ -300,6 +300,47 @@ def engine_registry(engine) -> MetricsRegistry:
                                "seconds queued before admission")
         reg.register_histogram("repro_preempted_seconds", s.preempted_hist,
                                "seconds suspended before resume")
+    q = getattr(getattr(engine, "obs", None), "quality", None)
+    if q is not None and q.armed:
+        # per-rung families are name-suffixed: the registry renders
+        # label-free samples, and rung cardinality is small and fixed
+        c("repro_quality_probes_total", q.probes,
+          "decode steps shadow-probed against the dense reference")
+        c("repro_quality_probe_tokens_total", q.probe_tokens,
+          "tokens compared by shadow probes")
+        c("repro_quality_recon_passes_total", q.recon_passes,
+          "online block-reconstruction evaluations")
+        c("repro_quality_drift_events_total", q.drift_events,
+          "saliency-drift threshold crossings")
+        g("repro_quality_pressure", q.pressure,
+          "active-rung saliency-drift pressure in [0, 1]")
+        for r in range(len(q.agreement_hists)):
+            reg.register_histogram(
+                f"repro_quality_probe_agreement_rung{r}",
+                q.agreement_hists[r],
+                f"probe argmax-token agreement vs dense, rung {r}")
+            reg.register_histogram(
+                f"repro_quality_topk_overlap_rung{r}", q.overlap_hists[r],
+                f"probe top-k logit-set overlap vs dense, rung {r}")
+            reg.register_histogram(
+                f"repro_quality_recon_error_rung{r}", q.recon_hists[r],
+                f"online Eq.6 block reconstruction MSE, rung {r}")
+            base = q.recon_baseline_mean(r)
+            if base is not None:
+                g(f"repro_quality_recon_baseline_rung{r}", base,
+                  f"calibration-time mean block reconstruction MSE, "
+                  f"rung {r}")
+        for (phase, r), cost in sorted(q.roofline.items()):
+            g(f"repro_quality_roofline_flops_{phase}_rung{r}",
+              cost["flops"], f"executable FLOPs, {phase} at rung {r}")
+            g(f"repro_quality_roofline_bytes_{phase}_rung{r}",
+              cost["bytes"],
+              f"executable bytes accessed, {phase} at rung {r}")
+        step_mean = s.decode_step_hist.mean if s.decode_step_hist else 0.0
+        for r, util in sorted(q.decode_utilization(step_mean).items()):
+            g(f"repro_quality_decode_utilization_rung{r}", util,
+              f"roofline step time over measured mean decode step, "
+              f"rung {r}")
     return reg
 
 

@@ -61,6 +61,15 @@ class SLOConfig:
                   all-interactive batch the controller holds the rung and
                   lets priority admission + preemption shed load
                   instead).  Queue-pressure escalation is unaffected.
+    quality_aware  when True, the controller also reads the
+                  :class:`repro.obs.quality.QualityMonitor` drift
+                  pressure as an *advisory* de-escalation hint: positive
+                  pressure (the active rung's live saliency has drifted
+                  from its calibration plan) relaxes to the rung below
+                  when the queue is empty, the TPOT EWMA still fits the
+                  target, dwell has elapsed, and the lower rung's last
+                  estimate would hold — i.e. quality can only spend
+                  latency headroom, never cause an SLO violation.
     """
 
     tpot_p95: float
@@ -70,6 +79,7 @@ class SLOConfig:
     dwell: int = 12
     estimate_ttl: int = 500
     priority_aware: bool = False
+    quality_aware: bool = False
 
     def __post_init__(self):
         if self.tpot_p95 <= 0:
@@ -115,6 +125,8 @@ class AdaptiveController:
         #                                       violations not acted on
         #                                       because the batch had no
         #                                       best-effort traffic
+        self.quality_deescalations = 0        # quality_aware: steps down
+        #                                       taken on drift pressure
 
     # ------------------------------------------------------------------
     @property
@@ -150,7 +162,8 @@ class AdaptiveController:
     # ------------------------------------------------------------------
     def update(self, gaps: Sequence[float], queue_depth: int,
                occupancy: int = 0,
-               best_effort_frac: Optional[float] = None) -> int:
+               best_effort_frac: Optional[float] = None,
+               quality_pressure: Optional[float] = None) -> int:
         """One control tick (call after each decode step).
 
         gaps: the step's observed inter-token gaps, seconds (one per
@@ -167,7 +180,13 @@ class AdaptiveController:
         best-effort class (only consulted when ``slo.priority_aware``):
         a TPOT violation with no best-effort traffic holds the rung
         (counted in ``held_escalations``) so quality degradation lands
-        on best-effort requests before interactive ones."""
+        on best-effort requests before interactive ones.
+
+        quality_pressure: the QualityMonitor's saliency-drift pressure
+        in [0, 1] (only consulted when ``slo.quality_aware``): positive
+        pressure de-escalates one rung when there is latency headroom —
+        escalation always wins, so quality hints can never push the
+        engine into an SLO violation."""
         self.last_occupancy = occupancy
         self.step += 1
         self.residency[self.rung] += 1
@@ -188,6 +207,18 @@ class AdaptiveController:
         if (over_tpot or over_queue) and self.rung < self.num_rungs - 1:
             self._switch(self.rung + 1,
                          "tpot" if over_tpot else "queue")
+        elif (slo.quality_aware and quality_pressure is not None
+              and quality_pressure > 0.0
+              and self.rung > 0 and queue_depth == 0
+              and (ewma is None or ewma <= slo.tpot_p95)
+              and self._lower_rung_would_hold()):
+            # advisory quality de-escalation: the active rung's live
+            # saliency drifted off its calibration plan and there is
+            # latency headroom, so spend it on a denser rung.  Gated
+            # more loosely than "idle" (no hysteresis margin): drift is
+            # a quality signal, not a latency optimization.
+            self.quality_deescalations += 1
+            self._switch(self.rung - 1, "quality")
         elif (self.rung > 0 and queue_depth == 0
               and ewma is not None
               and ewma < slo.tpot_p95 * (1.0 - slo.hysteresis)
@@ -216,6 +247,8 @@ class AdaptiveController:
         }
         if self.slo.priority_aware:
             snap["held_escalations"] = self.held_escalations
+        if self.slo.quality_aware:
+            snap["quality_deescalations"] = self.quality_deescalations
         return snap
 
 

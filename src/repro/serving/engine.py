@@ -69,6 +69,17 @@ profiler annotations.  Telemetry only *observes* host-side state —
 tokens are bit-identical with it on or off — and the default
 ``NULL_TELEMETRY`` costs nothing: every emit site is an ``is not
 None`` check and ``annotate()`` returns a shared null context.
+
+Quality probes: ``Telemetry(quality=QualityMonitor(...))`` additionally
+arms live sparsity-quality observability (``repro.obs.quality``) —
+sampled shadow dense probes (run *before* the real decode dispatch, so
+served tokens and KV stay bit-identical), online Eq. 6 reconstruction
+error vs the ladder's calibration baselines, saliency-drift events, and
+per-rung roofline counters captured at :meth:`Engine.warmup`.  Both
+quality executables precompile at warmup
+(``probe_retraces_after_warmup`` stays 0), and with
+``SLOConfig.quality_aware`` the controller reads the drift-pressure
+gauge as an advisory de-escalation hint.
 """
 from __future__ import annotations
 
@@ -109,7 +120,12 @@ _CHUNKABLE_MIXERS = ("attn", "global")
 # preemptions, resumes, rejected, expired, queue_wait_p95_s) when an
 # explicit SchedulerConfig is armed; "queue_depth" still counts only
 # queued (unadmitted) requests — suspended requests report separately.
-SNAPSHOT_SCHEMA_VERSION = 5
+# v6: adds the quality-probe fields (quality_probes, quality_probe_tokens,
+# quality_agreement_mean, quality_topk_overlap_mean, quality_recon_mean,
+# quality_recon_vs_baseline, quality_drift_events, quality_pressure) when
+# a QualityMonitor is armed, and quality_deescalations in the controller
+# section when SLOConfig.quality_aware is set.
+SNAPSHOT_SCHEMA_VERSION = 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -390,7 +406,8 @@ class Engine:
             self.spec_decoder = SpecDecoder(self, ecfg.spec)
 
         if self.controller is not None or self.spec_decoder is not None \
-                or self.prefix_cache is not None or self._preemptible:
+                or self.prefix_cache is not None or self._preemptible \
+                or self.obs.quality is not None:
             self.warmup()
 
     # ------------------------------------------------------------------
@@ -501,6 +518,12 @@ class Engine:
             # serving-time suspend/resume never stalls on a trace
             self.pool.warm_segments(self.ecfg.prefill_chunk,
                                     self.ecfg.max_len - 1)
+        if self.obs.quality is not None:
+            # builds + precompiles the shadow-probe and reconstruction
+            # executables and AOT-captures per-rung roofline counters —
+            # before the retrace baseline below, so those compiles count
+            # as warmup, and live probing never traces
+            self.obs.quality.attach(self)
         self._warm_traces = (
             self._decode_traces, self._chunk_traces,
             self.spec_decoder._verify_traces
@@ -525,6 +548,17 @@ class Engine:
         if self._warm_traces is None or self.spec_decoder is None:
             return None
         return self.spec_decoder._verify_traces - self._warm_traces[2]
+
+    @property
+    def probe_retraces_after_warmup(self) -> Optional[int]:
+        """Quality probe/recon (re)traces since :meth:`warmup`; None
+        without an armed :class:`repro.obs.quality.QualityMonitor`.
+        Stays 0 under live probing — both quality executables precompile
+        at warmup with the shapes the hot path uses."""
+        q = self.obs.quality
+        if q is None or not q.armed:
+            return None
+        return q.retraces_after_warmup
 
     @property
     def segment_retraces_after_warmup(self) -> Optional[int]:
@@ -887,6 +921,15 @@ class Engine:
             positions[slot] = rs.position
             active[slot] = 1.0
         _, _, dec_policy = self._rung_phases[self._rung]
+        # shadow dense quality probe (sampled): runs *before* the real
+        # decode so its K/V writes land exactly on the positions the
+        # serving-policy step below overwrites — served tokens and cache
+        # are bit-identical to a probe-free run, and the probe stays
+        # outside the timed decode region so step stats are unchanged
+        q = self.obs.quality
+        probe = None
+        if q is not None and q.should_probe():
+            probe = q.run_probe(self, tokens, positions, active)
         t0 = self._now()
         with self.obs.annotate("repro/decode"):
             logits, self.pool.caches = self._dstep(
@@ -912,6 +955,8 @@ class Engine:
             self._emit(rs, tok)
             self.pool.commit(slot, 1)
             self._maybe_finish(rs, tok)
+        if probe is not None:
+            q.observe(self, probe, logits, nxt, active, t1)
         if self.controller is not None:
             be_frac = None
             if self.controller.slo.priority_aware:
@@ -919,10 +964,14 @@ class Engine:
                     1 for rs in decoding.values()
                     if rs.request.priority == Priority.BEST_EFFORT
                 ) / len(decoding)) if decoding else 0.0
+            qp = None
+            if self.controller.slo.quality_aware and q is not None \
+                    and q.armed:
+                qp = q.pressure
             new_rung = self.controller.update(
                 gaps, queue_depth=self.scheduler.queue_depth,
                 occupancy=self.pool.num_occupied,
-                best_effort_frac=be_frac)
+                best_effort_frac=be_frac, quality_pressure=qp)
             if new_rung != self._rung:
                 old = self._rung
                 self.set_rung(new_rung)
@@ -1010,6 +1059,8 @@ class Engine:
                 out["telemetry_events"] = self.obs.events.count
             if self.obs.tracer is not None:
                 out["telemetry_spans"] = len(self.obs.tracer.events)
+        if self.obs.quality is not None and self.obs.quality.armed:
+            out.update(self.obs.quality.snapshot())
         return out
 
     # ------------------------------------------------------------------

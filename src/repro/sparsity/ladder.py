@@ -17,11 +17,15 @@ ladder invariant: a higher-budget rung never keeps more channels than a
 lower one in any block.
 
 The whole ladder ships as one self-contained versioned npz artifact
-(policy-artifact v2, ``kind="ladder"``): rung policies in the JSON meta,
+(policy-artifact ``kind="ladder"``): rung policies in the JSON meta,
 rung 0's full sp tree plus per-rung deltas for the calibrated leaves
 (``alpha``/``tau``/``keep_frac``) — the weight-column norms ``g`` are a
 property of the checkpoint, identical across rungs, and stored once.  A
-serving fleet loads the ladder without the model checkpoint.
+serving fleet loads the ladder without the model checkpoint.  Since
+artifact v4 a calibrated ladder also carries quality baselines (per-rung
+per-block Eq. 6 reconstruction MSE and saliency channel sets) that the
+serving-time QualityMonitor (``repro.obs.quality``) compares live
+traffic against.
 """
 from __future__ import annotations
 
@@ -45,12 +49,18 @@ class PolicyLadder:
     sps           one stacked sp tree per rung (rungs share ``g`` arrays)
     block_ratios  per-rung per-block prune ratios from calibration
                   (None for uniform/uncalibrated ladders)
+    baselines     calibration-time quality baselines for the serving
+                  QualityMonitor (artifact v4): ``{"recon": (rungs,
+                  blocks) Eq. 6 MSE array, "channels": per-rung tuple of
+                  per-block saliency channel-index arrays}``; None for
+                  uniform ladders and pre-v4 artifacts
     """
 
     budgets: Tuple[float, ...]
     policies: Tuple[SparsityPolicy, ...]
     sps: tuple
     block_ratios: Optional[tuple] = None
+    baselines: Optional[dict] = None
 
     def __post_init__(self):
         for f in ("budgets", "policies", "sps"):
@@ -124,8 +134,17 @@ class PolicyLadder:
             "policies": [p.to_dict() for p in self.policies],
             "block_ratios": None if self.block_ratios is None else
             [np.asarray(r, float).tolist() for r in self.block_ratios],
+            # v4: quality baselines — recon MSEs ride the JSON meta,
+            # channel index sets go in as qc{rung}/d{depth} arrays
+            "quality": None if self.baselines is None else {
+                "recon":
+                np.asarray(self.baselines["recon"], float).tolist()},
         }
         arrays = {}
+        if self.baselines is not None:
+            for r, per_block in enumerate(self.baselines["channels"]):
+                for d, ch in enumerate(per_block):
+                    arrays[f"qc{r}/d{d}"] = np.asarray(ch, np.int64)
         base = _flatten_sp(self.sps[0])
         for k, v in base.items():
             arrays[f"sp0/{k}"] = v
@@ -163,10 +182,19 @@ class PolicyLadder:
                     flat[k[len(pre):]] = z[k]
             sps.append(_unflatten_sp(flat))
         br = meta.get("block_ratios")
+        baselines = None
+        qb = meta.get("quality")        # absent in pre-v4 artifacts
+        if qb is not None:
+            recon = np.asarray(qb["recon"], float)
+            channels = tuple(
+                tuple(z[f"qc{r}/d{d}"] for d in range(recon.shape[1]))
+                for r in range(recon.shape[0]))
+            baselines = {"recon": recon, "channels": channels}
         return cls(budgets=tuple(meta["budgets"]), policies=policies,
                    sps=tuple(sps),
                    block_ratios=None if br is None else
-                   tuple(np.asarray(r) for r in br))
+                   tuple(np.asarray(r) for r in br),
+                   baselines=baselines)
 
 
 def calibrate_ladder(params, cfg, calib_batch,
@@ -176,7 +204,8 @@ def calibrate_ladder(params, cfg, calib_batch,
                      sensitive_frac: float = 0.25,
                      evo=None, warm_generations: Optional[int] = None,
                      delta: float = 0.05, coord_passes: int = 0,
-                     ctx=None, log=None) -> PolicyLadder:
+                     ctx=None, log=None, quality_baselines: bool = True,
+                     saliency_topk: int = 32) -> PolicyLadder:
     """Calibrate a monotone policy ladder at several global budgets.
 
     The calibration context is built once; the first sparse rung runs the
@@ -185,6 +214,15 @@ def calibrate_ladder(params, cfg, calib_batch,
     a quarter of the cold budget).  Budget 0.0 is the dense rung: no
     search, alphas 0, keep 1 — but the *same* sp tree schema, so a
     serving engine can swap rung sp trees without retracing.
+
+    ``quality_baselines`` additionally records, per rung and block, the
+    Eq. 6 reconstruction MSE on the calibration batch and the top
+    ``saliency_topk`` saliency channels (``|x| * g^alpha`` on the block
+    input), shipped in the v4 artifact so the serving-time
+    QualityMonitor can compare live traffic against calibration
+    (``saliency_topk`` should match ``QualityConfig.saliency_topk`` —
+    mismatched set sizes depress the Jaccard overlap even without
+    drift).
     """
     from repro.core import unstacked as U
     from repro.core.allocation import EvoConfig
@@ -229,6 +267,43 @@ def calibrate_ladder(params, cfg, calib_batch,
         block_ratios.append(np.asarray(plan.block_ratios, float))
         prev_plan = plan
 
+    baselines = None
+    if quality_baselines:
+        log("recording quality baselines (Eq. 6 recon + saliency) ...")
+        baselines = _quality_baselines(cfg, ctx, sps, saliency_topk)
+
     return PolicyLadder(budgets=tuple(sorted(budgets)),
                         policies=tuple(policies), sps=tuple(sps),
-                        block_ratios=tuple(block_ratios))
+                        block_ratios=tuple(block_ratios),
+                        baselines=baselines)
+
+
+def _quality_baselines(cfg, ctx, sps, saliency_topk: int) -> dict:
+    """Per-rung per-block calibration-time quality references: the Eq. 6
+    reconstruction MSE under each rung's sp tree, and the top-k saliency
+    channel set of each block's calibration input — the same scoring
+    rule (and representative leaf choice) the live QualityMonitor
+    applies, so serving-time Jaccard overlap is 1.0 by construction on
+    in-distribution traffic."""
+    import jax
+    from repro.obs.quality import (rep_saliency_leaf, saliency_channels,
+                                   unstack_sp)
+
+    feats = [np.mean(np.abs(np.asarray(ctx.block_io[d], np.float32)),
+                     axis=(0, 1)) for d in range(ctx.num_blocks)]
+    recon = np.zeros((len(sps), ctx.num_blocks))
+    channels = []
+    for i, sp in enumerate(sps):
+        per_depth = unstack_sp(cfg, sp)
+        per_block = []
+        for d in range(ctx.num_blocks):
+            recon[i, d] = float(ctx.block_mse(d, per_depth[d]))
+            leaf = rep_saliency_leaf(
+                jax.tree_util.tree_map(np.asarray, per_depth[d]),
+                cfg.d_model)
+            per_block.append(
+                np.zeros((0,), np.int64) if leaf is None else
+                saliency_channels(feats[d], leaf[0], leaf[1],
+                                  saliency_topk))
+        channels.append(tuple(per_block))
+    return {"recon": recon, "channels": tuple(channels)}

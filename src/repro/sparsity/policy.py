@@ -57,8 +57,13 @@ PHASES = ("prefill_dense", "prefill_sparse", "decode")
 # call time).  Artifacts saved at v<=2 unconditionally baked the old
 # default interpret=true, so the loader normalizes it to auto — without
 # this, a pre-v3 ladder would silently force interpreter mode on TPU.
-ARTIFACT_VERSION = 3
-_READABLE_VERSIONS = (1, 2, 3)
+# v4: ladder artifacts may carry calibration-time quality baselines
+# (per-rung per-block Eq. 6 reconstruction MSE in the meta, per-rung
+# per-block saliency channel sets as "qc{rung}/d{depth}" arrays) for the
+# serving-time QualityMonitor (repro.obs.quality); absent in older
+# artifacts and optional in v4 — loaders treat them as None.
+ARTIFACT_VERSION = 4
+_READABLE_VERSIONS = (1, 2, 3, 4)
 
 
 class CaptureSink:

@@ -3,6 +3,8 @@ context manager), and serve-CLI flag validation."""
 import http.client
 import json
 import socket
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -141,6 +143,48 @@ def test_metrics_exposition_validates(gateway):
         assert name in text
 
 
+def test_concurrent_metrics_scrapes_under_decode(gateway, model):
+    """GET /metrics from several threads while a generation is decoding:
+    every scrape returns a valid exposition and the generation finishes
+    untouched (the registry renders from live engine state, so scrapes
+    must tolerate the state mutating mid-decode)."""
+    _, _, port = gateway
+    _, cfg = model
+    prompt = [int(t) for t in _prompts(cfg, 1, 10, step=7)[0]]
+    samples, gen_out, errors = [], [], []
+
+    def scrape():
+        try:
+            status, _, body = _request(port, "GET", "/metrics")
+            assert status == 200
+            samples.append(obs.validate_exposition(body.decode()))
+        except Exception as e:        # surface in the main thread
+            errors.append(e)
+
+    def generate():
+        try:
+            status, _, body = _request(port, "POST", "/v1/generate",
+                                       {"prompt": prompt,
+                                        "max_new_tokens": 16})
+            assert status == 200
+            gen_out.append(json.loads(body)["tokens"])
+        except Exception as e:
+            errors.append(e)
+
+    g = threading.Thread(target=generate)
+    g.start()
+    scrapers = [threading.Thread(target=scrape) for _ in range(6)]
+    for s in scrapers:
+        s.start()
+        time.sleep(0.01)     # spread the scrapes across the decode window
+    for s in scrapers:
+        s.join(timeout=60)
+    g.join(timeout=120)
+    assert not errors, errors
+    assert len(samples) == 6 and all(n > 0 for n in samples)
+    assert len(gen_out) == 1 and len(gen_out[0]) == 16
+
+
 def test_validation_errors_are_400(gateway):
     _, _, port = gateway
     for bad in ({}, {"prompt": []}, {"prompt": [1.5]},
@@ -240,6 +284,14 @@ def test_reset_ids_gives_fresh_namespace(model):
     (["--gateway", "--metrics-port", "9090"], "already serves /metrics"),
     (["--gateway-port", "9999"], "need --gateway"),
     (["--preemption", "--legacy"], "engine path"),
+    (["--quality-probe-rate", "1.5"], "quality-probe-rate"),
+    (["--quality-probe-rate", "-0.1"], "quality-probe-rate"),
+    (["--quality-probe-rate", "0.5", "--legacy"], "engine path"),
+    (["--quality-drift-threshold", "0.3"], "quality-probe-rate > 0"),
+    (["--quality-probe-rate", "0.5", "--quality-drift-threshold", "1.0"],
+     "quality-drift-threshold must be in"),
+    (["--quality-probe-rate", "0.5", "--quality-drift-threshold", "0.0"],
+     "quality-drift-threshold must be in"),
 ])
 def test_serve_cli_rejects_bad_flags(argv, msg):
     args = build_parser().parse_args(argv)
@@ -251,7 +303,10 @@ def test_serve_cli_accepts_good_flags():
     for argv in ([], ["--gateway", "--max-queue", "8", "--preemption"],
                  ["--ladder", "x.npz", "--rung", "1"],
                  ["--ladder", "x.npz", "--spec-gamma", "2",
-                  "--spec-drafter", "1"]):
+                  "--spec-drafter", "1"],
+                 ["--quality-probe-rate", "0.25"],
+                 ["--quality-probe-rate", "1.0",
+                  "--quality-drift-threshold", "0.3"]):
         validate_args(build_parser().parse_args(argv))
 
 

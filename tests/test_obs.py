@@ -215,6 +215,35 @@ def test_event_log_ring_sink_and_filter(tmp_path):
     assert lines[-1]["kind"] == "rung_switch"
 
 
+def test_event_log_sink_rotation_preserves_ring(tmp_path):
+    """A byte-capped sink rotates to <path>.1 instead of growing without
+    bound — and rotation must never drop events from the in-memory ring
+    view (the ring is capacity-bounded, not byte-bounded)."""
+    sink = tmp_path / "events.jsonl"
+    with EventLog(capacity=64, sink=str(sink), max_sink_bytes=512) as ev:
+        for i in range(40):
+            ev.emit("tick", i=i)
+        assert ev.sink_rotations >= 1
+        assert sink.stat().st_size <= 512
+        rotated = tmp_path / "events.jsonl.1"
+        assert rotated.exists()
+        # the live file + the rotation hold a contiguous tail of events
+        recent = [json.loads(ln)["i"]
+                  for ln in rotated.read_text().splitlines()
+                  + sink.read_text().splitlines()]
+        assert recent == list(range(40 - len(recent), 40))
+        # the ring view is untouched by rotation: all 40, in order
+        assert [e["i"] for e in ev.events("tick")] == list(range(40))
+        assert ev.count == 40
+
+    # rotation needs a log-owned path sink — a file handle can't be
+    # renamed out from under its owner
+    with pytest.raises(ValueError, match="path sink"):
+        EventLog(sink=open(tmp_path / "h.jsonl", "w"), max_sink_bytes=10)
+    with pytest.raises(ValueError, match=">= 0"):
+        EventLog(sink=str(sink), max_sink_bytes=-1)
+
+
 # ---------------------------------------------------------------------------
 # null path
 # ---------------------------------------------------------------------------
@@ -289,9 +318,11 @@ def test_telemetry_parity_and_artifacts(model, tmp_path):
                for e in doc["traceEvents"])
     tel.close()
 
-    # snapshot v4+ fields (v5 added the admission/preemption block)
+    # snapshot v4+ fields (v5 added the admission/preemption block,
+    # v6 the quality-probe block — absent here: no QualityMonitor armed)
     snap = e1.snapshot()
-    assert snap["schema_version"] == 5
+    assert snap["schema_version"] == 6
+    assert "quality_probes" not in snap
     assert snap["telemetry_spans"] == len(tel.tracer.events)
     assert snap["tpot_p95_s"] >= snap["tpot_p50_s"]
     assert "tpot_p95_window_s" in snap
