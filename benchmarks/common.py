@@ -3,11 +3,12 @@ built once per process."""
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 _STATE = {}
 
@@ -15,10 +16,10 @@ _STATE = {}
 def timed(fn, *args, reps=3, warmup=1):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    t0 = obs.now()
     for _ in range(reps):
         out = jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6, out   # us
+    return (obs.now() - t0) / reps * 1e6, out   # us
 
 
 def trained_model(steps: int = 60, seq: int = 64, batch: int = 8):

@@ -1,0 +1,136 @@
+"""Diff two benchmark artifact directories (``BENCH_<name>.json``).
+
+    PYTHONPATH=src python -m benchmarks.compare baseline-dir candidate-dir \
+        [--threshold 25] [--structural]
+
+For every artifact in the baseline directory the candidate must have the
+matching ``BENCH_<name>.json`` with status ``ok`` and every baseline row
+present.  Timed rows are compared as per-row percentage deltas on
+``us_per_call``; a slowdown beyond ``--threshold`` percent is a
+regression and the exit code is nonzero.
+
+``--structural`` skips the timing comparison (rows/status/coverage
+only) — the mode CI uses against a committed baseline, where shared
+runners make wall-time deltas meaningless noise.  Rows whose
+``us_per_call`` is 0 in either run (gate-only rows) are always compared
+structurally.
+
+Exit codes: 0 clean, 1 regression/coverage breach, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+
+def load_dir(directory: str) -> Dict[str, dict]:
+    """{benchmark short-name: artifact dict} for a directory."""
+    if not os.path.isdir(directory):
+        raise SystemExit(2)
+    out = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        with open(path) as f:
+            doc = json.load(f)
+        out[doc.get("benchmark",
+                    os.path.basename(path)[len("BENCH_"):-len(".json")])] = doc
+    return out
+
+
+def compare_rows(base_rows: List[dict], cand_rows: List[dict],
+                 threshold_pct: float, structural: bool,
+                 ) -> Tuple[List[str], List[str]]:
+    """(report lines, failure lines) for one artifact's rows."""
+    cand = {r["name"]: r for r in cand_rows}
+    lines, failures = [], []
+    for row in base_rows:
+        name = row["name"]
+        if name not in cand:
+            failures.append(f"row {name!r} missing from candidate")
+            continue
+        b_us = float(row.get("us_per_call") or 0.0)
+        c_us = float(cand[name].get("us_per_call") or 0.0)
+        if structural or b_us <= 0.0 or c_us <= 0.0:
+            lines.append(f"  {name}: present")
+            continue
+        delta = (c_us - b_us) / b_us * 100.0
+        flag = ""
+        if delta > threshold_pct:
+            flag = f"  << REGRESSION (> {threshold_pct:g}%)"
+            failures.append(
+                f"row {name!r} regressed {delta:+.1f}% "
+                f"({b_us:.1f}us -> {c_us:.1f}us)")
+        lines.append(f"  {name}: {b_us:.1f}us -> {c_us:.1f}us "
+                     f"({delta:+.1f}%){flag}")
+    extra = [r["name"] for r in cand_rows
+             if r["name"] not in {b["name"] for b in base_rows}]
+    for name in extra:
+        lines.append(f"  {name}: new row (not in baseline)")
+    return lines, failures
+
+
+def compare_dirs(baseline_dir: str, candidate_dir: str,
+                 threshold_pct: float = 25.0, structural: bool = False,
+                 log=print) -> List[str]:
+    """Compare every baseline artifact; returns the failure list."""
+    base = load_dir(baseline_dir)
+    cand = load_dir(candidate_dir)
+    if not base:
+        return [f"no BENCH_*.json artifacts in baseline {baseline_dir!r}"]
+    failures: List[str] = []
+    for name, b_doc in base.items():
+        log(f"== {name} ==")
+        c_doc = cand.get(name)
+        if c_doc is None:
+            failures.append(f"artifact BENCH_{name}.json missing from "
+                            f"candidate")
+            log("  MISSING from candidate")
+            continue
+        if c_doc.get("status") != "ok":
+            failures.append(
+                f"{name}: candidate status {c_doc.get('status')!r}"
+                + (f" ({c_doc['error']})" if c_doc.get("error") else ""))
+        lines, row_failures = compare_rows(
+            b_doc.get("rows", []), c_doc.get("rows", []),
+            threshold_pct, structural)
+        for ln in lines:
+            log(ln)
+        failures.extend(f"{name}: {f}" for f in row_failures)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.compare",
+        description="Diff two BENCH_<name>.json artifact directories and "
+                    "gate per-row regressions.")
+    ap.add_argument("baseline", help="baseline artifact directory")
+    ap.add_argument("candidate", help="candidate artifact directory")
+    ap.add_argument("--threshold", type=float, default=25.0,
+                    help="per-row us_per_call slowdown (percent) treated "
+                         "as a regression (default 25)")
+    ap.add_argument("--structural", action="store_true",
+                    help="compare artifact/row coverage and status only, "
+                         "ignoring timings (CI mode: shared runners make "
+                         "wall-time deltas noise)")
+    args = ap.parse_args(argv)
+    if args.threshold <= 0:
+        ap.error(f"--threshold must be > 0, got {args.threshold}")
+
+    failures = compare_dirs(args.baseline, args.candidate,
+                            threshold_pct=args.threshold,
+                            structural=args.structural)
+    if failures:
+        print(f"\n{len(failures)} failure(s):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nno regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

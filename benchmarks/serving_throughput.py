@@ -735,9 +735,9 @@ def run_quality(log=print, cfg=None, budgets=(0.0, 0.5), rung=1,
         rep_states = {}
         for mode, eng in engines.items():
             eng.stats = EngineStats()
-            t0 = time.monotonic()
+            t0 = obs.now()
             states = replay(eng, prompts, arrivals, gen_tokens)
-            times[mode] = min(times[mode], time.monotonic() - t0)
+            times[mode] = min(times[mode], obs.now() - t0)
             rep_states[mode] = states
         # parity gate on EVERY rep (states align by trace order)
         for i, (sq, sp_) in enumerate(zip(rep_states["quality"],
@@ -801,8 +801,8 @@ def run_quality(log=print, cfg=None, budgets=(0.0, 0.5), rung=1,
             "probe executables must precompile in warmup()"
         assert "repro_quality_probes_total" in expo, \
             "exposition is missing the repro_quality_* families"
-        assert snap["schema_version"] == 6 and "quality_probes" in snap, \
-            "snapshot() must report the quality fields at schema v6"
+        assert snap["schema_version"] == 7 and "quality_probes" in snap, \
+            "snapshot() must report the quality fields at schema v7"
         if check_overhead:
             assert ratio >= overhead_gate, \
                 f"probing keeps only {ratio:.1%} of probes-off decode " \
@@ -970,13 +970,13 @@ def quick_train(cfg, steps=50, batch=4, seq=64, lr=5e-3, seed=0, log=print,
                                 **(data_kw or {})))
     opt = adamw.init(params, opt_cfg)
     jstep = jax.jit(api.make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
-    t0 = time.monotonic()
+    t0 = obs.now()
     metrics = {}
     for i in range(steps):
         params, opt, metrics = jstep(params, opt,
                                      {"tokens": jnp.asarray(ds.batch(i))})
     loss = float(metrics["loss"])
-    log(f"quick-train: {steps} steps in {time.monotonic() - t0:.0f}s, "
+    log(f"quick-train: {steps} steps in {obs.now() - t0:.0f}s, "
         f"final loss {loss:.3f} (uniform {np.log(cfg.vocab_size):.2f})")
     return params
 

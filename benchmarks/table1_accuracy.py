@@ -8,9 +8,8 @@ model — the offline analogue of the paper's task-accuracy retention.
 """
 from __future__ import annotations
 
-import time
-
 from benchmarks.common import calib_context, eval_metrics, trained_model
+from repro import obs
 from repro.core import pipeline
 from repro.core.allocation import EvoConfig
 
@@ -25,7 +24,7 @@ def run(log=print):
 
     evo = EvoConfig(generations=4, offspring=8, eps=0.1, seed=0)
     for sparsity in (0.3, 0.4, 0.5):
-        t0 = time.time()
+        t0 = obs.now()
         plans = {
             "teal_act_only": pipeline.activation_only_plan(
                 params, cfg, batch, sparsity, ctx=ctx),
@@ -36,7 +35,7 @@ def run(log=print):
                 params, cfg, batch, sparsity, evo=evo, delta=0.25,
                 coord_passes=0, ctx=ctx),
         }
-        us = (time.time() - t0) * 1e6
+        us = (obs.now() - t0) * 1e6
         for name, plan in plans.items():
             m = eval_metrics(params, cfg, data_cfg, plan.per_depth_sp)
             retention = dense["ppl"] / m["ppl"]

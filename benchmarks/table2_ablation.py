@@ -6,9 +6,8 @@ Rows: activation-only -> +weight importance -> +coarse (block) search ->
 asserts the same ordering on calibration KL and held-out PPL."""
 from __future__ import annotations
 
-import time
-
 from benchmarks.common import calib_context, eval_metrics, trained_model
+from repro import obs
 from repro.core import pipeline
 from repro.core.allocation import EvoConfig
 
@@ -29,9 +28,9 @@ def run(log=print):
     rows = []
     kls = []
     for name, kw in variants:
-        t0 = time.time()
+        t0 = obs.now()
         plan = pipeline.run_pipeline(params, cfg, batch, p, ctx=ctx, **kw)
-        us = (time.time() - t0) * 1e6
+        us = (obs.now() - t0) * 1e6
         kl = ctx.fitness(plan.per_depth_sp)
         m = eval_metrics(params, cfg, data_cfg, plan.per_depth_sp)
         kls.append(kl)

@@ -65,11 +65,24 @@ error against calibration baselines, watches saliency drift per
 (block, rung) and exports per-rung roofline counters.  Probes never
 alter served tokens.  ``--quality-drift-threshold`` tunes the EWMA
 saliency-overlap level below which a ``saliency_drift`` event fires.
+
+Flight recorder (``repro.obs.flight``): ``--flight-record`` captures
+every nondeterministic engine input (request submissions + clock
+observations) and resulting decision into a bounded in-memory ring —
+black-box mode, dumped on trigger (engine exception, SLO-breach
+escalation, saliency-drift edge, SIGUSR1, or the gateway's
+``GET /v1/debug/flight``) into ``--flight-dump-dir``.  Give
+``--flight-record PATH`` to also stream the complete recording as JSONL
+to PATH; that file replays bit-identically via
+``python -m repro.obs.flight.replay PATH``.  ``--flight-ring`` sizes
+the ring.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import signal
 
 import jax
 import jax.numpy as jnp
@@ -247,6 +260,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="suspend the least-important decoding request to "
                          "host memory when a more important arrival needs "
                          "its KV slot; the victim resumes bit-identically")
+    ap.add_argument("--flight-record", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="arm the flight recorder (repro.obs.flight): "
+                         "bare = black-box ring only; with PATH, also "
+                         "stream the complete recording as JSONL to PATH "
+                         "(replayable via python -m repro.obs.flight.replay)")
+    ap.add_argument("--flight-ring", type=int, default=4096,
+                    help="flight-recorder ring capacity in records "
+                         "(needs --flight-record)")
+    ap.add_argument("--flight-dump-dir", default=None,
+                    help="directory for triggered black-box dumps "
+                         "(exception / SLO breach / saliency drift / "
+                         "SIGUSR1 / GET /v1/debug/flight; needs "
+                         "--flight-record)")
     return ap
 
 
@@ -332,6 +359,29 @@ def validate_args(args) -> None:
     if (args.max_queue or args.preemption) and args.legacy:
         raise SystemExit("--max-queue/--preemption need the engine path, "
                          "not --legacy")
+    if args.flight_ring <= 0:
+        raise SystemExit(f"--flight-ring must be > 0, got "
+                         f"{args.flight_ring}")
+    if args.flight_record is not None and args.legacy:
+        raise SystemExit("--flight-record needs the engine path, not "
+                         "--legacy: the recorder captures the engine's "
+                         "submission and clock streams")
+    if args.flight_record is None:
+        if args.flight_ring != 4096:
+            raise SystemExit("--flight-ring needs --flight-record to arm "
+                             "the flight recorder")
+        if args.flight_dump_dir is not None:
+            raise SystemExit("--flight-dump-dir needs --flight-record to "
+                             "arm the flight recorder")
+    if args.flight_dump_dir is not None:
+        d = args.flight_dump_dir
+        if os.path.exists(d):
+            if not os.path.isdir(d):
+                raise SystemExit(f"--flight-dump-dir {d!r} exists and is "
+                                 "not a directory")
+            if not os.access(d, os.W_OK):
+                raise SystemExit(f"--flight-dump-dir {d!r} is not "
+                                 "writable")
 
 
 def validate_rungs(args, num_rungs: int) -> None:
@@ -428,8 +478,16 @@ def main():
         prefix_cache_tokens=args.prefix_cache_tokens,
         scheduler=scheduler)
     telemetry = None
+    flight = None
+    if args.flight_record is not None:
+        flight = obs.FlightRecorder(
+            capacity=args.flight_ring,
+            sink=args.flight_record or None,
+            dump_dir=args.flight_dump_dir,
+            meta={"arch": args.arch, "reduced": args.reduced, "seed": 0,
+                  "ladder_path": args.ladder})
     if (args.trace_out or args.events_out or args.profile_dir
-            or args.quality_probe_rate > 0):
+            or args.quality_probe_rate > 0 or flight is not None):
         quality = None
         if args.quality_probe_rate > 0:
             qkw = dict(probe_rate=args.quality_probe_rate)
@@ -446,9 +504,13 @@ def main():
             profiler=obs.ProfilerSession(args.profile_dir)
             if args.profile_dir else None,
             quality=quality,
+            flight=flight,
             trace_sink=args.trace_out)
     engine = Engine(params, cfg, ecfg, sp, ladder=ladder,
                     telemetry=telemetry)
+    if flight is not None and hasattr(signal, "SIGUSR1"):
+        # operator-triggered black-box dump: kill -USR1 <pid>
+        signal.signal(signal.SIGUSR1, lambda *_: flight.dump("sigusr1"))
 
     if args.gateway:
         from repro.serving.gateway import Gateway
@@ -529,6 +591,12 @@ def _report_telemetry(args, telemetry) -> None:
         print(f"quality: {q.probes} probes ({q.probe_tokens} tokens), "
               f"{q.recon_passes} recon passes, {q.drift_events} drift "
               f"events, pressure {q.pressure:.3f}")
+    if telemetry.flight is not None:
+        fr = telemetry.flight
+        print(f"flight: {fr.count} records ({fr.dropped} dropped from "
+              f"the ring), {len(fr.dumps)} dumps"
+              + (f", recording at {args.flight_record}"
+                 if args.flight_record else ""))
 
 
 def run_with_metrics(engine, metrics_out=None, every: int = 16,

@@ -10,6 +10,7 @@ A model's parameters are described as a pytree whose leaves are
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional, Tuple
 
 import jax
@@ -64,7 +65,11 @@ def init_params(schema, key, default_dtype: str = "float32"):
     leaves, treedef = _flatten(schema)
     out = []
     for i, (path, spec) in enumerate(leaves):
-        k = jax.random.fold_in(key, np.uint32(hash(_path_str(path)) & 0x7FFFFFFF))
+        # crc32, NOT hash(): builtin str hashing is salted per process
+        # (PYTHONHASHSEED), which would make "seed 0" params differ
+        # across processes and break cross-process record/replay
+        tag = zlib.crc32(_path_str(path).encode()) & 0x7FFFFFFF
+        k = jax.random.fold_in(key, np.uint32(tag))
         out.append(_init_leaf(spec, k, default_dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 

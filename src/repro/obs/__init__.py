@@ -33,8 +33,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.obs.clock import now, to_wall
+from repro.obs.clock import (SYSTEM_CLOCK, ReplayClock, ReplayDivergence,
+                             SystemClock, now, to_wall)
 from repro.obs.events import EventLog
+from repro.obs.flight import FlightRecorder
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                engine_exposition, engine_registry,
                                log_buckets, parse_exposition, serve_metrics,
@@ -68,12 +70,18 @@ class Telemetry:
     # Armed by Engine.warmup(); None (the default) keeps the engine's
     # quality path to a single `is not None` check per decode step.
     quality: Optional[QualityMonitor] = None
+    # flight recorder (repro.obs.flight): deterministic capture of the
+    # engine's nondeterministic inputs (submissions + clock reads) and
+    # resulting decisions for bit-identical incident replay.  The engine
+    # attaches it at construction (wrapping its injected clock); None
+    # keeps every emit site to an `is not None` check.
+    flight: Optional[FlightRecorder] = None
 
     @property
     def enabled(self) -> bool:
         return (self.tracer is not None or self.events is not None
                 or self.annotate_dispatch or self.profiler is not None
-                or self.quality is not None)
+                or self.quality is not None or self.flight is not None)
 
     def annotate(self, name: str):
         """Context manager for one dispatch: a profiler TraceAnnotation
@@ -106,14 +114,17 @@ class Telemetry:
             self.tracer.export(self.trace_sink)
         if self.events is not None:
             self.events.close()
+        if self.flight is not None:
+            self.flight.close()
 
 
 NULL_TELEMETRY = Telemetry()
 
 __all__ = [
     "Telemetry", "NULL_TELEMETRY", "now", "to_wall",
+    "SystemClock", "SYSTEM_CLOCK", "ReplayClock", "ReplayDivergence",
     "SpanTracer", "validate_chrome_trace",
-    "EventLog",
+    "EventLog", "FlightRecorder",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "log_buckets",
     "engine_registry", "engine_exposition", "parse_exposition",
     "validate_exposition", "serve_metrics",

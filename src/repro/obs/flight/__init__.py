@@ -1,0 +1,333 @@
+"""``repro.obs.flight`` — deterministic capture of serving incidents.
+
+The engine is a deterministic state machine over two nondeterministic
+input streams: request submissions and clock observations.  The repo's
+bit-identity gates (cache-hit == cold prefill, rollback == never-
+drafted, resume == never-preempted) mean that feeding both streams back
+verbatim reproduces every runtime decision — which rung the controller
+picked, when spec decoding switched gamma, who got preempted — and
+every served token, bit for bit.  The :class:`FlightRecorder` is the
+capture side of that invariant; ``repro.obs.flight.replay`` is the
+re-drive side.
+
+One ordered JSONL stream of records:
+
+* ``header`` — schema version, engine config fingerprint, ladder
+  artifact fingerprint, and caller-supplied reconstruction metadata
+  (arch / seed / ladder path) so the replay CLI can rebuild the engine.
+* ``clock`` — one record per engine clock read (``t`` plus the
+  consuming call-site tag ``s``), captured by wrapping the engine's
+  injected clock (``repro.obs.clock``).
+* ``submit`` — the raw arguments of each ``Engine.submit`` call (token
+  ids, budget, priority, tenant, deadline, explicit-or-derived arrival).
+* ``decision`` — every resulting runtime decision (rung / gamma /
+  drafter switches, preemptions, resumes, rejects, prefix evictions,
+  saliency-drift edges), recorded for verification on replay.
+* ``finish`` — each request's terminal record: finish reason, the full
+  token stream, and the per-token rung residency — the payload replay
+  gates bit-identity against.
+
+Black-box mode: records land in a bounded in-memory ring (zero-cost
+when the recorder is off — the engine's emit sites are ``is not None``
+checks, same standard as the rest of ``repro.obs``) and are written out
+only on a trigger: engine exception, SLO-breach escalation,
+``saliency_drift`` edge, SIGUSR1, or the gateway's
+``GET /v1/debug/flight``.  An optional full JSONL ``sink`` streams every
+record from the start — that file is *complete* and therefore
+replayable; a ring dump that overflowed the ring is marked
+``complete: false`` and the replay loader refuses it.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+# Flight recording format version; the replay loader gates on it.
+FLIGHT_SCHEMA_VERSION = 1
+
+# SLO-breach reasons that trigger a black-box dump: the controller
+# escalated because latency or queue pressure broke the objective.
+_SLO_BREACH_REASONS = ("tpot", "queue")
+
+
+def config_fingerprint(ecfg) -> str:
+    """Stable hash of an :class:`EngineConfig` — frozen dataclass reprs
+    are deterministic, and every field that shapes engine decisions is
+    in the repr."""
+    return hashlib.sha256(repr(ecfg).encode()).hexdigest()[:16]
+
+
+def params_fingerprint(params) -> str:
+    """Content hash of the model parameters.  Replay gates on it so a
+    reconstruction mismatch (different arch/seed, or nondeterministic
+    re-init) is diagnosed by name instead of surfacing as a token
+    divergence at index 0."""
+    import jax
+    import numpy as np
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(params):
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()[:16]
+
+
+def ladder_fingerprint(ladder) -> Optional[str]:
+    """Hash of a :class:`PolicyLadder`'s decision-relevant content:
+    budgets, per-rung policy reprs, and every sp-tree leaf's bytes.  Two
+    ladders with equal fingerprints drive the engine identically."""
+    if ladder is None:
+        return None
+    import jax
+    import numpy as np
+    h = hashlib.sha256()
+    h.update(repr(tuple(ladder.budgets)).encode())
+    for pol in ladder.policies:
+        h.update(repr(pol).encode())
+    for sp in ladder.sps:
+        for leaf in jax.tree_util.tree_leaves(sp):
+            arr = np.asarray(leaf)
+            h.update(str(arr.dtype).encode())
+            h.update(str(arr.shape).encode())
+            h.update(arr.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _config_to_dict(ecfg) -> dict:
+    """JSON-serializable EngineConfig image for the replay CLI.  The
+    policy itself is covered by the fingerprint; only whether it is
+    dense is recorded (non-dense fixed-policy engines need a factory,
+    see ``replay.py``)."""
+    out = {f: getattr(ecfg, f) for f in (
+        "max_slots", "max_len", "prefill_chunk", "prefill_dense_frac",
+        "prefill_strategy", "eos_id", "initial_rung", "prefix_cache",
+        "prefix_cache_tokens")}
+    out["policy_dense"] = ecfg.policy.is_dense
+    for name in ("slo", "spec", "scheduler"):
+        sub = getattr(ecfg, name)
+        out[name] = None if sub is None else dataclasses.asdict(sub)
+    return out
+
+
+class _RecordingClock:
+    """Wraps the engine's base clock: every read is logged to the
+    recorder (with its call-site tag) before being returned."""
+
+    __slots__ = ("_base", "_recorder")
+
+    def __init__(self, base, recorder: "FlightRecorder"):
+        self._base = base
+        self._recorder = recorder
+
+    def now(self, site: str = "") -> float:
+        t = self._base.now(site)
+        self._recorder._append({"k": "clock", "t": t, "s": site})
+        return t
+
+
+class FlightRecorder:
+    """Engine-boundary capture into a bounded ring (+ optional full
+    JSONL sink) with dump-on-trigger.
+
+    One recorder serves one engine: :meth:`attach_engine` (called by
+    the engine at construction when ``Telemetry.flight`` is set) writes
+    the header record and returns the recording clock wrapper the
+    engine must read time through.
+
+    ``capacity``   ring size in records (black-box retention window).
+    ``sink``       optional path: stream every record as JSONL from the
+                   start — the *complete* recording replay needs.
+    ``dump_dir``   where triggered ring dumps land
+                   (``flight-<reason>-<n>.jsonl``); None disables dumps.
+    ``max_dumps``  cap on triggered dumps per run (a flapping SLO must
+                   not fill the disk).
+    ``meta``       caller-supplied reconstruction info for the replay
+                   CLI (arch, reduced, seed, ladder_path, ...).
+    """
+
+    def __init__(self, capacity: int = 4096, sink: Optional[str] = None,
+                 dump_dir: Optional[str] = None, max_dumps: int = 16,
+                 meta: Optional[dict] = None):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        if max_dumps < 0:
+            raise ValueError(f"max_dumps must be >= 0, got {max_dumps}")
+        self.capacity = capacity
+        self.dump_dir = dump_dir
+        self.max_dumps = max_dumps
+        self.meta = dict(meta or {})
+        self._ring = collections.deque(maxlen=capacity)
+        self.count = 0
+        self.dumps: List[str] = []
+        self._header: Optional[dict] = None
+        self._attached = False
+        self._fh = None
+        self._sink_path = sink
+        if sink:
+            self._fh = open(sink, "w")
+
+    # ------------------------------------------------------------------
+    # wiring
+    # ------------------------------------------------------------------
+    def attach_engine(self, engine) -> _RecordingClock:
+        """Write the header record for ``engine`` and return the
+        recording clock it must read time through.  One engine per
+        recorder — the stream is a single totally-ordered history."""
+        if self._attached:
+            raise RuntimeError(
+                "FlightRecorder already attached: one recorder records "
+                "one engine's history")
+        self._attached = True
+        self._header = {
+            "k": "header",
+            "flight_schema_version": FLIGHT_SCHEMA_VERSION,
+            "config_fingerprint": config_fingerprint(engine.ecfg),
+            "params_fingerprint": params_fingerprint(engine.params),
+            "ladder_fingerprint": ladder_fingerprint(engine.ladder),
+            "num_rungs": engine.num_rungs,
+            "ecfg": _config_to_dict(engine.ecfg),
+            "meta": self.meta,
+        }
+        self._append(self._header)
+        return _RecordingClock(engine.clock, self)
+
+    @property
+    def dropped(self) -> int:
+        """Records evicted from the ring (0 ⇔ the ring alone still
+        holds the complete history)."""
+        return max(0, self.count - self.capacity)
+
+    # ------------------------------------------------------------------
+    # record kinds
+    # ------------------------------------------------------------------
+    def _append(self, rec: dict) -> None:
+        self._ring.append(rec)
+        self.count += 1
+        if self._fh is not None:
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+
+    def record_submit(self, prompt, max_new_tokens: int, eos_id,
+                      arrival_time, priority, tenant: str,
+                      queue_deadline_s) -> None:
+        """The raw ``Engine.submit`` arguments, recorded *before* the
+        admission decision and before any clock read the call makes —
+        so the stream order is submit-intent, then its clock reads,
+        then the decision, and the replay driver can re-issue the call
+        verbatim."""
+        self._append({
+            "k": "submit",
+            "prompt": [int(t) for t in prompt],
+            "max_new_tokens": int(max_new_tokens),
+            "eos_id": None if eos_id is None else int(eos_id),
+            "arrival_time": None if arrival_time is None
+            else float(arrival_time),
+            "priority": int(priority),
+            "tenant": tenant,
+            "queue_deadline_s": None if queue_deadline_s is None
+            else float(queue_deadline_s),
+        })
+
+    def decision(self, kind: str, **fields) -> None:
+        """A runtime decision (rung_switch, preempt, resume, reject,
+        gamma_switch, drafter_switch, prefix_evict, saliency_drift...).
+        Recorded for replay verification; SLO-breach escalations and
+        saliency-drift edges additionally trigger a black-box dump."""
+        rec = {"k": "decision", "kind": kind}
+        rec.update(fields)
+        self._append(rec)
+        if kind == "rung_switch" \
+                and fields.get("reason") in _SLO_BREACH_REASONS \
+                and fields.get("to_rung", 0) > fields.get("from_rung", 0):
+            self.dump("slo_breach")
+        elif kind == "saliency_drift":
+            self.dump("saliency_drift")
+
+    def finish(self, request_id: int, reason: Optional[str],
+               tokens: List[int], token_rungs: List[int]) -> None:
+        """A request's terminal record — the bit-identity payload."""
+        self._append({
+            "k": "finish", "request": int(request_id), "reason": reason,
+            "tokens": [int(t) for t in tokens],
+            "token_rungs": [int(r) for r in token_rungs],
+        })
+
+    # ------------------------------------------------------------------
+    # dump-on-trigger
+    # ------------------------------------------------------------------
+    def dump(self, reason: str) -> Optional[str]:
+        """Write the ring's current contents to
+        ``dump_dir/flight-<reason>-<n>.jsonl``.  First line is a dump
+        prologue naming the trigger and whether the ring still holds
+        the complete history (the replay loader refuses incomplete
+        dumps).  Returns the path, or None when dumping is disabled or
+        the per-run cap is reached."""
+        if self.dump_dir is None or len(self.dumps) >= self.max_dumps:
+            return None
+        os.makedirs(self.dump_dir, exist_ok=True)
+        path = os.path.join(
+            self.dump_dir, f"flight-{reason}-{len(self.dumps)}.jsonl")
+        records = list(self._ring)          # snapshot; GIL-atomic enough
+        #                                     for the signal/HTTP readers
+        with open(path, "w") as f:
+            f.write(json.dumps({
+                "k": "dump", "reason": reason, "count": self.count,
+                "retained": len(records),
+                "complete": self.dropped == 0}) + "\n")
+            for rec in records:
+                f.write(json.dumps(rec) + "\n")
+        self.dumps.append(path)
+        return path
+
+    def debug_snapshot(self) -> Dict[str, Any]:
+        """Ring contents + counters for the gateway's
+        ``GET /v1/debug/flight`` (cross-thread read of a bounded deque —
+        the same torn-read stance as ``/metrics``)."""
+        return {
+            "flight_schema_version": FLIGHT_SCHEMA_VERSION,
+            "count": self.count,
+            "retained": len(self._ring),
+            "dropped": self.dropped,
+            "complete": self.dropped == 0,
+            "sink": self._sink_path,
+            "dumps": list(self.dumps),
+            "records": list(self._ring),
+        }
+
+    def records(self, kind: Optional[str] = None) -> List[dict]:
+        """Retained records, oldest first, optionally filtered by ``k``."""
+        if kind is None:
+            return list(self._ring)
+        return [r for r in self._ring if r.get("k") == kind]
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Seal the sink with an end record (replay uses it to assert
+        the stream wasn't truncated mid-write).  Idempotent."""
+        if self._fh is not None:
+            self._fh.write(json.dumps(
+                {"k": "end", "count": self.count, "complete": True}) + "\n")
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "FlightRecorder":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+__all__ = [
+    "FLIGHT_SCHEMA_VERSION", "FlightRecorder",
+    "config_fingerprint", "params_fingerprint", "ladder_fingerprint",
+]
+
+# re-exported for symmetric import ergonomics with the capture side
+from repro.obs.clock import ReplayClock, ReplayDivergence  # noqa: E402
+
+__all__ += ["ReplayClock", "ReplayDivergence"]

@@ -300,6 +300,14 @@ def engine_registry(engine) -> MetricsRegistry:
                                "seconds queued before admission")
         reg.register_histogram("repro_preempted_seconds", s.preempted_hist,
                                "seconds suspended before resume")
+    fr = getattr(getattr(engine, "obs", None), "flight", None)
+    if fr is not None:
+        c("repro_flight_records_total", fr.count,
+          "records captured by the flight recorder")
+        c("repro_flight_dropped_total", fr.dropped,
+          "records evicted from the flight ring (0 = ring-replayable)")
+        c("repro_flight_dumps_total", len(fr.dumps),
+          "triggered black-box dumps written")
     q = getattr(getattr(engine, "obs", None), "quality", None)
     if q is not None and q.armed:
         # per-rung families are name-suffixed: the registry renders

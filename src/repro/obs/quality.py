@@ -548,6 +548,13 @@ class QualityMonitor:
                     tr.instant("saliency_drift", t=t, tid=QUALITY_TID,
                                block=d, rung=rung,
                                overlap=round(ewma, 4))
+                fr = engine.obs.flight
+                if fr is not None:
+                    # drift edge is a black-box trigger (see
+                    # FlightRecorder.decision)
+                    fr.decision("saliency_drift", block=d, rung=rung,
+                                overlap=round(ewma, 4),
+                                threshold=cfg.drift_threshold)
             self._drifting[key] = below
         self._update_pressure(rung)
 

@@ -125,7 +125,11 @@ _CHUNKABLE_MIXERS = ("attn", "global")
 # quality_recon_vs_baseline, quality_drift_events, quality_pressure) when
 # a QualityMonitor is armed, and quality_deescalations in the controller
 # section when SLOConfig.quality_aware is set.
-SNAPSHOT_SCHEMA_VERSION = 6
+# v7: adds the flight-recorder fields (flight_records, flight_dropped,
+# flight_dumps) when a FlightRecorder is armed; "t" is documented as an
+# out-of-band wall read (never part of a flight recording's replayed
+# clock stream).
+SNAPSHOT_SCHEMA_VERSION = 7
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,7 +212,7 @@ class EngineConfig:
 class Engine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
                  sp=None, *, ladder: Optional[PolicyLadder] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None, clock=None):
         if cfg.family in ("encdec", "vlm"):
             raise NotImplementedError(
                 f"serving engine supports token-only models, not {cfg.family}")
@@ -254,6 +258,19 @@ class Engine:
             (pol.for_phase("prefill_dense"), pol.for_phase("prefill_sparse"),
              pol.for_phase("decode")) for pol in self._rung_policies]
         self._rung = ecfg.initial_rung if ladder is not None else 0
+        # injected clock: every engine time read goes through
+        # self.clock.now(site).  Default is the shared SYSTEM_CLOCK
+        # singleton (`is`-identity testable, zero-cost); a flight
+        # recorder wraps it so each observation is captured, and replay
+        # substitutes a ReplayClock feeding recorded stamps back.
+        if clock is None:
+            clock = obs.SYSTEM_CLOCK
+        elif not hasattr(clock, "now"):
+            raise TypeError(
+                f"clock must expose now(site), got {type(clock)!r}")
+        self.clock = clock
+        if self.obs.flight is not None:
+            self.clock = self.obs.flight.attach_engine(self)
         self.controller = None
         if ecfg.slo is not None:
             self.controller = AdaptiveController(
@@ -610,6 +627,13 @@ class Engine:
         if queue_deadline_s is not None and queue_deadline_s <= 0:
             raise ValueError(
                 f"queue_deadline_s must be positive, got {queue_deadline_s}")
+        fr = self.obs.flight
+        if fr is not None:
+            # submit-intent first, then its clock read(s), then the
+            # decision — the replay driver re-issues the call verbatim
+            # when it meets this record at the shared cursor
+            fr.record_submit(prompt, max_new_tokens, eos_id, arrival_time,
+                             priority, tenant, queue_deadline_s)
         if not self.scheduler.can_accept():
             self.stats.rejected += 1
             retry = self._retry_after()
@@ -618,13 +642,18 @@ class Engine:
                     "reject", reason="queue_full",
                     queue_depth=self.scheduler.queue_depth,
                     retry_after_s=round(retry, 3))
+            if fr is not None:
+                fr.decision("reject", reason="queue_full",
+                            queue_depth=self.scheduler.queue_depth,
+                            retry_after_s=round(retry, 3))
             raise QueueFull(
                 f"admission queue at capacity "
                 f"({self.scheduler.cfg.max_queue})", retry_after=retry)
         max_new = min(max_new_tokens, self.ecfg.max_len - prompt.size)
         req = Request(self._next_id, prompt, max_new,
                       eos_id if eos_id is not None else self.ecfg.eos_id,
-                      self._now() if arrival_time is None else arrival_time,
+                      self._now("submit.arrival") if arrival_time is None
+                      else arrival_time,
                       priority=priority, tenant=tenant,
                       queue_deadline_s=queue_deadline_s)
         self._next_id += 1
@@ -693,7 +722,7 @@ class Engine:
         is full.  Runs before every phase step, i.e. always at a
         committed KV boundary (see the module docstring)."""
         sched = self.scheduler
-        now = self._now()
+        now = self._now("admit.sweep")
         for rs in sched.expire(now):
             self._expire(rs, now)
         while True:
@@ -732,6 +761,13 @@ class Engine:
         if self.obs.tracer is not None:
             self.obs.tracer.instant(
                 "expire", tid=req.request_id + 1, waited_s=waited)
+        fr = self.obs.flight
+        if fr is not None:
+            fr.decision("reject", reason="deadline", request=req.request_id,
+                        waited_s=round(waited, 4),
+                        deadline_s=req.queue_deadline_s)
+            fr.finish(req.request_id, rs.finish_reason.value,
+                      rs.tokens, rs.token_rungs)
         rs.finished()
 
     def _admit_queued(self, rs: RequestState, now: float) -> None:
@@ -753,7 +789,7 @@ class Engine:
         trace) and free the slot.  Admission-boundary only: the slot's
         KV length equals the victim's committed position, which is what
         makes the later resume bit-identical."""
-        t = self._now()
+        t = self._now("preempt")
         req = victim.request
         slot = victim.slot
         seg = self.pool.suspend(slot, self.ecfg.prefill_chunk)
@@ -779,13 +815,18 @@ class Engine:
             self.obs.tracer.instant(
                 "preempt", t=t, tid=req.request_id + 1, slot=slot,
                 kv_length=seg.length)
+        fr = self.obs.flight
+        if fr is not None:
+            fr.decision("preempt", request=req.request_id, slot=slot,
+                        kv_length=seg.length,
+                        tokens_done=len(victim.tokens))
 
     def _resume(self, rs: RequestState) -> None:
         """Restore a suspended request into a freshly allocated slot:
         write the host-side segment back (same precompiled executable
         set) and rejoin the decoding set at the exact committed
         position — generation continues bit-identically."""
-        t = self._now()
+        t = self._now("resume")
         req = rs.request
         slot = self.pool.alloc()
         self.pool.resume(rs.suspended, slot)
@@ -810,6 +851,10 @@ class Engine:
             self.obs.tracer.instant(
                 "resume", t=t, tid=req.request_id + 1, slot=slot,
                 kv_length=kv_length)
+        fr = self.obs.flight
+        if fr is not None:
+            fr.decision("resume", request=req.request_id, slot=slot,
+                        kv_length=kv_length)
 
     # ------------------------------------------------------------------
     # phases
@@ -836,7 +881,7 @@ class Engine:
         weights = np.zeros((C,), np.float32)
         weights[:real] = 1.0
         policy = self._phase_policy(off, req.prompt_len)
-        t0 = self._now()
+        t0 = self._now("prefill_chunk.t0")
         with self.obs.annotate("repro/prefill_chunk"):
             logits, self.pool.caches = self._cstep(
                 self.params, jnp.asarray(chunk),
@@ -844,7 +889,7 @@ class Engine:
                 jnp.int32(rs.slot), self.pool.caches, self.sp,
                 jnp.asarray(weights), policy=policy)
             logits.block_until_ready()
-        t1 = self._now()
+        t1 = self._now("prefill_chunk.t1")
         dt = t1 - t0
         self.stats.prefill_time += dt
         self.stats.observe_prefill_step(dt)
@@ -872,12 +917,12 @@ class Engine:
         # accuracy choice, matching the legacy serve path)
         pd, ps, _ = self._rung_phases[self._rung]
         policy = ps if self.ecfg.prefill_dense_frac <= 0.0 else pd
-        t0 = self._now()
+        t0 = self._now("prefill_whole.t0")
         with self.obs.annotate("repro/prefill_whole"):
             logits, caches = self._pstep(self.params, jnp.asarray(tokens),
                                          self.sp, policy=policy)
             logits.block_until_ready()
-        t1 = self._now()
+        t1 = self._now("prefill_whole.t1")
         dt = t1 - t0
         self.stats.prefill_time += dt
         self.stats.observe_prefill_step(dt)
@@ -894,7 +939,7 @@ class Engine:
             self._start_decode(rs, int(first[b]))
 
     def _start_decode(self, rs: RequestState, first_token: int) -> None:
-        rs.first_token_time = self._now()
+        rs.first_token_time = self._now("first_token")
         rs.last_token_time = rs.first_token_time
         self.stats.observe_ttft(
             rs.first_token_time - rs.request.arrival_time)
@@ -930,14 +975,14 @@ class Engine:
         probe = None
         if q is not None and q.should_probe():
             probe = q.run_probe(self, tokens, positions, active)
-        t0 = self._now()
+        t0 = self._now("decode.t0")
         with self.obs.annotate("repro/decode"):
             logits, self.pool.caches = self._dstep(
                 self.params, jnp.asarray(tokens), jnp.asarray(positions),
                 self.pool.caches, self.sp, jnp.asarray(active),
                 policy=dec_policy)
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        t1 = self._now()
+        t1 = self._now("decode.t1")
         self.stats.decode_time += t1 - t0
         self.stats.observe_decode_step(t1 - t0)
         self.stats.decode_steps += 1
@@ -988,6 +1033,12 @@ class Engine:
                     self.obs.tracer.instant(
                         "rung_switch", t=t1, from_rung=old,
                         to_rung=new_rung, reason=reason)
+                fr = self.obs.flight
+                if fr is not None:
+                    fr.decision("rung_switch", from_rung=old,
+                                to_rung=new_rung, reason=reason,
+                                controller_step=self.controller.step,
+                                queue_depth=self.scheduler.queue_depth)
 
     def _maybe_finish(self, rs: RequestState, token: int) -> None:
         req = rs.request
@@ -997,13 +1048,17 @@ class Engine:
             rs.finish_reason = FinishReason.MAX_TOKENS
         else:
             return
-        rs.finish_time = self._now()
+        rs.finish_time = self._now("finish")
         if self.obs.tracer is not None:
             self.obs.tracer.instant(
                 "finish", t=rs.finish_time,
                 tid=req.request_id + 1, slot=rs.slot,
                 reason=rs.finish_reason.value,
                 tokens=len(rs.tokens))
+        fr = self.obs.flight
+        if fr is not None:
+            fr.finish(req.request_id, rs.finish_reason.value,
+                      rs.tokens, rs.token_rungs)
         self.scheduler.finish(rs)
         self.pool.free(rs.slot)
         self.stats.finished += 1
@@ -1018,7 +1073,9 @@ class Engine:
         s = self.stats
         out = {
             "schema_version": SNAPSHOT_SCHEMA_VERSION,
-            "t": self._now(),
+            # raw out-of-band read, NOT self._now(): observability reads
+            # must never consume records from a ReplayClock stream
+            "t": obs.now(),
             "queue_depth": self.scheduler.queue_depth,
             "occupancy": self.pool.num_occupied,
             "submitted": s.submitted,
@@ -1061,6 +1118,11 @@ class Engine:
                 out["telemetry_spans"] = len(self.obs.tracer.events)
         if self.obs.quality is not None and self.obs.quality.armed:
             out.update(self.obs.quality.snapshot())
+        if self.obs.flight is not None:
+            fr = self.obs.flight
+            out["flight_records"] = fr.count
+            out["flight_dropped"] = fr.dropped
+            out["flight_dumps"] = len(fr.dumps)
         return out
 
     # ------------------------------------------------------------------
@@ -1095,13 +1157,19 @@ class Engine:
         return self
 
     def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is not None and self.obs.flight is not None:
+            # black-box trigger: the driving loop died — dump the ring
+            # before the sinks close so the incident is capturable
+            self.obs.flight.dump("exception")
         self.close()
         return False
 
     # ------------------------------------------------------------------
-    @staticmethod
-    def _now() -> float:
-        return obs.now()
+    def _now(self, site: str = "") -> float:
+        """One engine clock read, tagged with its consuming call site —
+        the flight recorder logs the tag next to each observation so a
+        replay divergence names the exact site that desynchronized."""
+        return self.clock.now(site)
 
     @property
     def decode_traces(self) -> int:

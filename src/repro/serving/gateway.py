@@ -17,6 +17,9 @@ the engine loop in a background thread and exposes:
   suspended count, rung).
 * ``GET /metrics`` — the engine's Prometheus text exposition
   (``repro.obs.metrics.engine_exposition``).
+* ``GET /v1/debug/flight`` — the flight recorder's ring contents +
+  counters (404 when no recorder is armed); also triggers a black-box
+  dump when the recorder has a dump dir (``repro.obs.flight``).
 
 Threading model: exactly one background thread touches the engine — it
 drains a thread-safe submission queue, then calls ``engine.step()``
@@ -222,6 +225,23 @@ class Gateway:
                 writer.write(self._response(
                     200, "OK", self.engine.metrics_exposition().encode(),
                     content_type="text/plain; version=0.0.4"))
+                await writer.drain()
+            elif method == "GET" and path == "/v1/debug/flight":
+                fr = self.engine.obs.flight
+                if fr is None:
+                    writer.write(self._json_response(
+                        404, "Not Found",
+                        {"error": "no flight recorder armed "
+                                  "(serve with --flight-record)"}))
+                else:
+                    # cross-thread snapshot of a bounded deque — same
+                    # torn-read stance as /metrics; also a black-box
+                    # dump trigger when a dump dir is configured
+                    snap = fr.debug_snapshot()
+                    dump_path = fr.dump("http")
+                    if dump_path is not None:
+                        snap["dump_path"] = dump_path
+                    writer.write(self._json_response(200, "OK", snap))
                 await writer.drain()
             elif method == "POST" and path == "/v1/generate":
                 await self._generate(writer, body)

@@ -194,7 +194,7 @@ class SpecDecoder:
         # the argmax chain stays on device (each draft feeds the next
         # without a host round-trip); one block per phase keeps the
         # draft/verify latency split honest without per-step syncs
-        t0 = eng._now()
+        t0 = eng._now("spec.t0")
         with eng.obs.annotate("repro/spec_draft"):
             act = jnp.asarray(active)
             toks = jnp.asarray(cur)
@@ -207,7 +207,7 @@ class SpecDecoder:
                 draft_cols.append(toks)
             drafts_dev = jnp.stack(draft_cols, axis=1)         # (S, g)
             drafts_dev.block_until_ready()
-        t1 = eng._now()
+        t1 = eng._now("spec.t1")
 
         # --- verify: one batched (g+1)-token forward ---------------------
         with eng.obs.annotate("repro/spec_verify"):
@@ -220,7 +220,7 @@ class SpecDecoder:
                 policy=ver_pol)
             ver = np.asarray(jnp.argmax(logits, axis=-1))      # (S, g+1)
             drafts = np.asarray(drafts_dev)
-        t2 = eng._now()
+        t2 = eng._now("spec.t2")
 
         stats = eng.stats
         stats.spec_rounds += 1
@@ -264,7 +264,7 @@ class SpecDecoder:
             commits[slot] = (rs, cand[:m], n_acc)
         with eng.obs.annotate("repro/spec_rollback"):
             eng.pool.rollback_many(rollbacks)
-        t3 = eng._now()
+        t3 = eng._now("spec.t3")
         # the round's decode cost includes the rollback dispatch — it is
         # real per-round work plain decode doesn't pay
         stats.decode_time += t3 - t0
@@ -316,6 +316,14 @@ class SpecDecoder:
                     tracer.instant(
                         "spec_switch", t=t3, gamma=self.gamma,
                         drafter_rung=self.drafter_rung, reason=reason)
+                fr = eng.obs.flight
+                if fr is not None:
+                    fr.decision(
+                        "gamma_switch" if self.gamma != old_g
+                        else "drafter_switch",
+                        from_gamma=old_g, to_gamma=self.gamma,
+                        from_drafter=old_d, to_drafter=self.drafter_rung,
+                        reason=reason)
         else:
             a = self.scfg.accept_ewma_alpha
             self._accept_ewma = frac if self._accept_ewma is None else \

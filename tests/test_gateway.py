@@ -143,6 +143,44 @@ def test_metrics_exposition_validates(gateway):
         assert name in text
 
 
+def test_debug_flight_404_without_recorder(gateway):
+    _, _, port = gateway
+    status, _, body = _request(port, "GET", "/v1/debug/flight")
+    assert status == 404
+    assert "flight-record" in json.loads(body)["error"]
+
+
+def test_debug_flight_serves_ring_and_dumps(model, tmp_path):
+    """With a recorder armed the endpoint returns the ring snapshot and
+    triggers an http-reason black-box dump on every hit."""
+    from repro.obs import Telemetry
+    from repro.obs.flight import FLIGHT_SCHEMA_VERSION, FlightRecorder
+
+    params, cfg = model
+    fr = FlightRecorder(dump_dir=str(tmp_path / "dumps"))
+    eng = Engine(params, cfg,
+                 EngineConfig(max_slots=2, max_len=32, prefill_chunk=8),
+                 None, telemetry=Telemetry(flight=fr))
+    gw = Gateway(eng, port=0)
+    port = gw.start()
+    try:
+        status, _, body = _request(port, "POST", "/v1/generate", {
+            "prompt": _prompts(cfg, 1, 8)[0].tolist(),
+            "max_new_tokens": 4})
+        assert status == 200
+        status, _, body = _request(port, "GET", "/v1/debug/flight")
+        assert status == 200
+        snap = json.loads(body)
+        assert snap["flight_schema_version"] == FLIGHT_SCHEMA_VERSION
+        assert snap["count"] > 0 and snap["complete"]
+        kinds = {r["k"] for r in snap["records"]}
+        assert {"header", "submit", "clock", "finish"} <= kinds
+        assert snap["dump_path"].endswith("flight-http-0.jsonl")
+        assert (tmp_path / "dumps" / "flight-http-0.jsonl").exists()
+    finally:
+        gw.stop()
+
+
 def test_concurrent_metrics_scrapes_under_decode(gateway, model):
     """GET /metrics from several threads while a generation is decoding:
     every scrape returns a valid exposition and the generation finishes
@@ -292,6 +330,13 @@ def test_reset_ids_gives_fresh_namespace(model):
      "quality-drift-threshold must be in"),
     (["--quality-probe-rate", "0.5", "--quality-drift-threshold", "0.0"],
      "quality-drift-threshold must be in"),
+    (["--flight-record", "f.jsonl", "--flight-ring", "0"],
+     "--flight-ring must be > 0"),
+    (["--flight-record", "f.jsonl", "--flight-ring", "-8"],
+     "--flight-ring must be > 0"),
+    (["--flight-ring", "1024"], "needs --flight-record"),
+    (["--flight-dump-dir", "/tmp"], "needs --flight-record"),
+    (["--flight-record", "f.jsonl", "--legacy"], "engine path"),
 ])
 def test_serve_cli_rejects_bad_flags(argv, msg):
     args = build_parser().parse_args(argv)
@@ -299,14 +344,27 @@ def test_serve_cli_rejects_bad_flags(argv, msg):
         validate_args(args)
 
 
-def test_serve_cli_accepts_good_flags():
+def test_serve_cli_flight_dump_dir_must_be_writable_dir(tmp_path):
+    not_dir = tmp_path / "plainfile"
+    not_dir.write_text("x")
+    args = build_parser().parse_args(
+        ["--flight-record", "f.jsonl", "--flight-dump-dir", str(not_dir)])
+    with pytest.raises(SystemExit, match="not a directory"):
+        validate_args(args)
+
+
+def test_serve_cli_accepts_good_flags(tmp_path):
     for argv in ([], ["--gateway", "--max-queue", "8", "--preemption"],
                  ["--ladder", "x.npz", "--rung", "1"],
                  ["--ladder", "x.npz", "--spec-gamma", "2",
                   "--spec-drafter", "1"],
                  ["--quality-probe-rate", "0.25"],
                  ["--quality-probe-rate", "1.0",
-                  "--quality-drift-threshold", "0.3"]):
+                  "--quality-drift-threshold", "0.3"],
+                 ["--flight-record"],          # bounded ring, no sink
+                 ["--flight-record", "f.jsonl", "--flight-ring", "1024",
+                  "--flight-dump-dir", str(tmp_path)],
+                 ["--gateway", "--flight-record", "f.jsonl"]):
         validate_args(build_parser().parse_args(argv))
 
 

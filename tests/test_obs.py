@@ -244,6 +244,65 @@ def test_event_log_sink_rotation_preserves_ring(tmp_path):
         EventLog(sink=str(sink), max_sink_bytes=-1)
 
 
+def test_event_log_rotation_boundary_exact(tmp_path):
+    """Rotation happens strictly *before* the write that would overflow
+    the budget: no line is ever split across the rotation, a write that
+    lands exactly at the cap does not rotate, and every event appears
+    exactly once across <path>.1 + <path>."""
+    sink = tmp_path / "events.jsonl"
+    # fixed-width payloads (explicit t) make every line the same length
+    with EventLog(capacity=256, sink=str(sink)) as probe:
+        probe.emit("e", t=0.0, i="0000")
+    line_len = len((tmp_path / "events.jsonl").read_bytes())
+
+    sink = tmp_path / "boundary.jsonl"
+    rotated = tmp_path / "boundary.jsonl.1"
+    with EventLog(capacity=256, sink=str(sink),
+                  max_sink_bytes=3 * line_len) as ev:
+        for i in range(3):                      # fills the file exactly
+            ev.emit("e", t=0.0, i=f"{i:04d}")
+        assert ev.sink_rotations == 0           # at the cap, not over it
+        assert sink.stat().st_size == 3 * line_len
+        ev.emit("e", t=0.0, i="0003")           # would overflow: rotates
+        assert ev.sink_rotations == 1
+        assert rotated.stat().st_size == 3 * line_len
+        assert sink.stat().st_size == line_len  # whole line, new file
+        for i in range(4, 9):                   # drive a second rotation
+            ev.emit("e", t=0.0, i=f"{i:04d}")
+        assert ev.sink_rotations == 2
+
+    # both files parse end to end; the union is a contiguous, duplicate-
+    # free tail (earlier history was dropped with the replaced .1 —
+    # the documented disk budget, never a torn or double-written line)
+    tail = [json.loads(ln)["i"] for ln in
+            rotated.read_text().splitlines() + sink.read_text().splitlines()]
+    assert tail == [f"{i:04d}" for i in range(9 - len(tail), 9)]
+    assert len(set(tail)) == len(tail)
+    # the ring still holds everything, unaffected by disk rotation
+    assert [e["i"] for e in ev.events("e")] == [f"{i:04d}" for i in range(9)]
+
+
+def test_event_log_oversized_line_still_recorded(tmp_path):
+    """A single event bigger than the whole byte budget is still
+    written intact (rotated onto a fresh file that then exceeds the
+    cap) — bounding disk truncates history (older lines leave with the
+    replaced ``.1``), never an individual line."""
+    sink = tmp_path / "big.jsonl"
+    with EventLog(capacity=8, sink=str(sink), max_sink_bytes=64) as ev:
+        ev.emit("small", t=0.0, i=0)
+        ev.emit("big", t=0.0, blob="x" * 300)   # rotates, then overflows
+        ev.emit("small", t=0.0, i=1)            # rotates the big line out
+    assert ev.sink_rotations == 2
+    lines = [json.loads(ln) for ln in
+             (tmp_path / "big.jsonl.1").read_text().splitlines()
+             + sink.read_text().splitlines()]
+    # the disk holds a contiguous tail with the oversized line whole
+    assert [e["kind"] for e in lines] == ["big", "small"]
+    assert len(lines[0]["blob"]) == 300 and lines[1]["i"] == 1
+    # the ring saw everything regardless
+    assert [e["kind"] for e in ev.events()] == ["small", "big", "small"]
+
+
 # ---------------------------------------------------------------------------
 # null path
 # ---------------------------------------------------------------------------
@@ -319,10 +378,12 @@ def test_telemetry_parity_and_artifacts(model, tmp_path):
     tel.close()
 
     # snapshot v4+ fields (v5 added the admission/preemption block,
-    # v6 the quality-probe block — absent here: no QualityMonitor armed)
+    # v6 the quality-probe block, v7 the flight block — both absent
+    # here: no QualityMonitor or FlightRecorder armed)
     snap = e1.snapshot()
-    assert snap["schema_version"] == 6
+    assert snap["schema_version"] == 7
     assert "quality_probes" not in snap
+    assert "flight_records" not in snap
     assert snap["telemetry_spans"] == len(tel.tracer.events)
     assert snap["tpot_p95_s"] >= snap["tpot_p50_s"]
     assert "tpot_p95_window_s" in snap

@@ -84,7 +84,7 @@ def test_null_path_off_by_default(model):
     eng.submit(_prompts(cfg, 1, 8)[0], 3)
     eng.run()
     snap = eng.snapshot()
-    assert snap["schema_version"] == 6
+    assert snap["schema_version"] == 7
     assert not any(k.startswith("quality_") for k in snap)
     assert eng.probe_retraces_after_warmup is None
     assert "repro_quality_probes_total" not in eng.metrics_exposition()
@@ -119,7 +119,7 @@ def test_probe_parity_dense_agreement_and_roofline(model, ladder):
     assert eng.decode_retraces_after_warmup == 0
 
     snap = eng.snapshot()
-    assert snap["schema_version"] == 6
+    assert snap["schema_version"] == 7
     assert snap["quality_probes"] == q.probes
     assert snap["quality_agreement_mean"] == 1.0
     assert snap["quality_topk_overlap_mean"] >= 0.75
