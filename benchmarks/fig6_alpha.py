@@ -14,7 +14,7 @@ def run(log=print):
               for p in ctx.keys_by_depth[d]}
     alphas = alpha_search.search_all_alphas(ctx, ratios, coord_passes=1)
     by_proj = {}
-    for (d, path), a in alphas.items():
+    for (_d, path), a in alphas.items():
         by_proj.setdefault(path, []).append(a)
     rows = []
     for path, vals in sorted(by_proj.items()):

@@ -291,7 +291,7 @@ def run(log=print, modes=("off", "topk_shared", "topk_block", "mixed"),
 
     results = {m: 0.0 for m in scenarios}
     best = {}
-    for rep in range(reps):
+    for _rep in range(reps):
         for mode in scenarios:
             engine = engines[mode]
             engine.stats = EngineStats()
@@ -628,7 +628,7 @@ def run_telemetry(log=print, cfg=None, n_requests=12, rate_hz=8.0,
 
     ratio = results["telemetry"] / results["plain"]
     retraces = engines["telemetry"].decode_retraces_after_warmup
-    for mode, eng in engines.items():
+    for mode, _eng in engines.items():
         log(f"{mode:10s} decode {results[mode]:7.1f} tok/s")
         rows.append((f"serving/telemetry/decode_tps/{mode}", 0.0,
                      f"{results[mode]:.1f}tok/s"))
@@ -879,7 +879,7 @@ def run_gateway(log=print, cfg=None, n_bulk=4, n_interactive=6,
 
     best = {}
     total_preemptions = 0
-    for rep in range(reps):
+    for _rep in range(reps):
         rep_states = {}
         for mode, eng in engines.items():
             eng.stats = EngineStats()
@@ -1031,7 +1031,7 @@ def run_spec(log=print, cfg=None, sparsity=0.5, gamma=2, gammas=(1, 2, 3),
     # interleaved best-of reps, same drift-cancelling protocol as run()
     results = {m: 0.0 for m in scenarios}
     best = {}
-    for rep in range(reps):
+    for _rep in range(reps):
         for mode, engine in scenarios.items():
             engine.stats = EngineStats()
             states = replay(engine, prompts, arrivals, gen_tokens)

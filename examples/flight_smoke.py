@@ -30,6 +30,8 @@ import time
 import urllib.error
 import urllib.request
 
+from repro.obs.clock import now
+
 STARTUP_TIMEOUT_S = 300.0
 DRAIN_TIMEOUT_S = 120.0
 REPLAY_TIMEOUT_S = 300.0
@@ -43,7 +45,7 @@ def free_port() -> int:
 
 def wait_healthy(port: int, deadline: float) -> None:
     url = f"http://127.0.0.1:{port}/v1/health"
-    while time.monotonic() < deadline:
+    while now() < deadline:
         try:
             with urllib.request.urlopen(url, timeout=2) as resp:
                 health = json.load(resp)
@@ -95,7 +97,7 @@ def main() -> None:
          "--flight-record", recording, "--flight-ring", "32768",
          "--flight-dump-dir", dump_dir])
     try:
-        wait_healthy(port, time.monotonic() + STARTUP_TIMEOUT_S)
+        wait_healthy(port, now() + STARTUP_TIMEOUT_S)
 
         # two best-effort long generations fill both slots (1024 tokens
         # each keeps both decoding for seconds, so the interactive

@@ -29,6 +29,7 @@ import urllib.error
 import urllib.request
 
 from repro.obs import validate_exposition
+from repro.obs.clock import now
 
 STARTUP_TIMEOUT_S = 300.0
 DRAIN_TIMEOUT_S = 120.0
@@ -42,7 +43,7 @@ def free_port() -> int:
 
 def wait_healthy(port: int, deadline: float) -> None:
     url = f"http://127.0.0.1:{port}/v1/health"
-    while time.monotonic() < deadline:
+    while now() < deadline:
         try:
             with urllib.request.urlopen(url, timeout=2) as resp:
                 health = json.load(resp)
@@ -114,7 +115,7 @@ def main() -> None:
          "--prompt-len", "16", "--gen", "8", "--batch", "2",
          "--chunk", "8"])
     try:
-        wait_healthy(port, time.monotonic() + STARTUP_TIMEOUT_S)
+        wait_healthy(port, now() + STARTUP_TIMEOUT_S)
         stream_one(port, prompt=list(range(1, 9)), max_new=4)
         scrape_metrics(port)
     except BaseException:

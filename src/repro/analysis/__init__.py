@@ -1,0 +1,29 @@
+"""repro.analysis — static invariant checker for the serving stack.
+
+Enforces, at lint time, the correctness contracts the runtime gates
+only catch after the fact: clock unification (``no-raw-time``),
+process-stable persisted keys (``no-builtin-hash-persistence``),
+policy-not-thread-local serving state (``no-thread-local-serving``),
+zero-cost-when-off telemetry (``hot-path-zero-cost``), no Python
+branches on traced values (``traced-value-branch``), donation that
+actually takes and static args that actually hash (``jit-donation``,
+``jit-static-args``), and in-bounds Pallas launch geometry
+(``pallas-blockspec``).
+
+Run ``python -m repro.analysis --help``; suppress a single line with
+``# repro: ignore[rule-id]``; grandfather findings in
+``analysis-baseline.json`` (every entry needs a written justification).
+"""
+from repro.analysis.findings import (Baseline, BaselineError, Finding,
+                                     is_suppressed, parse_suppressions)
+from repro.analysis.registry import (AnalysisError, AstPass, GlobalPass,
+                                     ast_passes, find_repo_root,
+                                     global_passes, register,
+                                     run_ast_passes, run_global_passes)
+
+__all__ = [
+    "AnalysisError", "AstPass", "Baseline", "BaselineError", "Finding",
+    "GlobalPass", "ast_passes", "find_repo_root", "global_passes",
+    "is_suppressed", "parse_suppressions", "register", "run_ast_passes",
+    "run_global_passes",
+]

@@ -1,0 +1,538 @@
+"""AST passes: the repo's serving-correctness contracts, checked at lint time.
+
+Each pass encodes an invariant that was previously enforced only
+dynamically (by running the engine under pytest) or socially (by review).
+The rule ids are stable — they are what ``# repro: ignore[rule-id]``
+suppressions and the committed baseline reference.
+
+Rules:
+  * ``no-raw-time``            — all timestamps flow through ``repro.obs.clock``
+  * ``no-builtin-hash-persistence`` — salted ``hash()`` never feeds persisted state
+  * ``no-thread-local-serving``     — no ambient thread-local serving state
+  * ``hot-path-zero-cost``     — telemetry touch points guard with identity checks
+  * ``traced-value-branch``    — no Python control flow on traced values
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import AstPass, register
+
+
+def _dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """``a.b.c`` -> ("a", "b", "c"); None for non-name-rooted chains."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _snippet(source_lines: List[str], lineno: int) -> str:
+    if 1 <= lineno <= len(source_lines):
+        return source_lines[lineno - 1].strip()
+    return ""
+
+
+def _walk_with_parents(tree: ast.AST):
+    """Yield every node; each node gains a ``_repro_parent`` backlink."""
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._repro_parent = parent  # type: ignore[attr-defined]
+    return ast.walk(tree)
+
+
+def _parents(node: ast.AST):
+    while True:
+        node = getattr(node, "_repro_parent", None)
+        if node is None:
+            return
+        yield node
+
+
+# ---------------------------------------------------------------------------
+# no-raw-time
+# ---------------------------------------------------------------------------
+
+@register
+class NoRawTime(AstPass):
+    """Raw ``time.time/monotonic/perf_counter`` reads outside ``obs/clock.py``.
+
+    Every serving-path timestamp must flow through ``repro.obs.clock``
+    (``now()`` / an injected engine clock) or the flight recorder cannot
+    capture it and replay diverges — the invariant PR 9 established
+    (motivated by ``tests/test_flight.py`` replay bit-identity; this
+    pass promotes the old grep-lint there, and widens its scope from the
+    serving+obs trees to all of ``src/``, ``benchmarks/`` and
+    ``examples/``).  ``time.sleep`` stays legal: it advances no clocks.
+    """
+
+    rule = "no-raw-time"
+    _CALLS = frozenset({
+        "time", "monotonic", "perf_counter",
+        "time_ns", "monotonic_ns", "perf_counter_ns",
+    })
+
+    def applies_to(self, relpath: str) -> bool:
+        return not relpath.replace("\\", "/").endswith("repro/obs/clock.py")
+
+    def check(self, relpath, source, tree):
+        lines = source.splitlines()
+        findings = []
+        # `from time import monotonic` makes the raw read invisible to a
+        # call-site scan, so the import itself is the violation
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in self._CALLS:
+                        findings.append(Finding(
+                            rule=self.rule, path=relpath, line=node.lineno,
+                            message=(f"importing time.{alias.name} bypasses "
+                                     "repro.obs.clock — read time through "
+                                     "obs.now() / the engine clock"),
+                            snippet=_snippet(lines, node.lineno)))
+            if isinstance(node, ast.Call):
+                chain = _dotted(node.func)
+                if chain and len(chain) == 2 and chain[0] == "time" \
+                        and chain[1] in self._CALLS:
+                    findings.append(Finding(
+                        rule=self.rule, path=relpath, line=node.lineno,
+                        message=(f"raw time.{chain[1]}() read — serving "
+                                 "timestamps must flow through "
+                                 "repro.obs.clock (now()/to_wall()) so the "
+                                 "flight recorder can capture and replay "
+                                 "them"),
+                        snippet=_snippet(lines, node.lineno)))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# no-builtin-hash-persistence
+# ---------------------------------------------------------------------------
+
+@register
+class NoBuiltinHashPersistence(AstPass):
+    """Builtin ``hash()`` feeding seeds, artifact keys, or serialized state.
+
+    Builtin str/bytes hashing is salted per process (PYTHONHASHSEED), so
+    any value derived from ``hash()`` that outlives the process — RNG
+    fold-in tags, artifact/cache keys, anything written to disk — breaks
+    cross-process reproducibility.  This is the exact PR 9 bug class:
+    ``models/params.py`` seeded per-leaf init keys via ``hash(path)``,
+    making "seed 0" params differ across processes until the crc32 fix
+    (see the comment at ``models/params.py:init_params`` and the flight
+    replay gates in ``tests/test_flight.py``).  Intra-process uses are
+    flagged too — suppress with a justification if the value provably
+    never escapes the process (``__hash__`` delegation is exempt).
+    """
+
+    rule = "no-builtin-hash-persistence"
+
+    def check(self, relpath, source, tree):
+        lines = source.splitlines()
+        findings = []
+        for node in _walk_with_parents(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "hash"):
+                continue
+            # delegating from __hash__ is in-process by construction
+            in_hash_method = any(
+                isinstance(p, ast.FunctionDef) and p.name == "__hash__"
+                for p in _parents(node))
+            if in_hash_method:
+                continue
+            findings.append(Finding(
+                rule=self.rule, path=relpath, line=node.lineno,
+                message=("builtin hash() is salted per process "
+                         "(PYTHONHASHSEED) — deriving seeds, artifact keys "
+                         "or persisted values from it breaks cross-process "
+                         "determinism (the PR 9 params-init bug); use "
+                         "zlib.crc32 / hashlib on stable bytes instead"),
+                snippet=_snippet(lines, node.lineno)))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# no-thread-local-serving
+# ---------------------------------------------------------------------------
+
+@register
+class NoThreadLocalServing(AstPass):
+    """Thread-local / ContextVar serving state must not reappear.
+
+    PR 2–3 retired the thread-local ``sparsity_mode`` / ``capture_inputs``
+    / ``token_weights`` contexts in favour of the explicit, hashable
+    ``SparsityPolicy`` threaded through every forward — ambient state
+    made executables depend on invisible inputs (retraces, capture
+    leaks between engines; see ``tests/test_policy.py``'s shim-removal
+    and policy-isolation tests).  Any ``threading.local()`` or
+    ``contextvars.ContextVar`` in ``serving/`` or ``models/`` is a
+    regression of that migration.
+    """
+
+    rule = "no-thread-local-serving"
+
+    def applies_to(self, relpath: str) -> bool:
+        p = "/" + relpath.replace("\\", "/")
+        return "/serving/" in p or "/models/" in p
+
+    def check(self, relpath, source, tree):
+        lines = source.splitlines()
+        findings = []
+        bad_chains = {
+            ("threading", "local"): "threading.local()",
+            ("contextvars", "ContextVar"): "contextvars.ContextVar",
+        }
+        for node in ast.walk(tree):
+            chain = None
+            if isinstance(node, ast.Call):
+                chain = _dotted(node.func)
+            elif isinstance(node, ast.ClassDef):
+                for base in node.bases:
+                    bchain = _dotted(base)
+                    if bchain and bchain in bad_chains:
+                        chain = bchain
+                        break
+            if isinstance(node, ast.ImportFrom):
+                if node.module == "threading" and any(
+                        a.name == "local" for a in node.names):
+                    chain = ("threading", "local")
+                if node.module == "contextvars" and any(
+                        a.name == "ContextVar" for a in node.names):
+                    chain = ("contextvars", "ContextVar")
+            if chain and chain in bad_chains:
+                findings.append(Finding(
+                    rule=self.rule, path=relpath, line=node.lineno,
+                    message=(f"{bad_chains[chain]} in the serving/model "
+                             "path — ambient per-thread state was retired "
+                             "in PR 2-3 for the explicit SparsityPolicy; "
+                             "thread state makes executables depend on "
+                             "invisible inputs and breaks engine "
+                             "isolation"),
+                    snippet=_snippet(lines, node.lineno)))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# hot-path-zero-cost
+# ---------------------------------------------------------------------------
+
+_SINKS = frozenset({"events", "tracer", "quality", "flight", "metrics",
+                    "spans"})
+_GUARD_EXEMPT_CALLERS = frozenset({"isinstance", "type"})
+
+
+@register
+class HotPathZeroCost(AstPass):
+    """Telemetry touch points in the engine hot path must be identity-guarded.
+
+    The zero-cost-when-off contract (PR 6, ``tests/test_obs.py``'s
+    null-path identity tests): with telemetry disarmed the engine holds
+    ``NULL_TELEMETRY`` whose sink fields are ``None``, and every emit
+    site in ``serving/engine.py`` / ``serving/scheduler.py`` must reach
+    a sink only under an ``is not None`` (or ``is NULL_*``) identity
+    check — never through a truthiness test or an unconditional
+    attribute chain, both of which either allocate or crash when
+    telemetry is off.  The pass tracks ``self.obs.<sink>`` chains and
+    local aliases (``ev = self.obs.events``) and requires a dominating
+    identity guard for every dereference.
+    """
+
+    rule = "hot-path-zero-cost"
+
+    def applies_to(self, relpath: str) -> bool:
+        p = relpath.replace("\\", "/")
+        return p.endswith(("repro/serving/engine.py",
+                           "repro/serving/scheduler.py"))
+
+    # -- sink expression recognition ------------------------------------
+    def _sink_key(self, node: ast.AST,
+                  aliases: Dict[str, str]) -> Optional[str]:
+        """'events' etc. if ``node`` evaluates to a telemetry sink."""
+        if isinstance(node, ast.Name):
+            return aliases.get(node.id)
+        chain = _dotted(node)
+        # self.obs.events / eng.obs.tracer / telemetry.flight ...
+        if chain and len(chain) >= 2 and chain[-1] in _SINKS \
+                and ("obs" in chain[:-1]
+                     or chain[0] in ("telemetry", "tele")):
+            return chain[-1]
+        return None
+
+    def _guard_exprs(self, test: ast.AST,
+                     aliases: Dict[str, str],
+                     positive: bool) -> Set[str]:
+        """Sink keys proven non-None by ``test`` being true (positive)
+        or false (negative): ``X is not None``, ``X is None`` inverted,
+        ``not (...)``, and ``and`` chains (positive) / ``or`` chains
+        (negative)."""
+        out: Set[str] = set()
+        if isinstance(test, ast.BoolOp):
+            wanted = ast.And if positive else ast.Or
+            if isinstance(test.op, wanted):
+                for v in test.values:
+                    out |= self._guard_exprs(v, aliases, positive)
+            return out
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return self._guard_exprs(test.operand, aliases, not positive)
+        if isinstance(test, ast.Compare) and len(test.ops) == 1:
+            lhs, op, rhs = test.left, test.ops[0], test.comparators[0]
+            is_none = isinstance(rhs, ast.Constant) and rhs.value is None
+            key = self._sink_key(lhs, aliases)
+            if key and is_none:
+                if isinstance(op, ast.IsNot) and positive:
+                    out.add(key)
+                if isinstance(op, ast.Is) and not positive:
+                    out.add(key)
+        return out
+
+    def check(self, relpath, source, tree):
+        lines = source.splitlines()
+        findings: List[Finding] = []
+        funcs = [n for n in ast.walk(tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for fn in funcs:
+            findings.extend(self._check_fn(fn, relpath, lines))
+        return findings
+
+    def _check_fn(self, fn, relpath, lines) -> List[Finding]:
+        aliases: Dict[str, str] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                key = self._sink_key(node.value, {})
+                if key:
+                    aliases[node.targets[0].id] = key
+
+        findings: List[Finding] = []
+        for node in _walk_with_parents(fn):
+            if not isinstance(node, ast.Attribute):
+                continue
+            key = self._sink_key(node.value, aliases)
+            if key is None:
+                continue
+            if self._is_exempt(node, aliases):
+                continue
+            if not self._is_guarded(node, key, aliases, fn):
+                findings.append(Finding(
+                    rule=self.rule, path=relpath, line=node.lineno,
+                    message=(f"telemetry sink .{key} dereferenced without "
+                             "a dominating `is not None` identity guard — "
+                             "the zero-cost-when-off contract (PR 6) "
+                             "requires every hot-path emit site to check "
+                             "the sink identity before touching it"),
+                    snippet=_snippet(lines, node.lineno)))
+        return findings
+
+    def _is_exempt(self, node: ast.Attribute,
+                   aliases: Dict[str, str]) -> bool:
+        """The guard test itself and bare alias assignments are legal."""
+        parent = getattr(node, "_repro_parent", None)
+        # operand of `is` / `is not` — that IS the guard
+        if isinstance(parent, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in parent.ops):
+            return True
+        return False
+
+    def _is_guarded(self, node: ast.AST, key: str,
+                    aliases: Dict[str, str], fn) -> bool:
+        # lexical ancestors: if/while/ifexp whose test proves the sink
+        child = node
+        for parent in _parents(node):
+            if isinstance(parent, (ast.If, ast.While)):
+                in_body = any(child is s or self._contains(s, node)
+                              for s in parent.body)
+                in_orelse = any(child is s or self._contains(s, node)
+                                for s in parent.orelse)
+                if in_body and key in self._guard_exprs(
+                        parent.test, aliases, True):
+                    return True
+                if in_orelse and key in self._guard_exprs(
+                        parent.test, aliases, False):
+                    return True
+            if isinstance(parent, ast.IfExp):
+                if self._contains(parent.body, node) and key in \
+                        self._guard_exprs(parent.test, aliases, True):
+                    return True
+                if self._contains(parent.orelse, node) and key in \
+                        self._guard_exprs(parent.test, aliases, False):
+                    return True
+            if isinstance(parent, ast.BoolOp):
+                # `x is not None and x.emit(...)` short-circuit guard
+                positive = isinstance(parent.op, ast.And)
+                proven: Set[str] = set()
+                for v in parent.values:
+                    if self._contains(v, node):
+                        if key in proven:
+                            return True
+                        break
+                    proven |= self._guard_exprs(v, aliases, positive)
+            child = parent
+        # early-return guard: a preceding `if x is None: return/raise`
+        # in any enclosing statement list dominates the rest of the list
+        return self._early_return_guarded(node, key, aliases, fn)
+
+    @staticmethod
+    def _contains(tree: ast.AST, node: ast.AST) -> bool:
+        return any(n is node for n in ast.walk(tree))
+
+    def _early_return_guarded(self, node, key, aliases, fn) -> bool:
+        _ABORTS = (ast.Return, ast.Raise, ast.Continue, ast.Break)
+        for parent in list(_parents(node)) + [fn]:
+            for field in ("body", "orelse", "finalbody"):
+                stmts = getattr(parent, field, None)
+                if not isinstance(stmts, list):
+                    continue
+                idx = next((i for i, s in enumerate(stmts)
+                            if self._contains(s, node)), None)
+                if idx is None:
+                    continue
+                for s in stmts[:idx]:
+                    if isinstance(s, ast.If) and s.body and \
+                            isinstance(s.body[-1], _ABORTS) and \
+                            key in self._guard_exprs(s.test, aliases, False):
+                        return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# traced-value-branch
+# ---------------------------------------------------------------------------
+
+_TRACED_ROOTS = (
+    ("jnp",), ("jax", "numpy"), ("jax", "lax"), ("jax", "nn"),
+    ("jax", "random"), ("lax",),
+)
+# attribute reads that yield static (Python-level) values on tracers
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding",
+                           "aval", "weak_type"})
+# jnp/jax calls whose results are static Python objects, not tracers
+_STATIC_CALLS = frozenset({"dtype", "issubdtype", "result_type", "iinfo",
+                           "finfo", "shape", "ndim", "size"})
+
+
+@register
+class TracedValueBranch(AstPass):
+    """Python ``if``/``while`` on values produced by jax/jnp computation.
+
+    Inside ``models/`` and ``kernels/`` every array is (or will be)
+    traced: branching on one either raises ``TracerBoolConversionError``
+    under jit or — the silent version — concretizes during tracing so
+    the branch is baked into the executable for the traced value,
+    retracing per distinct value at runtime.  That is the classic
+    silent-retrace source the compile-once serving contract (PR 1's
+    ``decode_retraces_after_warmup == 0`` gate, ``tests/test_serving.py``)
+    forbids.  Branch on static config/shapes instead, or use
+    ``jnp.where`` / ``lax.cond``.  Shape/dtype attribute reads
+    (``x.shape[0] > 1``) stay legal — they are static at trace time.
+    """
+
+    rule = "traced-value-branch"
+
+    def applies_to(self, relpath: str) -> bool:
+        p = "/" + relpath.replace("\\", "/")
+        return "/models/" in p or "/kernels/" in p
+
+    def check(self, relpath, source, tree):
+        lines = source.splitlines()
+        findings: List[Finding] = []
+        funcs = [n for n in ast.walk(tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        for fn in funcs:
+            findings.extend(self._check_fn(fn, relpath, lines))
+        return findings
+
+    def _is_traced_call(self, node: ast.Call, jitted: Set[str]) -> bool:
+        chain = _dotted(node.func)
+        if chain is None:
+            # directly-invoked jit: jax.jit(f)(x)
+            if isinstance(node.func, ast.Call):
+                inner = _dotted(node.func.func)
+                return inner in (("jax", "jit"), ("jit",))
+            return False
+        if chain[0] in jitted and len(chain) == 1:
+            return True
+        for root in _TRACED_ROOTS:
+            if chain[:len(root)] == root and len(chain) > len(root):
+                return chain[-1] not in _STATIC_CALLS
+        return False
+
+    def _expr_traced(self, node: ast.AST, traced: Set[str],
+                     jitted: Set[str]) -> bool:
+        """Does evaluating ``node`` yield a traced value?  Conservative
+        dataflow: jax/jnp calls and any expression referencing a traced
+        name outside a static-attr read."""
+        if isinstance(node, ast.Call):
+            if self._is_traced_call(node, jitted):
+                return True
+            # len(x), int(x)... on traced operands concretize — but len()
+            # of a traced array is its static leading dim: legal
+            if isinstance(node.func, ast.Name) and node.func.id == "len":
+                return False
+            return any(self._expr_traced(a, traced, jitted)
+                       for a in node.args)
+        if isinstance(node, ast.Name):
+            return node.id in traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self._expr_traced(node.value, traced, jitted)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False        # identity checks never concretize
+            return any(self._expr_traced(n, traced, jitted)
+                       for n in [node.left] + node.comparators)
+        if isinstance(node, (ast.BinOp, ast.UnaryOp, ast.BoolOp,
+                             ast.Subscript, ast.IfExp, ast.Tuple,
+                             ast.List)):
+            return any(self._expr_traced(c, traced, jitted)
+                       for c in ast.iter_child_nodes(node)
+                       if isinstance(c, ast.expr))
+        return False
+
+    def _check_fn(self, fn, relpath, lines) -> List[Finding]:
+        traced: Set[str] = set()
+        jitted: Set[str] = set()
+        # first sweep: which local names hold jitted callables / traced
+        # values (order-insensitive fixpoint over assignments)
+        assigns = [n for n in ast.walk(fn) if isinstance(n, ast.Assign)]
+        for _ in range(3):          # tiny fixpoint; chains are short
+            for node in assigns:
+                val = node.value
+                names = []
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.append(t.id)
+                    elif isinstance(t, (ast.Tuple, ast.List)):
+                        names.extend(e.id for e in t.elts
+                                     if isinstance(e, ast.Name))
+                if not names:
+                    continue
+                chain = _dotted(val.func) if isinstance(val, ast.Call) \
+                    else None
+                if chain and chain[-1] == "jit" and chain[0] == "jax":
+                    jitted.update(names)
+                elif self._expr_traced(val, traced, jitted):
+                    traced.update(names)
+
+        findings = []
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            if self._expr_traced(node.test, traced, jitted):
+                findings.append(Finding(
+                    rule=self.rule, path=relpath, line=node.lineno,
+                    message=("Python control flow on a traced value — "
+                             "under jit this concretizes at trace time "
+                             "and bakes the branch into the executable "
+                             "(silent retrace per value; the compile-once "
+                             "contract PR 1 established).  Use jnp.where/"
+                             "lax.cond, or branch on static shape/config"),
+                    snippet=_snippet(lines, node.lineno)))
+        return findings

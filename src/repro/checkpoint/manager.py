@@ -16,13 +16,13 @@ import json
 import os
 import shutil
 import threading
-import time
 from typing import Optional
 
 import jax
 import numpy as np
 
 from repro.distributed.sharding import current_ctx, named_sharding
+from repro.obs.clock import now, to_wall
 
 
 def _flatten(tree):
@@ -45,7 +45,7 @@ class CheckpointManager:
         """Snapshot to host memory synchronously; write async if enabled."""
         flat, _ = _flatten(tree)
         host = {k: np.asarray(v) for k, v in flat.items()}
-        meta = {"step": step, "time": time.time(), **(metadata or {})}
+        meta = {"step": step, "time": to_wall(now()), **(metadata or {})}
         if self.async_save:
             self.wait()
             self._thread = threading.Thread(

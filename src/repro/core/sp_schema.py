@@ -57,7 +57,7 @@ def default_sp_stacked(params, cfg: ModelConfig, keep_frac: float = 1.0,
     """Concrete stacked sp tree from model weights: g = column norms,
     uniform alpha/keep (tau unused by the top-k serving backends)."""
     groups = []
-    for gi, (pattern, reps) in enumerate(cfg.layer_groups()):
+    for gi, (pattern, _reps) in enumerate(cfg.layer_groups()):
         gp = params["groups"][gi]
 
         def rec(d):

@@ -53,7 +53,7 @@ def restack_sp(cfg: ModelConfig, per_depth_sp: List[Optional[dict]]):
     out, d = [], 0
     for pattern, reps in cfg.layer_groups():
         slots = [[] for _ in pattern]
-        for r in range(reps):
+        for _r in range(reps):
             for j in range(len(pattern)):
                 slots[j].append(per_depth_sp[d])
                 d += 1

@@ -18,12 +18,12 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.obs.clock import now
 
 
 class Preemption(Exception):
@@ -73,12 +73,12 @@ class TrainingRunner:
         durations = []
         while step < self.cfg.total_steps:
             try:
-                t0 = time.time()
+                t0 = now()
                 if self.injector:
                     self.injector.check(step)
                 batch = batch_fn(step)
                 state, metrics = step_fn(state, batch)
-                dt = time.time() - t0
+                dt = now() - t0
                 durations.append(dt)
                 med = float(np.median(durations[-20:]))
                 if len(durations) > 5 and dt > self.cfg.straggler_factor * med:

@@ -19,6 +19,17 @@ import jax.numpy as jnp
 from repro.kernels import sparse_matmul as K
 
 
+def channel_plan(n: int, block: int = 128):
+    """Channel-block geometry of :func:`wisparse_project`: resolved block
+    width, zero-padded channel count and block count — the PR 5 contract
+    (full-width blocks via padding, never 1-wide fallback blocks).  The
+    projection consumes this plan and ``repro.analysis``'s pallas pass
+    checks it, so the two cannot drift."""
+    blk = min(block, n)
+    n_padded = n + (-n % blk)
+    return blk, n_padded, n_padded // blk
+
+
 def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = 1.0,
                      interpret=None, per_seq: bool = False,
                      token_weights=None):
@@ -36,9 +47,9 @@ def wisparse_project(x, w, sp, *, block: int = 128, k_frac: float = 1.0,
     w2 = w.reshape(n, -1)
     lead = x.shape[:-1]
     xf = x.reshape(-1, n)
-    blk = min(block, n)
+    blk, n_padded, _ = channel_plan(n, block)
     g = sp["g"]
-    pad = -n % blk
+    pad = n_padded - n
     if pad:
         # keep full-width channel blocks on non-divisible dims by
         # zero-padding the channel axis (the old `while n % blk: blk -= 1`

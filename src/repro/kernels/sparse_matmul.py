@@ -18,8 +18,9 @@ Two variants:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +31,129 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLK = 128      # channel-block (lane) size
 DEFAULT_MT = 256       # output tile
 DEFAULT_BT = 8         # batch tile
+
+# Per-core VMEM (TPU on-chip vector memory, ~16 MB/core).  Every
+# kernel's working set — all live operand/output blocks, double-buffered
+# for the DMA pipeline — must fit under this or the launch fails at
+# compile time on real hardware (the interpreter hides it on CPU).
+VMEM_BYTES = 16 * 1024 * 1024
+DOUBLE_BUFFER = 2      # pallas pipelines block DMA against compute
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """One operand/output of a kernel launch: its BlockSpec geometry in
+    checkable form.  ``index_map`` is the exact callable handed to
+    ``pl.BlockSpec`` (block-unit coordinates); ``padded`` is the array
+    shape the kernel actually launches over (after any zero-padding)."""
+    name: str
+    block: Tuple[int, ...]
+    padded: Tuple[int, ...]
+    index_map: Callable
+    bytes_per_elem: int = 4
+
+    @property
+    def block_bytes(self) -> int:
+        n = 1
+        for d in self.block:
+            n *= d
+        return n * self.bytes_per_elem
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """The launch geometry of one Pallas kernel, built by the same plan
+    function the kernel itself consumes — so ``repro.analysis``'s
+    pallas passes check exactly what launches, and the two cannot
+    drift.  ``tiles`` holds the resolved tile sizes (post ``_fit_tile``)
+    keyed by dim name for the divisibility contract checks."""
+    kernel: str
+    grid: Tuple[int, ...]
+    inputs: Tuple[BlockPlan, ...]
+    outputs: Tuple[BlockPlan, ...]
+    tiles: Tuple[Tuple[str, int, int], ...]   # (dim, tile, padded_size)
+
+    @property
+    def blocks(self) -> Tuple[BlockPlan, ...]:
+        return self.inputs + self.outputs
+
+    def vmem_bytes(self) -> int:
+        """Working-set estimate: every block double-buffered."""
+        return DOUBLE_BUFFER * sum(b.block_bytes for b in self.blocks)
+
+
+def shared_plan(B: int, n: int, m: int, kb: int, *,
+                blk: int = DEFAULT_BLK, mt: int = DEFAULT_MT,
+                bt: int = DEFAULT_BT, x_bytes: int = 4,
+                w_bytes: int = 4) -> KernelPlan:
+    """Launch plan for :func:`sparse_matmul_shared` (also its single
+    source of geometry truth — the kernel reads tiles/grid from here)."""
+    blk = min(blk, n)
+    assert n % blk == 0, (n, blk)
+    mt = _fit_tile(m, mt)
+    bt = _fit_tile(B, bt)
+    Bp = B + (-B % bt)
+    mp = m + (-m % mt)
+    grid = (Bp // bt, mp // mt, kb)
+    return KernelPlan(
+        kernel="sparse_matmul_shared", grid=grid,
+        inputs=(
+            BlockPlan("x", (bt, blk), (Bp, n),
+                      lambda b, j, i, idx: (b, idx[i]), x_bytes),
+            BlockPlan("w", (blk, mt), (n, mp),
+                      lambda b, j, i, idx: (idx[i], j), w_bytes),
+        ),
+        outputs=(
+            BlockPlan("y", (bt, mt), (Bp, mp),
+                      lambda b, j, i, idx: (b, j), 4),
+        ),
+        tiles=(("B", bt, Bp), ("m", mt, mp), ("n", blk, n)))
+
+
+def per_seq_plan(B: int, n: int, m: int, kb: int, *,
+                 blk: int = DEFAULT_BLK, mt: int = DEFAULT_MT,
+                 x_bytes: int = 4, w_bytes: int = 4) -> KernelPlan:
+    """Launch plan for :func:`sparse_matmul_per_seq`."""
+    blk = min(blk, n)
+    assert n % blk == 0
+    mt = _fit_tile(m, mt)
+    mp = m + (-m % mt)
+    grid = (B, mp // mt, kb)
+    return KernelPlan(
+        kernel="sparse_matmul_per_seq", grid=grid,
+        inputs=(
+            BlockPlan("x", (1, blk), (B, n),
+                      lambda b, j, i, idx: (b, idx[b, i]), x_bytes),
+            BlockPlan("w", (blk, mt), (n, mp),
+                      lambda b, j, i, idx: (idx[b, i], j), w_bytes),
+        ),
+        outputs=(
+            BlockPlan("y", (1, mt), (B, mp),
+                      lambda b, j, i, idx: (b, j), 4),
+        ),
+        tiles=(("m", mt, mp), ("n", blk, n)))
+
+
+def score_mask_plan(B: int, n: int, *, blk: int = DEFAULT_BLK,
+                    x_bytes: int = 4) -> KernelPlan:
+    """Launch plan for :func:`score_mask`."""
+    blk = min(blk, n)
+    assert n % blk == 0
+    nb = n // blk
+    return KernelPlan(
+        kernel="score_mask", grid=(nb,),
+        inputs=(
+            BlockPlan("x", (B, blk), (B, n),
+                      lambda j, ab: (0, j), x_bytes),
+            BlockPlan("g", (blk,), (n,), lambda j, ab: (j,), 4),
+            BlockPlan("rw", (B, 1), (B, 1), lambda j, ab: (0, 0), 4),
+        ),
+        outputs=(
+            BlockPlan("xm", (B, blk), (B, n),
+                      lambda j, ab: (0, j), x_bytes),
+            BlockPlan("bs", (1, 1), (nb, 1), lambda j, ab: (j, 0), 4),
+        ),
+        tiles=(("n", blk, n),))
 
 
 @functools.lru_cache(maxsize=1)
@@ -103,26 +227,26 @@ def sparse_matmul_shared(x, w, block_idx, *, blk: int = DEFAULT_BLK,
     B, n = x.shape
     m = w.shape[1]
     kb = block_idx.shape[0]
-    blk = min(blk, n)
-    assert n % blk == 0, (n, blk)
-    mt = _fit_tile(m, mt)
-    bt = _fit_tile(B, bt)
-    x, Bp = _pad_dim(x, 0, bt)
-    w, mp = _pad_dim(w, 1, mt)
+    plan = shared_plan(B, n, m, kb, blk=min(blk, n), mt=mt, bt=bt,
+                       x_bytes=x.dtype.itemsize, w_bytes=w.dtype.itemsize)
+    (_, bt, Bp), (_, mt, mp), (_, blk, _) = plan.tiles
+    x, _ = _pad_dim(x, 0, bt)
+    w, _ = _pad_dim(w, 1, mt)
 
-    grid = (Bp // bt, mp // mt, kb)
+    xs, ws = plan.inputs
+    (ys,) = plan.outputs
     y = pl.pallas_call(
         _acc_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=grid,
+            grid=plan.grid,
             in_specs=[
-                pl.BlockSpec((bt, blk), lambda b, j, i, idx: (b, idx[i])),
-                pl.BlockSpec((blk, mt), lambda b, j, i, idx: (idx[i], j)),
+                pl.BlockSpec(xs.block, xs.index_map),
+                pl.BlockSpec(ws.block, ws.index_map),
             ],
-            out_specs=pl.BlockSpec((bt, mt), lambda b, j, i, idx: (b, j)),
+            out_specs=pl.BlockSpec(ys.block, ys.index_map),
         ),
-        out_shape=jax.ShapeDtypeStruct((Bp, mp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(ys.padded, jnp.float32),
         interpret=interpret,
     )(block_idx, x, w)
     return y[:B, :m] if (Bp, mp) != (B, m) else y
@@ -152,24 +276,25 @@ def sparse_matmul_per_seq(x, w, block_idx, *, blk: int = DEFAULT_BLK,
     B, n = x.shape
     m = w.shape[1]
     kb = block_idx.shape[1]
-    blk = min(blk, n)
-    assert n % blk == 0
-    mt = _fit_tile(m, mt)
-    w, mp = _pad_dim(w, 1, mt)
+    plan = per_seq_plan(B, n, m, kb, blk=min(blk, n), mt=mt,
+                        x_bytes=x.dtype.itemsize, w_bytes=w.dtype.itemsize)
+    (_, mt, mp), (_, blk, _) = plan.tiles
+    w, _ = _pad_dim(w, 1, mt)
 
-    grid = (B, mp // mt, kb)
+    xs, ws = plan.inputs
+    (ys,) = plan.outputs
     y = pl.pallas_call(
         _acc_kernel_perseq,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=grid,
+            grid=plan.grid,
             in_specs=[
-                pl.BlockSpec((1, blk), lambda b, j, i, idx: (b, idx[b, i])),
-                pl.BlockSpec((blk, mt), lambda b, j, i, idx: (idx[b, i], j)),
+                pl.BlockSpec(xs.block, xs.index_map),
+                pl.BlockSpec(ws.block, ws.index_map),
             ],
-            out_specs=pl.BlockSpec((1, mt), lambda b, j, i, idx: (b, j)),
+            out_specs=pl.BlockSpec(ys.block, ys.index_map),
         ),
-        out_shape=jax.ShapeDtypeStruct((B, mp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(ys.padded, jnp.float32),
         interpret=interpret,
     )(block_idx, x, w)
     return y[:, :m] if mp != m else y
@@ -198,8 +323,9 @@ def score_mask(x, g, alpha, tau, *, blk: int = DEFAULT_BLK,
     contribution (the serving engine's active-slot / real-token mask)."""
     interpret = _resolve_interpret(interpret)
     B, n = x.shape
-    blk = min(blk, n)
-    assert n % blk == 0
+    plan = score_mask_plan(B, n, blk=min(blk, n),
+                           x_bytes=x.dtype.itemsize)
+    ((_, blk, _),) = plan.tiles
     nb = n // blk
     ab = jnp.stack([jnp.asarray(alpha, jnp.float32),
                     jnp.asarray(tau, jnp.float32)])
@@ -207,23 +333,25 @@ def score_mask(x, g, alpha, tau, *, blk: int = DEFAULT_BLK,
         rw = jnp.ones((B, 1), jnp.float32)
     else:
         rw = row_weights.reshape(B, 1).astype(jnp.float32)
+    xs, gs, rs = plan.inputs
+    xo, bo = plan.outputs
     xm, bs = pl.pallas_call(
         _score_mask_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(nb,),
+            grid=plan.grid,
             in_specs=[
-                pl.BlockSpec((B, blk), lambda j, ab: (0, j)),
-                pl.BlockSpec((blk,), lambda j, ab: (j,)),
-                pl.BlockSpec((B, 1), lambda j, ab: (0, 0)),
+                pl.BlockSpec(xs.block, xs.index_map),
+                pl.BlockSpec(gs.block, gs.index_map),
+                pl.BlockSpec(rs.block, rs.index_map),
             ],
             out_specs=[
-                pl.BlockSpec((B, blk), lambda j, ab: (0, j)),
-                pl.BlockSpec((1, 1), lambda j, ab: (j, 0)),
+                pl.BlockSpec(xo.block, xo.index_map),
+                pl.BlockSpec(bo.block, bo.index_map),
             ],
         ),
-        out_shape=[jax.ShapeDtypeStruct((B, n), x.dtype),
-                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct(xo.padded, x.dtype),
+                   jax.ShapeDtypeStruct(bo.padded, jnp.float32)],
         interpret=interpret,
     )(ab, x, g, rw)
     return xm, bs[:, 0]

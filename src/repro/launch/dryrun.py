@@ -13,7 +13,6 @@ optimized-HLO collective bytes).
 import argparse
 import functools
 import json
-import time
 import traceback
 
 import jax
@@ -21,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SHAPES, get_config, runnable_cells
+from repro.obs.clock import now
 from repro.core import sp_schema
 from repro.sparsity import SparsityPolicy
 from repro.distributed.sharding import (LOGICAL_RULES_SERVE,
@@ -43,7 +43,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 save_hlo: str = None, aligned: bool = True,
                 donate_cache: bool = True):
     """Lower+compile one cell.  Returns a result record (dict)."""
-    t0 = time.time()
+    t0 = now()
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -114,7 +114,7 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "remat": remat if shape.mode == "train" else None,
         "overrides": {k: list(map(list, v)) for k, v in (overrides or {}).items()},
         "status": "ok",
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(now() - t0, 1),
         "memory": {
             "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
             "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),

@@ -514,10 +514,10 @@ def main():
 
     if args.gateway:
         from repro.serving.gateway import Gateway
-        if telemetry is not None and telemetry.profiler is not None:
-            if not telemetry.profiler.start():
-                print("profiler capture unavailable:",
-                      telemetry.profiler.error)
+        if (telemetry is not None and telemetry.profiler is not None
+                and not telemetry.profiler.start()):
+            print("profiler capture unavailable:",
+                  telemetry.profiler.error)
         gw = Gateway(engine, host=args.gateway_host,
                      port=args.gateway_port)
         print(f"gateway starting on http://{args.gateway_host}:"
@@ -535,10 +535,10 @@ def main():
                                    port=args.metrics_port)
         print(f"serving metrics at "
               f"http://127.0.0.1:{server.server_port}/metrics")
-    if telemetry is not None and telemetry.profiler is not None:
-        if not telemetry.profiler.start():
-            print("profiler capture unavailable:",
-                  telemetry.profiler.error)
+    if (telemetry is not None and telemetry.profiler is not None
+            and not telemetry.profiler.start()):
+        print("profiler capture unavailable:",
+              telemetry.profiler.error)
     t0 = obs.now()
     for b in range(args.batch):
         engine.submit(np.asarray(prompts[b]), args.gen)

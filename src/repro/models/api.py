@@ -44,7 +44,7 @@ def cache_schema(cfg: ModelConfig, batch: int, cache_len: int):
     groups = []
     for pattern, reps in cfg.layer_groups():
         entries = []
-        for (mixer, ffn) in pattern:
+        for (mixer, _ffn) in pattern:
             e = {}
             if mixer in ("attn", "global", "attn_bidir"):
                 e["self"] = kv_pair(reps, cache_len)

@@ -401,8 +401,9 @@ def run_groups(groups, x, cfg: ModelConfig, patterns, *, mode="train",
             if (r0, r1) == (0, reps):
                 xs = (gp, gc, gsp)
             else:
-                xs = tuple(jax.tree_util.tree_map(lambda a: a[r0:r1], t)
-                           for t in (gp, gc, gsp))
+                xs = tuple(jax.tree_util.tree_map(
+                    lambda a, lo=r0, hi=r1: a[lo:hi], t)
+                    for t in (gp, gc, gsp))
 
             def body(xc, xs_in, pattern=pattern, jpols=jpols):
                 p_i, c_i, sp_i = xs_in

@@ -64,7 +64,7 @@ def _init_leaf(spec: ParamSpec, key, default_dtype: str):
 def init_params(schema, key, default_dtype: str = "float32"):
     leaves, treedef = _flatten(schema)
     out = []
-    for i, (path, spec) in enumerate(leaves):
+    for _i, (path, spec) in enumerate(leaves):
         # crc32, NOT hash(): builtin str hashing is salted per process
         # (PYTHONHASHSEED), which would make "seed 0" params differ
         # across processes and break cross-process record/replay

@@ -65,7 +65,8 @@ class EventLog:
         self._sink_path: Optional[str] = None
         self._sink_bytes = 0
         if isinstance(sink, str):
-            self._fh = open(sink, "a")
+            # held for the log's lifetime, closed in close()/rotation
+            self._fh = open(sink, "a")  # noqa: SIM115
             self._owns_fh = True
             self._sink_path = sink
             self._sink_bytes = self._fh.tell()
@@ -94,7 +95,7 @@ class EventLog:
         only the on-disk history."""
         self._fh.close()
         os.replace(self._sink_path, self._sink_path + ".1")
-        self._fh = open(self._sink_path, "w")
+        self._fh = open(self._sink_path, "w")  # noqa: SIM115
         self._sink_bytes = 0
         self.sink_rotations += 1
 

@@ -169,7 +169,8 @@ class FlightRecorder:
         self._fh = None
         self._sink_path = sink
         if sink:
-            self._fh = open(sink, "w")
+            # held for the recorder's lifetime, closed in close()
+            self._fh = open(sink, "w")  # noqa: SIM115
 
     # ------------------------------------------------------------------
     # wiring

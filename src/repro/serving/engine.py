@@ -209,6 +209,54 @@ class EngineConfig:
                 "prefill cannot start at a matched prefix length")
 
 
+def make_engine_steps(cfg: ModelConfig, on_decode_trace=None,
+                      on_chunk_trace=None):
+    """The engine's three jitted step executables — slot decode, chunked
+    prefill, whole-prompt prefill — with the canonical static-arg and
+    donation configuration.  This is the ONE place that configuration
+    lives: the :class:`Engine` serves through these exact jits, and the
+    ``repro.analysis`` jaxpr passes lower the same ones, so a donation
+    or static-arg regression here is caught by the lint without the two
+    sites drifting apart.
+
+    ``on_decode_trace`` / ``on_chunk_trace`` run inside the traced
+    function body — i.e. only while XLA is (re)tracing — which is how
+    the engine counts retraces.
+
+    The pool caches are donated back into themselves each step (no copy
+    on TPU; XLA falls back to copying where donation is unsupported).
+    ``policy`` is static: it must stay a frozen, hashable
+    :class:`SparsityPolicy` or every step becomes a cache miss."""
+    slot_decode = api.make_slot_decode_step(cfg)
+    chunk_step = api.make_chunk_prefill_step(cfg)
+    prefill_step = api.make_prefill_step(cfg)
+
+    def _decode(params, tokens, positions, caches, sp, active, *,
+                policy):
+        if on_decode_trace is not None:
+            on_decode_trace()
+        return slot_decode(params, tokens, positions, caches, sp,
+                           active, policy=policy)
+
+    def _chunk(params, tokens, offset, slot, caches, sp, weights, *,
+               policy):
+        if on_chunk_trace is not None:
+            on_chunk_trace()
+        return chunk_step(params, tokens, offset, slot, caches, sp,
+                          weights, policy=policy)
+
+    def _prefill(params, tokens, sp, *, policy):
+        return prefill_step(params, {"tokens": tokens}, sp,
+                            policy=policy)
+
+    dstep = jax.jit(_decode, static_argnames=("policy",),
+                    donate_argnums=(3,))
+    cstep = jax.jit(_chunk, static_argnames=("policy",),
+                    donate_argnums=(4,))
+    pstep = jax.jit(_prefill, static_argnames=("policy",))
+    return dstep, cstep, pstep
+
+
 class Engine:
     def __init__(self, params, cfg: ModelConfig, ecfg: EngineConfig,
                  sp=None, *, ladder: Optional[PolicyLadder] = None,
@@ -388,35 +436,17 @@ class Engine:
                 self.pool, ecfg.prefill_chunk, ecfg.prefix_cache_tokens,
                 stats_fn=lambda: self.stats, obs_fn=lambda: self.obs)
 
-        slot_decode = api.make_slot_decode_step(cfg)
-        chunk_step = api.make_chunk_prefill_step(cfg)
-        prefill_step = api.make_prefill_step(cfg)
-
-        def _decode(params, tokens, positions, caches, sp, active, *,
-                    policy):
+        def _on_decode_trace():
             self._decode_traces += 1        # runs only while tracing
             self._record_compile("decode")
-            return slot_decode(params, tokens, positions, caches, sp,
-                               active, policy=policy)
 
-        def _chunk(params, tokens, offset, slot, caches, sp, weights, *,
-                   policy):
+        def _on_chunk_trace():
             self._chunk_traces += 1
             self._record_compile("prefill_chunk")
-            return chunk_step(params, tokens, offset, slot, caches, sp,
-                              weights, policy=policy)
 
-        def _prefill(params, tokens, sp, *, policy):
-            return prefill_step(params, {"tokens": tokens}, sp,
-                                policy=policy)
-
-        # pool caches are donated back into themselves each step (no copy
-        # on TPU; XLA falls back to copying where donation is unsupported)
-        self._dstep = jax.jit(_decode, static_argnames=("policy",),
-                              donate_argnums=(3,))
-        self._cstep = jax.jit(_chunk, static_argnames=("policy",),
-                              donate_argnums=(4,))
-        self._pstep = jax.jit(_prefill, static_argnames=("policy",))
+        self._dstep, self._cstep, self._pstep = make_engine_steps(
+            cfg, on_decode_trace=_on_decode_trace,
+            on_chunk_trace=_on_chunk_trace)
 
         self.spec_decoder: Optional[SpecDecoder] = None
         if ecfg.spec is not None:
@@ -1000,7 +1030,7 @@ class Engine:
             self._emit(rs, tok)
             self.pool.commit(slot, 1)
             self._maybe_finish(rs, tok)
-        if probe is not None:
+        if q is not None and probe is not None:
             q.observe(self, probe, logits, nxt, active, t1)
         if self.controller is not None:
             be_frac = None

@@ -102,6 +102,25 @@ class SpecConfig:
         return (self.gamma,)
 
 
+def make_verify_jit(cfg, on_trace=None):
+    """The jitted verify executable with the canonical static-arg and
+    donation configuration (policy static, pool caches donated) — the
+    single construction site shared by :class:`SpecDecoder` and the
+    ``repro.analysis`` jaxpr passes, so the lint lowers exactly what
+    serving runs.  ``on_trace`` runs only while XLA is (re)tracing."""
+    verify = api.make_verify_step(cfg)
+
+    def _verify(params, tokens, positions, caches, sp, weights, *,
+                policy):
+        if on_trace is not None:
+            on_trace()
+        return verify(params, tokens, positions, caches, sp, weights,
+                      policy=policy)
+
+    return jax.jit(_verify, static_argnames=("policy",),
+                   donate_argnums=(3,))
+
+
 class SpecDecoder:
     """Per-engine speculative decode driver (created by the engine when
     ``EngineConfig.spec`` is set; one per engine, like the scheduler).
@@ -120,16 +139,11 @@ class SpecDecoder:
         self._accept_ewma = None      # non-adaptive mode only; adaptive
         #                               mode's EWMA lives in the controller
         self._verify_traces = 0
-        verify = api.make_verify_step(engine.cfg)
 
-        def _verify(params, tokens, positions, caches, sp, weights, *,
-                    policy):
+        def _on_trace():
             self._verify_traces += 1        # runs only while tracing
-            return verify(params, tokens, positions, caches, sp, weights,
-                          policy=policy)
 
-        self._vstep = jax.jit(_verify, static_argnames=("policy",),
-                              donate_argnums=(3,))
+        self._vstep = make_verify_jit(engine.cfg, on_trace=_on_trace)
         self.controller = None
         if scfg.adaptive:
             self.controller = SpecController(

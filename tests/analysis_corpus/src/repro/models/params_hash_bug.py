@@ -1,0 +1,21 @@
+"""The PR 9 determinism bug, verbatim: per-leaf init keys derived with
+builtin ``hash()``.  ``str.__hash__`` is salted per process
+(PYTHONHASHSEED), so two processes initialising "the same" model from
+the same seed got different per-leaf keys — caught as a cross-process
+checkpoint divergence, fixed with ``zlib.crc32`` in
+``src/repro/models/params.py``.  ``no-builtin-hash-persistence`` exists
+so the class of bug can't come back."""
+import jax
+
+
+def _path_str(path) -> str:
+    return "/".join(str(p) for p in path)
+
+
+def init_params_buggy(schema, seed: int):
+    out = {}
+    for path, _leaf in schema.items():
+        # per-leaf fold-in tag: MUST be process-stable; hash() is not
+        tag = hash(_path_str(path)) & 0x7FFFFFFF  # EXPECT: no-builtin-hash-persistence
+        out[path] = jax.random.fold_in(jax.random.PRNGKey(seed), tag)
+    return out

@@ -1,0 +1,40 @@
+"""Python ``if``/``while`` on traced values inside model/kernel code.
+Under jit these either raise ``TracerBoolConversionError`` at first
+trace or — worse, with concrete aval leakage — silently bake one branch
+into the executable.  Data-dependent control flow must use
+``jnp.where`` / ``lax.cond`` / ``lax.while_loop``."""
+import jax
+import jax.numpy as jnp
+
+
+def clamp_bad(x):
+    if jnp.sum(x) > 0:  # EXPECT: traced-value-branch
+        return x
+    return -x
+
+
+def loop_bad(x):
+    while jnp.linalg.norm(x) > 1.0:  # EXPECT: traced-value-branch
+        x = x * 0.5
+    return x
+
+
+def shape_ok(x):
+    # static metadata branches are fine: shapes are Python ints
+    if x.shape[0] > 1:
+        return x.reshape(-1)
+    return x
+
+
+def none_ok(sp):
+    # identity tests against None are static too
+    if sp is None:
+        return jnp.zeros(())
+    return sp["g"]
+
+
+def jit_bound_bad(x):
+    y = jax.jit(lambda v: v * 2)(x)
+    if y[0] > 0:  # EXPECT: traced-value-branch
+        return y
+    return -y

@@ -1,0 +1,22 @@
+"""Raw clock reads in the serving tree.  Every serving timestamp must
+flow through ``repro.obs.clock`` so the flight recorder can capture the
+stream live and replay it bit-identically; a raw ``time.*`` read is a
+replay divergence waiting to happen (the PR 9 clock unification)."""
+import time
+
+
+def stamp_request(req: dict) -> dict:
+    req["arrival"] = time.time()  # EXPECT: no-raw-time
+    return req
+
+
+def measure(fn):
+    t0 = time.monotonic()  # EXPECT: no-raw-time
+    fn()
+    return time.monotonic() - t0  # EXPECT: no-raw-time
+
+
+def stamp_suppressed(req: dict) -> dict:
+    # a justified escape hatch: this site is outside any replayed path
+    req["wall"] = time.time()  # repro: ignore[no-raw-time]
+    return req

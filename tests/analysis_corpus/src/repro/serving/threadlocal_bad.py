@@ -1,0 +1,19 @@
+"""Thread-local execution state in the serving tree — the pre-PR 2
+shape of the sparsity mode switch.  A thread-local flag read inside a
+traced function is invisible to jit's cache key, so two threads serving
+different modes silently share one executable.  Serving state must ride
+in the :class:`SparsityPolicy` value (static jit arg) instead."""
+import contextvars
+import threading
+
+_MODE = threading.local()  # EXPECT: no-thread-local-serving
+
+_PHASE = contextvars.ContextVar("phase", default="decode")  # EXPECT: no-thread-local-serving
+
+
+def set_mode(mode: str) -> None:
+    _MODE.value = mode
+
+
+def current_mode() -> str:
+    return getattr(_MODE, "value", "dense")

@@ -276,13 +276,13 @@ def test_close_flushes_on_exception(model, tmp_path):
     params, cfg = model
     sink = str(tmp_path / "trace.json")
     tel = obs.Telemetry(tracer=obs.SpanTracer(), trace_sink=sink)
-    with pytest.raises(RuntimeError, match="boom"):
-        with Engine(params, cfg,
-                    EngineConfig(max_slots=2, max_len=32, prefill_chunk=8),
-                    None, telemetry=tel) as eng:
-            eng.submit(_prompts(cfg, 1, 8)[0], 3)
-            eng.run()
-            raise RuntimeError("boom")
+    with pytest.raises(RuntimeError, match="boom"), \
+            Engine(params, cfg,
+                   EngineConfig(max_slots=2, max_len=32, prefill_chunk=8),
+                   None, telemetry=tel) as eng:
+        eng.submit(_prompts(cfg, 1, 8)[0], 3)
+        eng.run()
+        raise RuntimeError("boom")
     with open(sink) as f:
         json.load(f)                          # exported despite the raise
 

@@ -314,9 +314,8 @@ def test_null_telemetry_is_allocation_free():
     # object per call — the hot path allocates nothing when disabled
     assert NULL_TELEMETRY.annotate("repro/decode") is NULL_CONTEXT
     assert NULL_TELEMETRY.annotate("x") is NULL_TELEMETRY.annotate("y")
-    with NULL_TELEMETRY.annotate("a"):
-        with NULL_TELEMETRY.annotate("b"):      # reentrant
-            pass
+    with NULL_TELEMETRY.annotate("a"), NULL_TELEMETRY.annotate("b"):
+        pass                                    # reentrant
     NULL_TELEMETRY.close()                      # harmless
 
 

@@ -330,7 +330,7 @@ def test_engine_hit_parity_under_spec_decode(model):
     warm = fresh(True)
     cold_out, warm_out = [], []
     for eng, out in ((fresh(False), cold_out), (warm, warm_out)):
-        for i, p in enumerate(prompts):
+        for _i, p in enumerate(prompts):
             eng.submit(p, 6)
         got = eng.run()
         out.extend(got[i] for i in range(3))
